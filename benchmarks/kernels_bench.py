@@ -1,0 +1,93 @@
+"""Kernel micro-benchmarks: Pallas (interpret) + jnp oracle + real
+workflow-throughput figures. On TPU the same harness times the compiled
+kernels; here the derived column reports tracks/second of the oracle
+path (the honest CPU number) plus the Pallas-vs-ref agreement."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time_call(fn, *args, iters=3, **kw):
+    fn(*args, **kw)                       # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def bench_track_interp() -> list[str]:
+    rng = np.random.default_rng(0)
+    B, N, C, M = 8, 512, 3, 1024
+    t_in = np.sort(rng.uniform(0, 900, (B, N)), axis=1).astype(np.float32)
+    v_in = rng.normal(size=(B, C, N)).astype(np.float32)
+    count = np.full((B,), N, np.int32)
+    t_out = np.sort(rng.uniform(0, 900, (B, M)), axis=1).astype(np.float32)
+    us_ref, out_ref = _time_call(ref.track_interp_ref, t_in, v_in,
+                                 count, t_out)
+    us_pal, out_pal = _time_call(ops.track_interp, t_in, v_in, count,
+                                 t_out)
+    err = float(np.abs(np.asarray(out_ref) - np.asarray(out_pal)).max())
+    return [
+        f"kernel_track_interp_ref_B{B}xN{N}xM{M},{us_ref:.0f},"
+        f"{B / (us_ref/1e6):.0f}tracks_per_s",
+        f"kernel_track_interp_pallas_interpret,{us_pal:.0f},maxerr={err:.1e}",
+    ]
+
+
+def bench_dynamic_rates() -> list[str]:
+    rng = np.random.default_rng(1)
+    B, M = 16, 1024
+    v = rng.normal(size=(B, 3, M)).astype(np.float32)
+    count = np.full((B,), M, np.int32)
+    us_ref, o1 = _time_call(ref.dynamic_rates_ref, v, count, 1.0)
+    us_pal, o2 = _time_call(ops.dynamic_rates, v, count, 1.0)
+    err = float(np.abs(np.asarray(o1) - np.asarray(o2)).max())
+    return [
+        f"kernel_dynamic_rates_ref_B{B}xM{M},{us_ref:.0f},"
+        f"{B*M/(us_ref/1e6)/1e6:.1f}Mpts_per_s",
+        f"kernel_dynamic_rates_pallas_interpret,{us_pal:.0f},maxerr={err:.1e}",
+    ]
+
+
+def bench_agl_lookup() -> list[str]:
+    rng = np.random.default_rng(2)
+    B, M, H, W = 8, 1024, 256, 512
+    dem = rng.uniform(0, 3000, (H, W)).astype(np.float32)
+    fi = rng.uniform(4, 100, (B, M)).astype(np.float32)
+    fj = rng.uniform(4, 200, (B, M)).astype(np.float32)
+    alt = rng.uniform(0, 4000, (B, M)).astype(np.float32)
+    us_ref, o1 = _time_call(ref.agl_lookup_ref, dem, fi, fj, alt)
+    us_pal, o2 = _time_call(ops.agl_lookup, dem, fi, fj, alt)
+    err = float(np.abs(np.asarray(o1) - np.asarray(o2)).max())
+    return [
+        f"kernel_agl_lookup_ref_B{B}xM{M},{us_ref:.0f},"
+        f"{B*M/(us_ref/1e6)/1e6:.1f}Mlookups_per_s",
+        f"kernel_agl_lookup_pallas_interpret,{us_pal:.0f},maxerr={err:.1e}",
+    ]
+
+
+def bench_flash_attention() -> list[str]:
+    rng = np.random.default_rng(3)
+    B, H, KV, T, hd = 1, 4, 2, 512, 64
+    q = rng.normal(size=(B, H, T, hd)).astype(np.float32)
+    k = rng.normal(size=(B, KV, T, hd)).astype(np.float32)
+    v = rng.normal(size=(B, KV, T, hd)).astype(np.float32)
+    us_ref, o1 = _time_call(ref.flash_attention_ref, q, k, v)
+    us_pal, o2 = _time_call(ops.flash_attention, q, k, v, iters=1)
+    err = float(np.abs(np.asarray(o1) - np.asarray(o2)).max())
+    return [
+        f"kernel_flash_attn_ref_B{B}H{H}T{T},{us_ref:.0f},"
+        f"{B*H*T*T*hd*4/(us_ref/1e6)/1e9:.1f}GFLOP_s",
+        f"kernel_flash_attn_pallas_interpret,{us_pal:.0f},maxerr={err:.1e}",
+    ]
+
+
+ALL = [bench_track_interp, bench_dynamic_rates, bench_agl_lookup,
+       bench_flash_attention]

@@ -1,0 +1,63 @@
+"""§Roofline: render the per-(arch x shape x mesh) table from the
+dry-run JSON records (run launch/dryrun.py first)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.roofline.analysis import compute_terms
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load_terms(dryrun_dir: str = DRYRUN_DIR):
+    out = []
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(p))
+        if rec.get("ok"):
+            out.append((compute_terms(rec), rec))
+    return out
+
+
+OPT_DIR = os.path.join(os.path.dirname(__file__), "..",
+                       "experiments", "dryrun_opt")
+
+
+def roofline_rows() -> list[str]:
+    """Baseline (paper-faithful) rows + optimized (§Perf) rows."""
+    rows = []
+    for tag, d in (("", DRYRUN_DIR), ("opt_", OPT_DIR)):
+        for t, rec in load_terms(d):
+            rows.append(
+                f"roofline_{tag}{t.arch}_{t.shape}_{t.mesh},"
+                f"{rec.get('compile_s', 0) * 1e6:.0f},"
+                f"bound={t.bottleneck}"
+                f"_comp={t.compute_s:.3f}s_mem={t.memory_s:.3f}s"
+                f"_coll={t.collective_s:.3f}s"
+                f"_useful={t.useful_ratio:.2f}"
+                f"_roofline={t.roofline_fraction * 100:.1f}pct")
+    return rows
+
+
+def markdown_table(dryrun_dir: str = DRYRUN_DIR) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s "
+        "| bottleneck | useful | roofline % |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for t, _rec in load_terms(dryrun_dir):
+        lines.append(
+            f"| {t.arch} | {t.shape} | {t.mesh} | {t.compute_s:.4f} "
+            f"| {t.memory_s:.4f} | {t.collective_s:.4f} "
+            f"| {t.bottleneck} | {t.useful_ratio:.2f} "
+            f"| {t.roofline_fraction * 100:.1f} |")
+    return "\n".join(lines)
+
+
+ALL = [roofline_rows]
+
+if __name__ == "__main__":
+    print(markdown_table())

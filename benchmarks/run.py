@@ -1,0 +1,42 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * paper_tables: Tables I/II + Figs 4-9 + §IV.A/B/C + §V headline
+    numbers, reproduced by the calibrated full-scale simulator;
+  * kernels_bench: Pallas kernel micro-benchmarks vs jnp oracles;
+  * roofline_table: per-(arch x shape x mesh) roofline terms from the
+    multi-pod dry-run records (skipped if dryrun hasn't run).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (beyond_paper, kernels_bench, paper_tables,
+                            roofline_table)
+
+    print("name,us_per_call,derived")
+    groups = [("paper", paper_tables.ALL),
+              ("beyond", beyond_paper.ALL),
+              ("kernels", kernels_bench.ALL),
+              ("roofline", roofline_table.ALL)]
+    failures = 0
+    for _gname, fns in groups:
+        for fn in fns:
+            try:
+                for row in fn():
+                    print(row, flush=True)
+            except Exception as e:     # keep the harness going
+                failures += 1
+                print(f"{fn.__name__},0,ERROR_{type(e).__name__}",
+                      flush=True)
+                traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

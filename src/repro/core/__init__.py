@@ -1,0 +1,37 @@
+"""Paper core: triples-mode launch + self-scheduling task distribution."""
+
+from repro.core.cost_model import (
+    ARCHIVE_PHASE, ORGANIZE_PHASE, PHASES, PROCESS_PHASE, RADAR_PHASE,
+    PhaseCostModel)
+from repro.core.distribution import (
+    DistributionPolicy, assignment_imbalance, block_distribution,
+    cyclic_distribution, distribute)
+from repro.core.messages import (
+    Message, MessageKind, ORGANIZERS, Task, get_organizer,
+    organize_by_filename, organize_chronological, organize_largest_first,
+    organize_random)
+from repro.core.selfsched import (
+    JobResult, Manager, ManagerCheckpoint, Worker, WorkerStats,
+    run_self_scheduled)
+from repro.core.simulator import (
+    SimResult, SimTaskRecord, merge_tasks_per_message, simulate_self_scheduling,
+    simulate_static)
+from repro.core.triples import (
+    DEFAULT_ALLOCATION_CORES, NodeType, TriplesConfig, TriplesError,
+    UPGRADED_ALLOCATION_CORES, feasible_table_cells, paper_configs)
+
+__all__ = [
+    "ARCHIVE_PHASE", "ORGANIZE_PHASE", "PHASES", "PROCESS_PHASE",
+    "RADAR_PHASE", "PhaseCostModel",
+    "DistributionPolicy", "assignment_imbalance", "block_distribution",
+    "cyclic_distribution", "distribute",
+    "Message", "MessageKind", "ORGANIZERS", "Task", "get_organizer",
+    "organize_by_filename", "organize_chronological",
+    "organize_largest_first", "organize_random",
+    "JobResult", "Manager", "ManagerCheckpoint", "Worker", "WorkerStats",
+    "run_self_scheduled",
+    "SimResult", "SimTaskRecord", "merge_tasks_per_message",
+    "simulate_self_scheduling", "simulate_static",
+    "DEFAULT_ALLOCATION_CORES", "NodeType", "TriplesConfig", "TriplesError",
+    "UPGRADED_ALLOCATION_CORES", "feasible_table_cells", "paper_configs",
+]

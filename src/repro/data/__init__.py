@@ -1,0 +1,7 @@
+"""Data pipeline: self-scheduled shard ingestion (the paper's technique
+applied to the training input layer)."""
+
+from repro.data.pipeline import (
+    ShardManifest, SelfScheduledLoader, synthetic_token_shards)
+
+__all__ = ["ShardManifest", "SelfScheduledLoader", "synthetic_token_shards"]

@@ -1,0 +1,120 @@
+"""Self-scheduled training-data ingestion (DESIGN.md §4).
+
+The paper's manager/worker loop applied to the input layer: training
+shards are tasks, ingest hosts are workers. The manager hands out shards
+largest-first; a straggling host simply claims fewer shards, and a dead
+host's in-flight shards are re-queued — the same straggler story as
+§IV.A, now protecting the training input pipeline.
+
+On this single-host container the 'hosts' are threads; on a real fleet
+the Manager runs on host 0 and messages ride the existing control plane.
+The loader exposes a per-step iterator of fixed-shape (tokens, labels)
+batches, which the trainer device_puts against the mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from collections import deque
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core.messages import Task
+from repro.core.selfsched import Manager
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardManifest:
+    shard_id: str
+    path: str
+    n_tokens: int
+    size_bytes: int
+
+
+def synthetic_token_shards(root: str, *, n_shards: int = 16,
+                           vocab_size: int = 512,
+                           tokens_per_shard_mean: int = 65536,
+                           seed: int = 0) -> list[ShardManifest]:
+    """Heavy-tailed shard sizes (like the aerodrome dataset's Fig 3)."""
+    rng = np.random.default_rng(seed)
+    os.makedirs(root, exist_ok=True)
+    out = []
+    w = rng.pareto(1.5, size=n_shards) + 0.2
+    w = w / w.mean()
+    for i in range(n_shards):
+        n = max(int(tokens_per_shard_mean * w[i]), 2048)
+        toks = rng.integers(0, vocab_size, size=n, dtype=np.int32)
+        path = os.path.join(root, f"shard_{i:05d}.npy")
+        np.save(path, toks)
+        out.append(ShardManifest(f"shard_{i:05d}", path, n,
+                                 int(toks.nbytes)))
+    return out
+
+
+class SelfScheduledLoader:
+    """Batches from shards claimed via largest-first self-scheduling."""
+
+    def __init__(self, shards: list[ShardManifest], *,
+                 batch_size: int, seq_len: int,
+                 n_ingest_workers: int = 4,
+                 organization: str = "largest_first",
+                 poll_interval: float = 0.005,
+                 seed: int = 0):
+        self.shards = shards
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.n_ingest_workers = n_ingest_workers
+        self.organization = organization
+        self.poll_interval = poll_interval
+        self.rng = np.random.default_rng(seed)
+        self._buf: deque[np.ndarray] = deque()
+        self._lock = threading.Lock()
+        self._ingested_tokens = 0
+        self._run_ingest()
+
+    # -- ingest phase (the paper's protocol) -------------------------------
+
+    def _ingest_shard(self, task: Task) -> int:
+        toks = np.load(task.payload)
+        L = self.seq_len + 1
+        n_seq = len(toks) // L
+        if n_seq == 0:
+            return 0
+        seqs = toks[: n_seq * L].reshape(n_seq, L)
+        with self._lock:
+            for s in seqs:
+                self._buf.append(s)
+            self._ingested_tokens += int(seqs.size)
+        return n_seq
+
+    def _run_ingest(self) -> None:
+        tasks = [Task(task_id=s.shard_id, size_bytes=s.size_bytes,
+                      payload=s.path) for s in self.shards]
+        mgr = Manager(tasks, self.n_ingest_workers, self._ingest_shard,
+                      organization=self.organization,
+                      poll_interval=self.poll_interval)
+        self.job_result = mgr.run()
+
+    # -- batch iterator ----------------------------------------------------
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        order = self.rng.permutation(len(self._buf))
+        seqs = list(self._buf)
+        bs = self.batch_size
+        for i in range(0, len(order) - bs + 1, bs):
+            chunk = np.stack([seqs[j] for j in order[i:i + bs]])
+            yield {"tokens": chunk[:, :-1].astype(np.int32),
+                   "labels": chunk[:, 1:].astype(np.int32)}
+
+    def batches(self, n: int) -> Iterator[dict[str, np.ndarray]]:
+        """Infinite-ish batch stream (reshuffles each epoch)."""
+        count = 0
+        while count < n:
+            for b in self:
+                yield b
+                count += 1
+                if count >= n:
+                    return

@@ -1,0 +1,8 @@
+"""Sharding rules + mesh-aware partitioning for the production meshes."""
+
+from repro.distribution.sharding import (
+    batch_spec, cache_shardings, make_spec, opt_state_shardings,
+    param_shardings)
+
+__all__ = ["batch_spec", "cache_shardings", "make_spec",
+           "opt_state_shardings", "param_shardings"]

@@ -1,0 +1,237 @@
+"""Sharding rules: FSDP ('data') x TP/EP ('model') x pure-DP ('pod').
+
+Design (DESIGN.md §6):
+  * 'pod' is pure data-parallel: params replicated across pods, gradients
+    all-reduced across the inter-pod links once per step.
+  * 'data' is the FSDP axis: params sharded along a non-TP dim, gathered
+    per scanned superblock under remat.
+  * 'model' is tensor/expert parallel: attention q-heads, MLP hidden,
+    Mamba inner channels, MoE experts.
+
+Every rule is a priority list of axis groups per tensor dim; the engine
+assigns the first group whose product divides the dim (so kv=1 MQA or
+E=16 MoE never produce invalid shardings — they just fall back to
+replication, recorded by the caller if needed).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP = ("data",)
+DP = ("pod", "data")      # batch axes (pod first so 2x16 folds cleanly)
+TP = ("model",)
+
+# Per-dim candidate axis groups, in priority order.
+Rule = Sequence[Optional[Sequence[Sequence[str]]]]
+
+# (name-pattern, rank) -> rule (one entry per trailing dim; leading stack
+# dims of scanned params are handled by the caller). First match with the
+# right rank wins.
+_PARAM_RULES: list[tuple[str, Rule]] = [
+    # embeddings
+    (r"\bembed$", [[TP], [FSDP]]),
+    (r"\bunembed$", [[FSDP], [TP]]),
+    # attention (rank 3)
+    (r"mixer/wq$", [[FSDP], [TP], None]),
+    # Perf iteration B1 (EXPERIMENTS.md §Perf): shard KV heads when they
+    # divide TP, else REPLICATE — never shard head_dim. hd-sharding made
+    # RoPE's rotate-half split cross shard boundaries, forcing XLA into
+    # "involuntary full rematerialization" reshards every layer.
+    (r"mixer/wk$|mixer/wv$", [[FSDP], [TP], None]),
+    (r"mixer/wo$", [[TP], None, [FSDP]]),
+    # rwkv time mix (rank 2: D x D)
+    (r"mixer/w[rkvgo]$", [[FSDP], [TP]]),
+    (r"mixer/lora_a_\w+$", [[FSDP], None]),
+    (r"mixer/lora_b_\w+$", [None, [TP]]),
+    (r"mixer/u$", [[TP], None]),
+    # dense mlp / rwkv channel mix
+    (r"ffn/wi$", [[FSDP], None, [TP]]),                   # (D, g, F)
+    (r"ffn/wo$", [[TP], [FSDP]]),                         # (F, D)
+    (r"ffn/wr$", [[FSDP], [TP]]),                         # rwkv channel
+    (r"ffn/wk$", [[FSDP], [TP]]),                         # (D, F)
+    (r"ffn/wv$", [[TP], [FSDP]]),                         # (F, D)
+    # moe router
+    (r"ffn/router$", [None, None]),
+    # mamba
+    (r"mixer/in_proj$", [[FSDP], [TP]]),
+    (r"mixer/conv_w$", [[TP], None]),
+    (r"mixer/conv_b$", [[TP]]),
+    (r"mixer/x_proj$", [[TP], None]),
+    (r"mixer/dt_proj$", [None, [TP]]),
+    (r"mixer/dt_bias$", [[TP]]),
+    (r"mixer/A_log$", [[TP], None]),
+    (r"mixer/D$", [[TP]]),
+    (r"mixer/out_proj$", [[TP], [FSDP]]),
+]
+
+
+def _leaf_path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def make_spec(rule: Rule, shape: Sequence[int], mesh: Mesh) -> P:
+    """Greedy assignment: first divisible axis-group per dim wins."""
+    used: set[str] = set()
+    out: list[Any] = []
+    rule = list(rule) + [None] * (len(shape) - len(rule))
+    for dim_size, candidates in zip(shape, rule):
+        chosen = None
+        for group in candidates or []:
+            axes = tuple(a for a in group
+                         if a in mesh.axis_names and a not in used)
+            if not axes:
+                continue
+            n = math.prod(mesh.shape[a] for a in axes)
+            if n > 1 and dim_size % n == 0:
+                chosen = axes if len(axes) > 1 else axes[0]
+                used.update(axes)
+                break
+        out.append(chosen)
+    return P(*out)
+
+
+def _rule_for(path_str: str, rank: int, is_moe_leaf: bool) -> Rule:
+    if is_moe_leaf:
+        # EP over 'model'. (Perf iteration A3 — EP over the data axis —
+        # was tried and REFUTED: XLA gathered the full expert weights
+        # across data every layer, 1050 GB/chip. See EXPERIMENTS.md §Perf.)
+        if path_str.endswith("wi"):
+            return [[TP], [FSDP], None, None]              # (E, D, g, F)
+        if path_str.endswith("wo"):
+            return [[TP], None, [FSDP]]                    # (E, F, D)
+    for pat, rule in _PARAM_RULES:
+        if re.search(pat, path_str) and len(rule) == rank:
+            return rule
+    return [None] * rank
+
+
+def param_shardings(params_tree, mesh: Mesh):
+    """NamedSharding tree matching params (works on ShapeDtypeStructs).
+
+    Leaves under 'blocks' have a leading stacked-layer dim (never
+    sharded). MoE leaves are recognized by rank (wi rank 4+stack / wo
+    rank 3+stack under ffn with expert dim first).
+    """
+    def one(path, leaf):
+        ps = _leaf_path_str(path)
+        shape = list(leaf.shape)
+        stacked = ps.startswith("blocks")
+        core = shape[1:] if stacked else shape
+        is_moe = ("ffn" in ps and
+                  ((ps.endswith("wi") and len(core) == 4)
+                   or (ps.endswith("wo") and len(core) == 3)))
+        rule = _rule_for(ps, len(core), is_moe)
+        spec = make_spec(rule, core, mesh)
+        if stacked:
+            spec = P(None, *spec)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def batch_spec(mesh: Mesh, batch_size: int, extra_dims: int = 1) -> P:
+    """Shard the batch dim over as many DP axes as divide it."""
+    used: list[str] = []
+    n = 1
+    for a in DP:
+        if a in mesh.axis_names:
+            m = mesh.shape[a]
+            if batch_size % (n * m) == 0:
+                used.append(a)
+                n *= m
+    lead = tuple(used) if len(used) > 1 else (used[0] if used else None)
+    return P(lead, *([None] * extra_dims))
+
+
+def batch_shardings(mesh: Mesh, batch_tree):
+    def one(leaf):
+        return NamedSharding(
+            mesh, batch_spec(mesh, leaf.shape[0], len(leaf.shape) - 1))
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+_CACHE_RULES: list[tuple[str, Rule]] = [
+    # Perf iteration C1 (EXPERIMENTS.md §Perf): KV cache (B, S, KV, hd)
+    # sharded on SEQUENCE over TP (batch over DP). Decode attention then
+    # keeps logits (B, H, S/tp) shard-local and only psums the softmax
+    # stats + the (B, H, hd) output partials — the hd-sharded layout
+    # psum'd (B, H, S) logits (~805 MB/layer for granite decode_32k).
+    (r"\bk$|\bv$", [[DP, FSDP], [TP, FSDP], None, None]),
+    (r"\bpos$", [None]),
+    # mamba: conv (B, K-1, Di), ssm (B, Di, S)
+    (r"\bconv$", [[DP, FSDP], None, [TP]]),
+    (r"\bssm$", [[DP, FSDP], [TP], None]),
+    # rwkv: shift (B, 1, D), wkv (B, H, dk, dv)
+    (r"\bshift$", [[DP, FSDP], None, None]),
+    (r"\bwkv$", [[DP, FSDP], [TP], None, None]),
+]
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    """Shardings for the stacked decode cache (leading superblock dim)."""
+    def one(path, leaf):
+        ps = _leaf_path_str(path)
+        core = list(leaf.shape)[1:]          # drop stacked superblock dim
+        rule = [None] * len(core)
+        for pat, r in _CACHE_RULES:
+            if re.search(pat, ps):
+                rule = r
+                break
+        spec = make_spec(rule, core, mesh)
+        return NamedSharding(mesh, P(None, *spec))
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def opt_state_shardings(opt_state_tree, params_tree, params_shardings,
+                        mesh: Mesh):
+    """Adam m/v shard exactly like their params. Row-wise int8 moments
+    keep the parameter's shape ('q') so they inherit the SAME sharding;
+    their per-block scales drop the last-axis entry. (Perf iteration A4:
+    the earlier flat 256-way quant layout forced a full m/v reshard
+    every optimizer step — ~600 GB/chip for qwen3 train_4k.)"""
+    leaves_sh, treedef = jax.tree_util.tree_flatten(params_shardings)
+
+    def shard_moment_tree(tree):
+        leaves = treedef.flatten_up_to(tree)
+        out = []
+        for leaf, psh in zip(leaves, leaves_sh):
+            if isinstance(leaf, dict):   # {'q': param-shape, 'scale': ...}
+                pspec = tuple(psh.spec)
+                pspec = pspec + (None,) * (leaf["q"].ndim - len(pspec))
+                nblk = leaf["scale"].shape[-1] if leaf["scale"].ndim else 1
+                last = pspec[-1] if pspec else None
+                # keep last-axis sharding on the scale only if it divides
+                scale_last = None
+                if last is not None:
+                    n = math.prod(
+                        mesh.shape[a] for a in
+                        (last if isinstance(last, tuple) else (last,)))
+                    if nblk % n == 0:
+                        scale_last = last
+                sspec = pspec[:-1] + (scale_last,) if pspec else ()
+                out.append({
+                    "q": NamedSharding(mesh, P(*pspec)),
+                    "scale": NamedSharding(mesh, P(*sspec)),
+                })
+            else:
+                out.append(psh)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    result: dict = {"count": NamedSharding(mesh, P())}
+    for key in ("m", "v"):
+        if key in opt_state_tree:
+            result[key] = shard_moment_tree(opt_state_tree[key])
+    return result

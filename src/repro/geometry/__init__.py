@@ -1,0 +1,17 @@
+"""Aerodrome query-generation geometry (paper §III.B, Figs 1-2)."""
+
+from repro.geometry.aerodromes import (
+    Aerodrome, synthetic_aerodromes)
+from repro.geometry.dem import SyntheticGlobeDEM
+from repro.geometry.queries import (
+    BoundingBox, Query, generate_queries, make_bounding_boxes)
+from repro.geometry.rectilinear import (
+    decompose_mask_into_rectangles, rasterize_circles, split_large_rectangles)
+
+__all__ = [
+    "Aerodrome", "synthetic_aerodromes",
+    "SyntheticGlobeDEM",
+    "BoundingBox", "Query", "generate_queries", "make_bounding_boxes",
+    "decompose_mask_into_rectangles", "rasterize_circles",
+    "split_large_rectangles",
+]

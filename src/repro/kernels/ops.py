@@ -1,0 +1,132 @@
+"""Public jit'd wrappers for the track-processing kernels.
+
+Each op pads inputs to kernel-friendly shapes, dispatches to the Pallas
+kernel (interpret mode on CPU, compiled on TPU) or to the pure-jnp oracle
+(``backend='ref'``), and unpads the result. The segments pipeline and the
+benchmarks call these, never the kernels directly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.agl_lookup import TILE_H, TILE_W, agl_lookup_pallas
+from repro.kernels.dynamic_rates import dynamic_rates_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.track_interp import track_interp_pallas
+
+Backend = Literal["pallas", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int,
+            value: float = 0.0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def track_interp(t_in, v_in, count, t_out, *,
+                 backend: Backend = "pallas", block_m: int = 256):
+    """(B,N),(B,C,N),(B,),(B,M) -> (B,M,C). See ref.track_interp_ref."""
+    if backend == "ref":
+        return ref.track_interp_ref(t_in, v_in, count, t_out)
+    M = t_out.shape[1]
+    block_m = min(block_m, _next_mult(M, 128))
+    t_out_p = _pad_to(jnp.asarray(t_out), 1, block_m)
+    # Pad knot axis to 128 lanes with +inf times so padding never brackets.
+    t_in_p = _pad_to(jnp.asarray(t_in, jnp.float32), 1, 128, value=np.inf)
+    v_in_p = _pad_to(jnp.asarray(v_in, jnp.float32), 2, 128)
+    out = track_interp_pallas(t_in_p, v_in_p, count, t_out_p,
+                              block_m=block_m, interpret=not _on_tpu())
+    return out[:, :M, :]
+
+
+def dynamic_rates(v, count, dt, *, backend: Backend = "pallas"):
+    """(B,3,M),(B,) -> (B,4,M). See ref.dynamic_rates_ref."""
+    if backend == "ref":
+        return ref.dynamic_rates_ref(v, count, dt)
+    M = v.shape[2]
+    v_p = _pad_to(jnp.asarray(v, jnp.float32), 2, 128)
+    out = dynamic_rates_pallas(v_p, count, float(dt),
+                               interpret=not _on_tpu())
+    return out[:, :, :M]
+
+
+def agl_lookup(dem, fi, fj, alt_msl, *, backend: Backend = "pallas"):
+    """(H,W),(B,M),(B,M),(B,M) -> (B,M) AGL. See ref.agl_lookup_ref.
+
+    Computes per-track tile origins on the host side; tracks that span
+    more than one DEM tile fall back to the oracle (rare wide-area
+    tracks — the paper's §V 'hundreds of nautical miles' case).
+    """
+    if backend == "ref":
+        return ref.agl_lookup_ref(dem, fi, fj, alt_msl)
+    dem = jnp.asarray(dem, jnp.float32)
+    fi = jnp.asarray(fi, jnp.float32)
+    fj = jnp.asarray(fj, jnp.float32)
+    H, W = dem.shape
+    fi_c = jnp.clip(fi, 0.0, H - 1.001)
+    fj_c = jnp.clip(fj, 0.0, W - 1.001)
+    # Host-side (concrete) origin/extent check.
+    fi_np, fj_np = np.asarray(fi_c), np.asarray(fj_c)
+    oi = (fi_np.min(axis=1) // TILE_H).astype(np.int32)
+    oj = (fj_np.min(axis=1) // TILE_W).astype(np.int32)
+    spans_i = (fi_np.max(axis=1) - oi * TILE_H) >= TILE_H - 1
+    spans_j = (fj_np.max(axis=1) - oj * TILE_W) >= TILE_W - 1
+    if bool(spans_i.any() or spans_j.any()):
+        return ref.agl_lookup_ref(dem, fi, fj, alt_msl)
+    dem_p = _pad_to(_pad_to(dem, 0, TILE_H), 1, TILE_W)
+    # Keep origins inside the padded grid.
+    oi = np.minimum(oi, dem_p.shape[0] // TILE_H - 1)
+    oj = np.minimum(oj, dem_p.shape[1] // TILE_W - 1)
+    M = fi.shape[1]
+    fi_p = _pad_to(fi_c, 1, 128)
+    fj_p = _pad_to(fj_c, 1, 128)
+    alt_p = _pad_to(jnp.asarray(alt_msl, jnp.float32), 1, 128)
+    out = agl_lookup_pallas(dem_p, fi_p, fj_p, alt_p,
+                            jnp.asarray(oi), jnp.asarray(oj),
+                            interpret=not _on_tpu())
+    return out[:, :M]
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    backend: Backend = "pallas",
+                    block_q: int = 128, block_k: int = 128):
+    """Blocked online-softmax attention (GQA): q (B,H,T,hd),
+    k/v (B,KV,S,hd) -> (B,H,T,hd). Pads T/S to block multiples.
+
+    This is the real-TPU attention path (attention_impl='flash' on
+    ArchConfig); the dry-run keeps stock-XLA attention so cost_analysis
+    stays faithful (DESIGN.md §3)."""
+    if backend == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    B, H, T, hd = q.shape
+    S = k.shape[2]
+    bq = min(block_q, _next_mult(T, 128))
+    bk = min(block_k, _next_mult(S, 128))
+    q_p = _pad_to(jnp.asarray(q), 2, bq)
+    k_p = _pad_to(jnp.asarray(k), 2, bk)
+    v_p = _pad_to(jnp.asarray(v), 2, bk)
+    out = flash_attention_pallas(q_p, k_p, v_p, causal=causal,
+                                 block_q=bq, block_k=bk,
+                                 q_len=T, kv_len=S,
+                                 interpret=not _on_tpu())
+    return out[:, :, :T]
+
+
+def _next_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,99 @@
+"""Step functions + abstract input specs for every (arch x shape) cell.
+
+These are the functions the dry-run lowers and the trainer/server jit:
+  * train_step: fwd + bwd + AdamW update (+ optional grad compression)
+  * prefill_step: prompt -> logits + primed cache
+  * decode_step: one token against a cache
+
+``input_specs`` returns ShapeDtypeStructs only — weak-type-correct,
+shardable, no device allocation (the dry-run pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as M
+from repro.train.optimizer import OptimizerConfig, apply_updates
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig,
+                    remat: bool = True):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch, remat=remat))(params)
+        params, opt_state, metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch, cache_len=cache_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, cache, batch):
+        return M.decode_step(cfg, params, cache, batch)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Model inputs for one shape cell (tokens/embeds/labels)."""
+    B, S = shape.global_batch, shape.seq_len
+    adt = jnp.dtype(cfg.activation_dtype)
+    if shape.kind == "train":
+        batch: dict[str, Any] = {"labels": sds((B, S), jnp.int32)}
+        if cfg.frontend is not None:
+            batch["embeds"] = sds((B, S, cfg.d_model), adt)
+        else:
+            batch["tokens"] = sds((B, S), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.frontend is not None:
+            return {"embeds": sds((B, S, cfg.d_model), adt)}
+        return {"tokens": sds((B, S), jnp.int32)}
+    if shape.kind == "decode":
+        if cfg.frontend is not None:
+            return {"embeds": sds((B, 1, cfg.d_model), adt)}
+        return {"tokens": sds((B, 1), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def param_specs(cfg: ArchConfig) -> Any:
+    return jax.eval_shape(
+        functools.partial(M.init_params, cfg), jax.random.key(0))
+
+
+def opt_state_specs(cfg: ArchConfig, opt_cfg: OptimizerConfig) -> Any:
+    from repro.train.optimizer import init_opt_state
+    p = param_specs(cfg)
+    return jax.eval_shape(
+        functools.partial(init_opt_state, cfg=opt_cfg), p)
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig) -> Any:
+    return jax.eval_shape(functools.partial(
+        M.init_cache, cfg, shape.global_batch, shape.seq_len))

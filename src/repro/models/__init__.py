@@ -1,0 +1,1 @@
+"""Model stack: GQA/MoE/Mamba/RWKV-6 decoder architectures in pure JAX."""

@@ -1,0 +1,294 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (train + cached decode),
+MLPs, and capacity-based MoE.
+
+Pure-JAX by design: the dense transformer math is left to XLA so the
+dry-run's cost_analysis stays faithful (DESIGN.md §3). Einsums accumulate
+in f32 via preferred_element_type.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms & activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(F32)), axis=-1, keepdims=True)
+    y = x.astype(F32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(F32)).astype(x.dtype)
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":                      # squared ReLU (nemotron-4)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: (B, T, H, hd); positions: (B, T) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(F32) * freqs        # (B, T, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attention_train(x: jax.Array, p: dict, *, n_heads: int, n_kv: int,
+                    head_dim: int, theta: float,
+                    window: Optional[int] = None,
+                    impl: str = "xla") -> jax.Array:
+    """Full causal (optionally sliding-window) attention.
+
+    x: (B, T, D). p: {'wq','wk','wv','wo'} with
+      wq (D, H, hd), wk/wv (D, KV, hd), wo (H, hd, D).
+    impl='flash' routes through the Pallas blocked online-softmax kernel
+    (no sliding-window support there; falls back to 'xla' if windowed).
+    """
+    B, T, D = x.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    # Perf iteration B2 (EXPERIMENTS.md §Perf): projection outputs in the
+    # activation dtype — TPU MXUs accumulate in f32 internally either
+    # way, but f32 OUTPUTS double every cross-chip psum / grad
+    # reduce-scatter that flows through them.
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"],
+                   preferred_element_type=x.dtype)
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"],
+                   preferred_element_type=x.dtype)
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"],
+                   preferred_element_type=x.dtype)
+    q = apply_rope(q, pos, theta)
+    k = apply_rope(k, pos, theta)
+
+    if impl == "flash" and window is None:
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True)
+        o = o.transpose(0, 2, 1, 3).astype(x.dtype)
+        return jnp.einsum("bthk,hkd->btd", o, p["wo"],
+                          preferred_element_type=x.dtype)
+
+    g = n_heads // n_kv
+    q = q.reshape(B, T, n_kv, g, head_dim)
+    scale = head_dim ** -0.5
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", q, k,
+                        preferred_element_type=F32) * scale
+    # logits: (B, KV, g, T, T)
+    qi = jnp.arange(T)[:, None]
+    ki = jnp.arange(T)[None, :]
+    mask = ki <= qi
+    if window is not None:
+        mask &= (qi - ki) < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", probs, v,
+                   preferred_element_type=F32)
+    o = o.reshape(B, T, n_heads, head_dim).astype(x.dtype)
+    return jnp.einsum("bthk,hkd->btd", o, p["wo"],
+                      preferred_element_type=x.dtype)
+
+
+def attention_decode(x: jax.Array, cache: dict, p: dict, *, n_heads: int,
+                     n_kv: int, head_dim: int, theta: float,
+                     window: Optional[int] = None) -> tuple[jax.Array, dict]:
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); cache: {'k','v': (B, S, KV, hd), 'pos': (B,) int32}.
+    The cache is a ring buffer when ``window`` is set (hybrid long ctx).
+    """
+    B, _, D = x.shape
+    S = cache["k"].shape[1]
+    pos = cache["pos"]                                  # (B,)
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"], preferred_element_type=F32)
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"], preferred_element_type=F32)
+    q = apply_rope(q.astype(x.dtype), pos[:, None], theta)
+    k = apply_rope(k.astype(x.dtype), pos[:, None], theta)
+
+    slot = (pos % S).astype(jnp.int32)                  # ring slot
+    oh = jax.nn.one_hot(slot, S, dtype=k.dtype)         # (B, S)
+    k_cache = cache["k"] * (1.0 - oh)[..., None, None] \
+        + oh[..., None, None] * k[:, 0][:, None]
+    v_cache = cache["v"] * (1.0 - oh)[..., None, None] \
+        + oh[..., None, None] * v[:, 0][:, None]
+
+    g = n_heads // n_kv
+    qh = q.reshape(B, n_kv, g, head_dim)
+    # (Perf iteration C2 — replicating q + pinning logits S-sharded via
+    # with_sharding_constraint — was REFUTED: 159 -> 248 ms collective.
+    # Same lesson as A2/A7: this XLA SPMD version answers in-body pins
+    # with replication; the rule-level layouts are the lever that works.)
+    scale = head_dim ** -0.5
+    logits = jnp.einsum("bhgk,bshk->bhgs", qh, k_cache,
+                        preferred_element_type=F32) * scale
+    sidx = jnp.arange(S)[None, :]                       # (1, S)
+    # Absolute position currently held by each ring slot: the largest
+    # q <= pos with q % S == slot (negative => never written).
+    qpos = pos[:, None] - ((pos[:, None] - sidx) % S)
+    valid = qpos >= 0
+    if window is not None:
+        valid &= (pos[:, None] - qpos) < window
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgs,bshk->bhgk", probs, v_cache,
+                   preferred_element_type=F32)
+    o = o.reshape(B, 1, n_heads, head_dim).astype(x.dtype)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"],
+                     preferred_element_type=F32).astype(x.dtype)
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos + 1}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated) + MoE
+# ---------------------------------------------------------------------------
+
+def mlp(x: jax.Array, p: dict, activation: str) -> jax.Array:
+    """MLP. Gated (wi: (D,2,F)): act(x@wi0) * (x@wi1) @ wo.
+    Plain (wi: (D,1,F)): act(x@wi0) @ wo — nemotron/granite/musicgen."""
+    act = activation_fn(activation)
+    h = jnp.einsum("btd,dcf->btcf", x, p["wi"],
+                   preferred_element_type=F32)      # f32 into the gate
+    if p["wi"].shape[1] == 2:
+        h = act(h[:, :, 0]) * h[:, :, 1]
+    else:
+        h = act(h[:, :, 0])
+    return jnp.einsum("btf,fd->btd", h.astype(x.dtype), p["wo"],
+                      preferred_element_type=x.dtype)   # B2: bf16 psum
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    d = min(cap, n)
+    while n % d:
+        d -= 1
+    return d
+
+
+def _constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint iff the ambient mesh has these axes
+    (no-op for single-device smoke tests)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    names = set(getattr(mesh, "axis_names", ()) or ())
+    if not names:
+        return x
+    clean = []
+    for axes in spec:
+        if axes is None:
+            clean.append(None)
+            continue
+        tup = axes if isinstance(axes, tuple) else (axes,)
+        tup = tuple(a for a in tup if a in names)
+        clean.append(tup if len(tup) > 1 else (tup[0] if tup else None))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*clean))
+
+
+def moe(x: jax.Array, p: dict, *, n_experts: int, top_k: int,
+        activation: str, capacity_factor: float = 1.25,
+        group_size: int = 2048) -> jax.Array:
+    """Capacity-based top-k MoE with GROUPED dispatch (EP-shardable).
+
+    p: {'router': (D, E), 'wi': (E, D, 2|1, F), 'wo': (E, F, D)}.
+    Tokens over capacity are dropped (residual passes through).
+
+    Grouping (GShard-style): the dispatch one-hot matmuls cost
+    2*S_g*(cf*K*S_g)*D FLOPs per group — quadratic in group size — so
+    tokens are routed within groups of ``group_size``. A single global
+    group at S=1M tokens costs ~500x the expert compute itself (measured:
+    the pre-fix qwen3 train cell burned 99.7 % of its FLOPs in dispatch);
+    at 2048 it is ~1.1x expert compute for qwen3's top-8/128e.
+    """
+    B, T, D = x.shape
+    E = n_experts
+    S = B * T
+    gs = _largest_divisor_leq(S, group_size)
+    G = S // gs
+    xg = x.reshape(G, gs, D)
+    gate_logits = jnp.einsum("gsd,de->gse", xg.astype(F32),
+                             p["router"].astype(F32))
+    probs = jax.nn.softmax(gate_logits, axis=-1)               # (G, Sg, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # (G, Sg, K)
+
+    cap = max(int(capacity_factor * top_k * gs / E), 1)
+    # Position of each (token, k) within its expert queue, per group.
+    # Perf iteration A5 (EXPERIMENTS.md §Perf): sort-based ranking in
+    # O(Sg*K) memory — the classic cumsum-over-(Sg*K, E) materializes an
+    # int32 tensor E times larger (~60 GB/chip/layer of HBM traffic for
+    # qwen3's 128 experts).
+    SK = gs * top_k
+    eid = gate_idx.reshape(G, SK)                              # (G, SK)
+
+    def rank_in_expert(e):
+        order = jnp.argsort(e, stable=True)
+        e_sorted = e[order]
+        start = jnp.searchsorted(e_sorted, e_sorted, side="left")
+        pos_sorted = jnp.arange(SK, dtype=jnp.int32) \
+            - start.astype(jnp.int32)
+        return jnp.zeros((SK,), jnp.int32).at[order].set(pos_sorted)
+
+    pos = jax.vmap(rank_in_expert)(eid).reshape(G, gs, top_k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=x.dtype)        # (G,Sg,K,E)
+
+    # Dispatch/combine one-hot einsums. Perf iterations A2/A6/A7 all
+    # tried to improve this further (explicit all-to-all pins, scatter/
+    # gather dispatch, E-dim pinning) and were each REFUTED by
+    # measurement — XLA's SPMD partitioner answered every pin with
+    # replication + all-reduce. See EXPERIMENTS.md §Perf for the log.
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                            dtype=x.dtype)[..., :cap]          # (G,Sg,K,cap)
+    disp = jnp.einsum("gske,gskc->gsec", onehot, pos_oh)
+    comb = jnp.einsum("gsec,gsk,gske->gsec", disp,
+                      gate_vals.astype(x.dtype), onehot)
+
+    xin = jnp.einsum("gsec,gsd->gecd", disp, xg,
+                     preferred_element_type=F32).astype(x.dtype)
+    # Expert FFN as 3-D batched matmuls over (E, G*cap, ...) — the form
+    # both the MXU and the CPU executor handle natively.
+    z = p["wi"].shape[2]
+    F = p["wi"].shape[3]
+    xe = xin.transpose(1, 0, 2, 3).reshape(E, G * cap, D)
+    wi = p["wi"].reshape(E, D, z * F)
+    h = jnp.einsum("ecd,edf->ecf", xe, wi, preferred_element_type=F32)
+    h = h.reshape(E, G * cap, z, F)
+    act = activation_fn(activation)
+    if z == 2:
+        h = act(h[:, :, 0]) * h[:, :, 1]
+    else:
+        h = act(h[:, :, 0])
+    eout = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), p["wo"],
+                      preferred_element_type=F32).astype(x.dtype)
+    eout = eout.reshape(E, G, cap, D).transpose(1, 0, 2, 3)    # (G,E,c,D)
+    yf = jnp.einsum("gsec,gecd->gsd", comb, eout,
+                    preferred_element_type=F32).astype(x.dtype)
+    return yf.reshape(B, T, D)

@@ -1,0 +1,443 @@
+"""Decoder LM assembled from the ArchConfig block pattern.
+
+Layer stacking uses jax.lax.scan over *superblocks* (one period of the
+block pattern) with optional rematerialization — the production choice
+for 96-layer models. Cost accounting note (DESIGN.md §7): XLA's
+cost_analysis counts a while-loop body once, so roofline.py composes
+full-graph cost + (n_superblocks - 1) x single-superblock cost; this
+module exposes ``superblock_apply`` for exactly that purpose.
+
+Public API:
+  init_params(cfg, key)                     -> params pytree
+  forward(cfg, params, batch)               -> logits (train/prefill path)
+  loss_fn(cfg, params, batch)               -> scalar loss
+  init_cache(cfg, B, cache_len, dtype)      -> decode cache pytree
+  prefill(cfg, params, batch, cache_len)    -> logits, cache
+  decode_step(cfg, params, cache, batch)    -> logits, cache
+  superblock_apply(cfg, block_params, x, sb_index=0) -> x
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+F32 = jnp.float32
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _adtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.activation_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _init(key, shape, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else (shape[0] ** -0.5 if shape else 0.02)
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+def _init_ffn(cfg: ArchConfig, key) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    g = 2 if cfg.gated_mlp else 1
+    k1, k2 = jax.random.split(key)
+    dt = _dtype(cfg)
+    return {"wi": _init(k1, (d, g, f), dt), "wo": _init(k2, (f, d), dt)}
+
+
+def _init_moe(cfg: ArchConfig, key) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    g = 2 if cfg.gated_mlp else 1
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    return {"router": _init(k1, (d, e), F32),
+            "wi": _init(k2, (e, d, g, f), dt),
+            "wo": _init(k3, (e, f, d), dt)}
+
+
+def _init_attn(cfg: ArchConfig, key) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    return {"wq": _init(ks[0], (d, h, hd), dt),
+            "wk": _init(ks[1], (d, kv, hd), dt),
+            "wv": _init(ks[2], (d, kv, hd), dt),
+            "wo": _init(ks[3], (h, hd, d), dt, scale=(h * hd) ** -0.5)}
+
+
+def _init_mamba(cfg: ArchConfig, key) -> dict:
+    d, di, ds, K = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv
+    R = max(d // 16, 1)
+    ks = jax.random.split(key, 7)
+    dt = _dtype(cfg)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di), dt),
+        "conv_w": _init(ks[1], (di, K), dt, scale=0.3),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": _init(ks[2], (di, R + 2 * ds), dt),
+        "dt_proj": _init(ks[3], (R, di), dt),
+        "dt_bias": jnp.full((di,), -2.0, dt),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=F32), (di, ds))),
+        "D": jnp.ones((di,), F32),
+        "out_proj": _init(ks[4], (di, d), dt),
+    }
+
+
+def _init_rwkv_time(cfg: ArchConfig, key) -> dict:
+    d = cfg.d_model
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    R = max(d // 32, 8)
+    ks = jax.random.split(key, 20)
+    dt = _dtype(cfg)
+    p: dict[str, Any] = {}
+    for i, nm in enumerate(("r", "k", "v", "w", "g")):
+        p[f"mu_{nm}"] = jnp.full((d,), 0.5, F32)
+        p[f"lora_a_{nm}"] = _init(ks[2 * i], (d, R), dt)
+        p[f"lora_b_{nm}"] = jnp.zeros((R, d), dt)
+    p["w0"] = jnp.full((d,), -2.0, F32)
+    p["lora_a_w2"] = _init(ks[10], (d, R), dt)
+    p["lora_b_w2"] = jnp.zeros((R, d), dt)
+    for i, nm in enumerate(("wr", "wk", "wv", "wg", "wo")):
+        p[nm] = _init(ks[11 + i], (d, d), dt)
+    p["u"] = jnp.zeros((H, hd), F32)
+    p["ln_scale"] = jnp.ones((d,), F32)
+    return p
+
+
+def _init_rwkv_channel(cfg: ArchConfig, key) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    return {"mu_r": jnp.full((d,), 0.5, F32),
+            "mu_k": jnp.full((d,), 0.5, F32),
+            "wr": _init(ks[0], (d, d), dt),
+            "wk": _init(ks[1], (d, f), dt),
+            "wv": _init(ks[2], (f, d), dt)}
+
+
+def init_sublayer_params(cfg: ArchConfig, key, layer_idx: int) -> dict:
+    kind = cfg.layer_kind(layer_idx)
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    p: dict[str, Any] = {"norm1": jnp.ones((d,), F32),
+                         "norm2": jnp.ones((d,), F32)}
+    if kind == "attn":
+        p["mixer"] = _init_attn(cfg, k1)
+    elif kind == "mamba":
+        p["mixer"] = _init_mamba(cfg, k1)
+    elif kind == "rwkv6":
+        p["mixer"] = _init_rwkv_time(cfg, k1)
+    else:
+        raise ValueError(kind)
+    if kind == "rwkv6":
+        p["ffn"] = _init_rwkv_channel(cfg, k2)
+    elif cfg.is_moe_layer(layer_idx):
+        p["ffn"] = _init_moe(cfg, k2)
+    else:
+        p["ffn"] = _init_ffn(cfg, k2)
+    return p
+
+
+def init_superblock_params(cfg: ArchConfig, key, sb: int = 0) -> dict:
+    keys = jax.random.split(key, cfg.pattern_period)
+    return {f"s{i}": init_sublayer_params(cfg, keys[i],
+                                          sb * cfg.pattern_period + i)
+            for i in range(cfg.pattern_period)}
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    kE, kU, kB = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    params: dict[str, Any] = {
+        "embed": _init(kE, (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), F32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init(kU, (cfg.d_model, cfg.vocab_size), dt)
+    # Stacked superblocks (leading axis scanned over).
+    keys = jax.random.split(kB, cfg.n_superblocks)
+    blocks = [init_superblock_params(cfg, keys[i], i)
+              for i in range(cfg.n_superblocks)]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+def _apply_sublayer(cfg: ArchConfig, kind: str, is_moe: bool, p: dict,
+                    x: jax.Array) -> jax.Array:
+    h = L.rms_norm(x, p["norm1"], cfg.rms_eps)
+    if kind == "attn":
+        h = L.attention_train(h, p["mixer"], n_heads=cfg.n_heads,
+                              n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                              theta=cfg.rope_theta,
+                              window=cfg.sliding_window,
+                              impl=cfg.attention_impl)
+    elif kind == "mamba":
+        h = S.mamba_train(h, p["mixer"], d_state=cfg.d_state)
+    elif kind == "rwkv6":
+        h = S.rwkv6_time_mix(h, p["mixer"], head_dim=cfg.rwkv_head_dim)
+    x = x + h
+    h = L.rms_norm(x, p["norm2"], cfg.rms_eps)
+    if kind == "rwkv6":
+        h = S.rwkv6_channel_mix(h, p["ffn"])
+    elif is_moe:
+        h = L.moe(h, p["ffn"], n_experts=cfg.n_experts, top_k=cfg.top_k,
+                  activation=cfg.activation,
+                  capacity_factor=cfg.capacity_factor,
+                  group_size=cfg.moe_group_size)
+    else:
+        h = L.mlp(h, p["ffn"], cfg.activation)
+    return x + h
+
+
+def superblock_apply(cfg: ArchConfig, block_params: dict,
+                     x: jax.Array, sb_index: int = 0) -> jax.Array:
+    """One period of the block pattern (used standalone by roofline.py)."""
+    for i, kind in enumerate(cfg.block_pattern):
+        layer_idx = sb_index * cfg.pattern_period + i
+        x = _apply_sublayer(cfg, kind, cfg.is_moe_layer(layer_idx),
+                            block_params[f"s{i}"], x)
+    return x
+
+
+REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots_no_batch": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "everything": jax.checkpoint_policies.everything_saveable,
+}
+
+
+def forward_trunk(cfg: ArchConfig, params: dict, x: jax.Array,
+                  remat: bool = True,
+                  remat_policy: str = "nothing") -> jax.Array:
+    def body(carry, block_p):
+        return superblock_apply(cfg, block_p, carry), None
+    if remat:
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[remat_policy])
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return x
+
+
+def encode_inputs(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    """Token embedding, or the stubbed modality frontend's embeddings."""
+    if cfg.frontend is not None:
+        return batch["embeds"].astype(_adtype(cfg))
+    return params["embed"][batch["tokens"]].astype(_adtype(cfg))
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict,
+            remat: bool = True, remat_policy: str = "nothing") -> jax.Array:
+    x = encode_inputs(cfg, params, batch)
+    x = forward_trunk(cfg, params, x, remat=remat,
+                      remat_policy=remat_policy)
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    return jnp.einsum("btd,dv->btv", x, unembed,
+                      preferred_element_type=F32)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict,
+            z_loss: float = 1e-4, remat: bool = True,
+            remat_policy: str = "nothing") -> jax.Array:
+    logits = forward(cfg, params, batch, remat=remat,
+                     remat_policy=remat_policy)              # (B, T, V) f32
+    labels = batch["labels"]
+    valid = (labels >= 0).astype(F32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * valid
+    zl = z_loss * jnp.square(lse) * valid
+    return (nll.sum() + zl.sum()) / jnp.maximum(valid.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + cached decode
+# ---------------------------------------------------------------------------
+
+def _attn_cache_len(cfg: ArchConfig, cache_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, cache_len)
+    return cache_len
+
+
+def init_sublayer_cache(cfg: ArchConfig, kind: str, B: int, cache_len: int,
+                        dtype) -> dict:
+    if kind == "attn":
+        s = _attn_cache_len(cfg, cache_len)
+        return {"k": jnp.zeros((B, s, cfg.n_kv_heads, cfg.head_dim_), dtype),
+                "v": jnp.zeros((B, s, cfg.n_kv_heads, cfg.head_dim_), dtype),
+                "pos": jnp.zeros((B,), jnp.int32)}
+    if kind == "mamba":
+        return S.mamba_init_state(cfg.d_inner, cfg.d_state, cfg.d_conv, B,
+                                  dtype)
+    if kind == "rwkv6":
+        return S.rwkv6_init_state(B, cfg.d_model, cfg.rwkv_head_dim, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, B: int, cache_len: int,
+               fill: int = 0) -> dict:
+    """Stacked per-superblock caches (scanned alongside the params)."""
+    dtype = _adtype(cfg)
+    one = {f"s{i}": init_sublayer_cache(cfg, kind, B, cache_len, dtype)
+           for i, kind in enumerate(cfg.block_pattern)}
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_superblocks,) + x.shape).copy(),
+        one)
+    if fill:
+        stacked = jax.tree.map(
+            lambda x: (jnp.full_like(x, fill) if x.dtype == jnp.int32
+                       and x.ndim == 2 else x), stacked)
+    return stacked
+
+
+def _apply_sublayer_decode(cfg: ArchConfig, kind: str, is_moe: bool,
+                           p: dict, cache: dict, x: jax.Array):
+    h = L.rms_norm(x, p["norm1"], cfg.rms_eps)
+    if kind == "attn":
+        h, new_cache = L.attention_decode(
+            h, cache, p["mixer"], n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, theta=cfg.rope_theta,
+            window=cfg.sliding_window)
+    elif kind == "mamba":
+        h, new_cache = S.mamba_decode(h, cache, p["mixer"],
+                                      d_state=cfg.d_state)
+    elif kind == "rwkv6":
+        h, tstate = S.rwkv6_time_mix_decode(h, cache["time"], p["mixer"],
+                                            head_dim=cfg.rwkv_head_dim)
+        new_cache = {"time": tstate, "channel": cache["channel"]}
+    x = x + h
+    h = L.rms_norm(x, p["norm2"], cfg.rms_eps)
+    if kind == "rwkv6":
+        h, cstate = S.rwkv6_channel_mix(h, p["ffn"], state=cache["channel"],
+                                        return_state=True)
+        new_cache = {"time": new_cache["time"], "channel": cstate}
+    elif is_moe:
+        h = L.moe(h, p["ffn"], n_experts=cfg.n_experts, top_k=cfg.top_k,
+                  activation=cfg.activation,
+                  capacity_factor=cfg.capacity_factor,
+                  group_size=cfg.moe_group_size)
+    else:
+        h = L.mlp(h, p["ffn"], cfg.activation)
+    return x + h, new_cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict,
+                batch: dict) -> tuple[jax.Array, dict]:
+    """One-token decode. batch: {'tokens': (B,1)} or {'embeds': (B,1,D)}."""
+    x = encode_inputs(cfg, params, batch)
+
+    def body(carry, pc):
+        block_p, blk_cache = pc
+        h = carry
+        new_caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            h, nc = _apply_sublayer_decode(
+                cfg, kind, cfg.is_moe_layer(i), block_p[f"s{i}"],
+                blk_cache[f"s{i}"], h)
+            new_caches[f"s{i}"] = nc
+        return h, new_caches
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = jnp.einsum("btd,dv->btv", x, unembed,
+                        preferred_element_type=F32)
+    return logits, new_cache
+
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict,
+            cache_len: Optional[int] = None) -> tuple[jax.Array, dict]:
+    """Process a full prompt, returning logits and a primed cache."""
+    x = encode_inputs(cfg, params, batch)
+    B, T = x.shape[0], x.shape[1]
+    cache_len = cache_len or T
+    dtype = _adtype(cfg)
+
+    def body(carry, block_p):
+        h = carry
+        new_caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            p = block_p[f"s{i}"]
+            hn = L.rms_norm(h, p["norm1"], cfg.rms_eps)
+            if kind == "attn":
+                s = _attn_cache_len(cfg, cache_len)
+                hm = L.attention_train(hn, p["mixer"], n_heads=cfg.n_heads,
+                                       n_kv=cfg.n_kv_heads,
+                                       head_dim=cfg.head_dim_,
+                                       theta=cfg.rope_theta,
+                                       window=cfg.sliding_window)
+                k = jnp.einsum("btd,dhk->bthk", hn, p["mixer"]["wk"],
+                               preferred_element_type=F32).astype(dtype)
+                v = jnp.einsum("btd,dhk->bthk", hn, p["mixer"]["wv"],
+                               preferred_element_type=F32).astype(dtype)
+                pos = jnp.broadcast_to(
+                    jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+                k = L.apply_rope(k, pos, cfg.rope_theta)
+                if s >= T:
+                    pad = s - T
+                    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                else:   # keep the last s positions (ring layout: slot=pos%s)
+                    tail_k = k[:, T - s:]
+                    tail_v = v[:, T - s:]
+                    roll = (T - s) % s
+                    kc = jnp.roll(tail_k, shift=roll, axis=1)
+                    vc = jnp.roll(tail_v, shift=roll, axis=1)
+                nc = {"k": kc, "v": vc,
+                      "pos": jnp.full((B,), T, jnp.int32)}
+            elif kind == "mamba":
+                hm, nc = _mamba_prefill(cfg, hn, p["mixer"])
+            elif kind == "rwkv6":
+                hm, tstate = S.rwkv6_time_mix(hn, p["mixer"],
+                                              head_dim=cfg.rwkv_head_dim,
+                                              return_state=True)
+                nc = {"time": tstate}
+            h = h + hm
+            hn = L.rms_norm(h, p["norm2"], cfg.rms_eps)
+            if kind == "rwkv6":
+                hf, cstate = S.rwkv6_channel_mix(hn, p["ffn"],
+                                                 return_state=True)
+                nc["channel"] = cstate
+            elif cfg.is_moe_layer(i):
+                hf = L.moe(hn, p["ffn"], n_experts=cfg.n_experts,
+                           top_k=cfg.top_k, activation=cfg.activation,
+                           capacity_factor=cfg.capacity_factor,
+                           group_size=cfg.moe_group_size)
+            else:
+                hf = L.mlp(hn, p["ffn"], cfg.activation)
+            h = h + hf
+            new_caches[f"s{i}"] = nc
+        return h, new_caches
+
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = jnp.einsum("btd,dv->btv", x, unembed,
+                        preferred_element_type=F32)
+    return logits, cache
+
+
+def _mamba_prefill(cfg: ArchConfig, x: jax.Array, p: dict):
+    """Mamba over the prompt + final state for decode (single pass)."""
+    return S.mamba_train(x, p, d_state=cfg.d_state, return_state=True)

@@ -1,0 +1,302 @@
+"""State-space + linear-attention mixers: Mamba (Jamba) and RWKV-6.
+
+Both are implemented with O(T) parallel forms suitable for TPU:
+  * Mamba: selective scan via chunked associative scan (jax.lax) — the
+    CUDA selective-scan kernel has no TPU analogue; the associative-scan
+    formulation maps to the VPU and keeps the (B, T, d_inner, d_state)
+    working set bounded by chunking (DESIGN.md §2 hardware adaptation).
+  * RWKV-6 (Finch): data-dependent per-channel decay. Training/prefill
+    use a chunked scan (carry = (H, dk, dv) state per chunk); decode is a
+    single-step recurrence.
+
+Decode paths carry explicit state pytrees (the SSM equivalent of a KV
+cache): conv tail + ssm state for Mamba; token-shift + wkv state for
+RWKV-6.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _chunks_of(T: int, chunk: int) -> tuple[int, int]:
+    """(n_chunks, chunk_len) with chunk_len the largest divisor of T that
+    is <= chunk (power-of-2 T gives exactly ``chunk``)."""
+    ck = min(chunk, T)
+    while T % ck:
+        ck -= 1
+    return T // ck, ck
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B, T, Di), w (Di, K), b (Di,)."""
+    K = w.shape[1]
+    pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=F32)
+    for j in range(K):                       # K is tiny (4): unrolled taps
+        out = out + pads[:, j:j + x.shape[1]].astype(F32) * w[:, j].astype(F32)
+    return (out + b.astype(F32)).astype(x.dtype)
+
+
+def mamba_train(x: jax.Array, p: dict, *, d_state: int,
+                chunk: int = 256, return_state: bool = False):
+    """Mamba mixer over a full sequence.
+
+    p: in_proj (D, 2*Di), conv_w (Di, K), conv_b (Di,),
+       x_proj (Di, R+2*S), dt_proj (R, Di), dt_bias (Di,),
+       A_log (Di, S), D (Di,), out_proj (Di, D).
+    """
+    B, T, _ = x.shape
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"],
+                    preferred_element_type=F32).astype(x.dtype)
+    x1_raw, z = jnp.split(xz, 2, axis=-1)                   # (B, T, Di)
+    x1 = jax.nn.silu(
+        _causal_conv1d(x1_raw, p["conv_w"], p["conv_b"]).astype(F32)
+    ).astype(x.dtype)
+    R = p["dt_proj"].shape[0]
+    xdb = jnp.einsum("bti,ie->bte", x1, p["x_proj"],
+                     preferred_element_type=F32)             # (B,T,R+2S)
+    dt_r, B_ssm, C_ssm = jnp.split(xdb, [R, R + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,ri->bti", dt_r, p["dt_proj"],
+                   preferred_element_type=F32) + p["dt_bias"].astype(F32))
+    A = -jnp.exp(p["A_log"].astype(F32))                     # (Di, S)
+
+    a = jnp.exp(dt[..., None] * A[None, None])               # (B,T,Di,S)
+    bx = (dt * x1.astype(F32))[..., None] * B_ssm[:, :, None, :]
+
+    n_chunks, ck = _chunks_of(T, chunk)
+    a_c = a.reshape(B, n_chunks, ck, *a.shape[2:])
+    bx_c = bx.reshape(B, n_chunks, ck, *bx.shape[2:])
+
+    def outer(h0, inputs):
+        a_i, bx_i = inputs                                   # (B,ck,Di,S)
+        # within-chunk associative scan; fold in the carried state
+        def combine(l, r):
+            return (r[0] * l[0], r[0] * l[1] + r[1])
+        aa, hh = jax.lax.associative_scan(combine, (a_i, bx_i), axis=1)
+        hh = hh + aa * h0[:, None]
+        return hh[:, -1], hh
+
+    h0 = jnp.zeros((B, a.shape[2], d_state), F32)
+    h_last, hs = jax.lax.scan(outer, h0,
+                              (a_c.transpose(1, 0, 2, 3, 4),
+                               bx_c.transpose(1, 0, 2, 3, 4)))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, T, -1, d_state)
+    y = jnp.einsum("btis,bts->bti", h, C_ssm,
+                   preferred_element_type=F32)
+    y = y + p["D"].astype(F32) * x1.astype(F32)
+    y = (y * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    out = jnp.einsum("bti,id->btd", y, p["out_proj"],
+                     preferred_element_type=F32).astype(x.dtype)
+    if return_state:
+        K = p["conv_w"].shape[1]
+        tail = x1_raw[:, T - (K - 1):] if T >= K - 1 else jnp.pad(
+            x1_raw, ((0, 0), (K - 1 - T, 0), (0, 0)))
+        return out, {"conv": tail, "ssm": h_last}
+    return out
+
+
+def mamba_init_state(cfg_d_inner: int, d_state: int, d_conv: int, B: int,
+                     dtype) -> dict:
+    return {
+        "conv": jnp.zeros((B, d_conv - 1, cfg_d_inner), dtype),
+        "ssm": jnp.zeros((B, cfg_d_inner, d_state), F32),
+    }
+
+
+def mamba_decode(x: jax.Array, state: dict, p: dict, *,
+                 d_state: int) -> tuple[jax.Array, dict]:
+    """One-token Mamba step. x (B, 1, D)."""
+    B = x.shape[0]
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"],
+                    preferred_element_type=F32).astype(x.dtype)
+    x1, z = jnp.split(xz[:, 0], 2, axis=-1)                  # (B, Di)
+    # conv over [state, new]
+    window = jnp.concatenate([state["conv"], x1[:, None]], axis=1)  # (B,K,Di)
+    w = p["conv_w"].astype(F32)                              # (Di, K)
+    x1c = jnp.einsum("bki,ik->bi", window.astype(F32), w) \
+        + p["conv_b"].astype(F32)
+    x1c = jax.nn.silu(x1c).astype(x.dtype)
+    R = p["dt_proj"].shape[0]
+    xdb = jnp.einsum("bi,ie->be", x1c, p["x_proj"],
+                     preferred_element_type=F32)
+    dt_r, B_ssm, C_ssm = jnp.split(xdb, [R, R + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("br,ri->bi", dt_r, p["dt_proj"],
+                   preferred_element_type=F32) + p["dt_bias"].astype(F32))
+    A = -jnp.exp(p["A_log"].astype(F32))
+    a = jnp.exp(dt[..., None] * A[None])                     # (B,Di,S)
+    bx = (dt * x1c.astype(F32))[..., None] * B_ssm[:, None, :]
+    h = a * state["ssm"] + bx
+    y = jnp.einsum("bis,bs->bi", h, C_ssm, preferred_element_type=F32)
+    y = y + p["D"].astype(F32) * x1c.astype(F32)
+    y = (y * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"],
+                     preferred_element_type=F32).astype(x.dtype)
+    new_state = {"conv": window[:, 1:], "ssm": h}
+    return out[:, None], new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+def _token_shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """xx[t] = x[t-1] (zeros or carried state at t=0). x (B,T,D)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(x, xx, mu, lora_a, lora_b):
+    """Data-dependent token-shift interpolation (RWKV-6 ddlerp)."""
+    base = x + (xx - x) * mu.astype(x.dtype)
+    m = jnp.einsum("btd,dr->btr", base, lora_a, preferred_element_type=F32)
+    m = jnp.einsum("btr,rd->btd", jnp.tanh(m), lora_b,
+                   preferred_element_type=F32).astype(x.dtype)
+    return x + (xx - x) * (mu.astype(x.dtype) + m)
+
+
+def rwkv6_time_mix(x: jax.Array, p: dict, *, head_dim: int,
+                   chunk: int = 32,
+                   state: dict | None = None,
+                   return_state: bool = False):
+    """RWKV-6 time mixing over a sequence (chunked recurrence).
+
+    p: mu_{r,k,v,w,g} (D,), lora_a_* (D,R), lora_b_* (R,D),
+       w0 (D,), wr/wk/wv/wg (D,D), wo (D,D), u (H, dk),
+       ln_scale (D,) — per-head group norm scale.
+    """
+    B, T, D = x.shape
+    H = D // head_dim
+    prev = state["shift"] if state is not None else None
+    xx = _token_shift(x, prev)
+
+    xr = _ddlerp(x, xx, p["mu_r"], p["lora_a_r"], p["lora_b_r"])
+    xk = _ddlerp(x, xx, p["mu_k"], p["lora_a_k"], p["lora_b_k"])
+    xv = _ddlerp(x, xx, p["mu_v"], p["lora_a_v"], p["lora_b_v"])
+    xw = _ddlerp(x, xx, p["mu_w"], p["lora_a_w"], p["lora_b_w"])
+    xg = _ddlerp(x, xx, p["mu_g"], p["lora_a_g"], p["lora_b_g"])
+
+    r = jnp.einsum("btd,de->bte", xr, p["wr"], preferred_element_type=F32)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"], preferred_element_type=F32)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"],
+                               preferred_element_type=F32))
+    # data-dependent decay (per channel), kept in log space
+    lw = p["w0"].astype(F32) + jnp.einsum(
+        "btr,rd->btd",
+        jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["lora_a_w2"],
+                            preferred_element_type=F32)),
+        p["lora_b_w2"], preferred_element_type=F32)
+    # Clamp so exp(-cumsum(logw)) stays inside f32 range for chunk<=32
+    # (the chunked form divides by within-chunk decay; see DESIGN.md §9).
+    logw = -jnp.exp(jnp.clip(lw, -8.0, 1.0))                # log decay < 0
+
+    r = r.reshape(B, T, H, head_dim)
+    k = k.reshape(B, T, H, head_dim)
+    v = v.reshape(B, T, H, head_dim)
+    logw = logw.reshape(B, T, H, head_dim)
+    u = p["u"].astype(F32)                                   # (H, dk)
+
+    n_chunks, ck = _chunks_of(T, chunk)
+    rc = r.reshape(B, n_chunks, ck, H, head_dim).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, n_chunks, ck, H, head_dim).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, ck, H, head_dim).transpose(1, 0, 2, 3, 4)
+    wc = logw.reshape(B, n_chunks, ck, H, head_dim).transpose(1, 0, 2, 3, 4)
+
+    def outer(S, inputs):
+        rr, kk, vv, ww = inputs                 # (B, ck, H, dk)
+        cw = jnp.cumsum(ww, axis=1)             # inclusive log-decay prefix
+        # inter-chunk: o_t += (r_t * exp(cw_t - w_t ... )) hmm: state S is
+        # pre-chunk; decay from chunk start to t inclusive of w_t is cw_t.
+        # Contribution of S to o_t: r_t . (diag(exp(cw_{t-1})) S) where
+        # cw_{t-1} = cw_t - ww_t.
+        decay_in = jnp.exp(cw - ww)             # (B, ck, H, dk)
+        o_inter = jnp.einsum("bthk,bhkv->bthv", rr.astype(F32) * decay_in, S,
+                             preferred_element_type=F32)
+        # intra-chunk: pairwise decays exp(cw_{t-1} - cw_s) for s < t,
+        # bonus u at s == t.
+        qd = rr.astype(F32) * decay_in          # (B,t,H,dk)
+        kd = kk.astype(F32) * jnp.exp(-cw)      # (B,s,H,dk)
+        att = jnp.einsum("bthk,bshk->bhts", qd, kd,
+                         preferred_element_type=F32)
+        ti = jnp.arange(ck)[:, None]
+        si = jnp.arange(ck)[None, :]
+        att = jnp.where((si < ti)[None, None], att, 0.0)
+        bonus = jnp.einsum("bthk,bthk->bth", rr.astype(F32),
+                           u[None, None] * kk.astype(F32))
+        o_intra = jnp.einsum("bhts,bshv->bthv", att, vv.astype(F32),
+                             preferred_element_type=F32)
+        o_intra = o_intra + bonus[..., None] * vv.astype(F32)
+        # state update to end of chunk: S' = diag(exp(cw_L)) S +
+        #   sum_s exp(cw_L - cw_s) k_s v_s^T
+        cw_last = cw[:, -1:]                     # (B,1,H,dk)
+        S_new = jnp.exp(cw_last[:, 0])[..., None] * S \
+            + jnp.einsum("bshk,bshv->bhkv",
+                         kk.astype(F32) * jnp.exp(cw_last - cw),
+                         vv.astype(F32), preferred_element_type=F32)
+        return S_new, o_inter + o_intra
+
+    S0 = (state["wkv"] if state is not None
+          else jnp.zeros((B, H, head_dim, head_dim), F32))
+    S_final, os_ = jax.lax.scan(outer, S0, (rc, kc, vc, wc))
+    o = os_.transpose(1, 0, 2, 3, 4).reshape(B, T, H, head_dim)
+
+    # per-head group norm, then gate and output projection
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + 64e-5)
+    o = o.reshape(B, T, D) * p["ln_scale"].astype(F32)
+    o = (o * g).astype(x.dtype)
+    out = jnp.einsum("btd,de->bte", o, p["wo"],
+                     preferred_element_type=F32).astype(x.dtype)
+    if return_state:
+        return out, {"shift": x[:, -1:], "wkv": S_final}
+    return out
+
+
+def rwkv6_time_mix_decode(x: jax.Array, state: dict, p: dict, *,
+                          head_dim: int) -> tuple[jax.Array, dict]:
+    """Single-token RWKV-6 step (recurrent form). x (B, 1, D)."""
+    out, new_state = rwkv6_time_mix(x, p, head_dim=head_dim, chunk=1,
+                                    state=state, return_state=True)
+    return out, new_state
+
+
+def rwkv6_channel_mix(x: jax.Array, p: dict,
+                      state: dict | None = None,
+                      return_state: bool = False):
+    """RWKV-6 channel mix: r = sigmoid(Wr xr); k = relu(Wk xk)^2;
+    out = r * (Wv k). p: mu_r, mu_k (D,), wr (D,D), wk (D,F), wv (F,D)."""
+    prev = state["shift"] if state is not None else None
+    xx = _token_shift(x, prev)
+    xr = x + (xx - x) * p["mu_r"].astype(x.dtype)
+    xk = x + (xx - x) * p["mu_k"].astype(x.dtype)
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"],
+                                  preferred_element_type=F32))
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["wk"],
+                                          preferred_element_type=F32)))
+    out = r * jnp.einsum("btf,fd->btd", k.astype(x.dtype), p["wv"],
+                         preferred_element_type=F32)
+    out = out.astype(x.dtype)
+    if return_state:
+        return out, {"shift": x[:, -1:]}
+    return out
+
+
+def rwkv6_init_state(B: int, D: int, head_dim: int, dtype) -> dict:
+    H = D // head_dim
+    return {
+        "time": {"shift": jnp.zeros((B, 1, D), dtype),
+                 "wkv": jnp.zeros((B, H, head_dim, head_dim), F32)},
+        "channel": {"shift": jnp.zeros((B, 1, D), dtype)},
+    }

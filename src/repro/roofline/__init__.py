@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from repro.roofline.hlo_parse import collective_bytes, parse_hlo_shapes
+from repro.roofline.analysis import RooflineTerms, compute_terms
+
+__all__ = ["collective_bytes", "parse_hlo_shapes", "RooflineTerms",
+           "compute_terms"]

@@ -1,0 +1,77 @@
+"""Three-term roofline from dry-run measurements (DESIGN.md §7).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+Loop-body composition: XLA's cost_analysis counts a while-loop body once
+(verified experimentally), so totals are composed as
+
+    total = full_graph_cost + (n_superblocks - 1) * block_cost
+
+where block_cost is measured by separately lowering one superblock (fwd,
+and fwd+bwd for training) under the same mesh/shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                   # PER-CHIP (SPMD cost_analysis is local)
+    hbm_bytes: float               # PER-CHIP
+    collective_bytes: float        # PER-CHIP wire bytes (ring model)
+    model_flops: float             # GLOBAL (6*N*D etc.)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0      # MODEL_FLOPS / HLO_FLOPs
+    roofline_fraction: float = 0.0  # model-flops time / bound
+
+    def finalize(self) -> "RooflineTerms":
+        # SPMD cost_analysis + HLO operand shapes are shard-local, so all
+        # three numerators here are per-chip; the spec's
+        # global/(chips * rate) is identical to per_chip/rate.
+        self.compute_s = self.flops / PEAK_FLOPS_BF16
+        self.memory_s = self.hbm_bytes / HBM_BW
+        self.collective_s = self.collective_bytes / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_ratio = (self.model_flops / (self.flops * self.chips)
+                             if self.flops else 0.0)
+        bound = max(self.compute_s, self.memory_s, self.collective_s)
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        self.roofline_fraction = ideal / bound if bound > 0 else 0.0
+        return self
+
+
+def compute_terms(record: dict) -> RooflineTerms:
+    """Build roofline terms from one dry-run JSON record."""
+    n_sb = record["n_superblocks"]
+    full = record["cost"]
+    blk = record.get("block_cost")         # may be None for tiny models
+    extra = (n_sb - 1) if blk else 0
+    flops = full.get("flops", 0.0) + extra * (blk or {}).get("flops", 0.0)
+    hbm = full.get("bytes accessed", 0.0) \
+        + extra * (blk or {}).get("bytes accessed", 0.0)
+    coll = record["collectives"]["wire_bytes_total"] \
+        + extra * record.get("block_collectives", {}).get(
+            "wire_bytes_total", 0.0)
+    return RooflineTerms(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        chips=record["chips"],
+        flops=flops, hbm_bytes=hbm,
+        collective_bytes=coll,
+        model_flops=record["model_flops"],
+    ).finalize()

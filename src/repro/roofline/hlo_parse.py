@@ -1,0 +1,133 @@
+"""Post-optimization HLO text parsing: collective bytes per category.
+
+cost_analysis() exposes FLOPs and bytes-accessed but NOT collective
+traffic, so we parse ``compiled.as_text()``: build a name -> byte-size
+symbol table from every instruction's output shape, then sum operand
+sizes for each collective op (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute), recording replica-group sizes so the
+analysis layer can convert operand bytes into per-chip wire bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g. "all-reduce(", "all-gather-start(", "all-reduce-scatter..." etc.
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of possibly-tuple shape text like
+    '(f32[8,128]{1,0}, f32[64]{0})' or 'bf16[2,4096]{1,0}'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_hlo_shapes(hlo_text: str) -> dict[str, int]:
+    """name -> output bytes for every instruction in the module."""
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # shape text precedes the opcode: take everything up to the last
+        # shape group before an opcode word. Simplest: parse shapes in the
+        # prefix before the first '(' that follows the opcode... in
+        # practice the output shape(s) lead the RHS.
+        opm = re.search(r"[a-z][\w\-]*\(", rhs)
+        prefix = rhs[: opm.start()] if opm else rhs
+        sizes[name] = _shape_bytes(prefix)
+    return sizes
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-category operand bytes + estimated per-chip wire bytes."""
+    operand_bytes: dict[str, float]
+    wire_bytes: dict[str, float]
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:                      # replica_groups=[ngroups,group_size]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int = 1) -> CollectiveStats:
+    """Sum operand bytes of every collective op in the module.
+
+    Wire-byte model per chip (ring algorithms over a group of size g):
+      all-reduce:        2 * (g-1)/g * operand
+      all-gather:        (g-1)/g * output          (operand = output/g)
+      reduce-scatter:    (g-1)/g * operand
+      all-to-all:        (g-1)/g * operand
+      collective-permute: operand
+    """
+    sizes = parse_hlo_shapes(hlo_text)
+    op_bytes: dict[str, float] = defaultdict(float)
+    wire: dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        cm = _COLL_RE.search(line)
+        if not cm or "-done(" in line:   # count start, skip done halves
+            continue
+        kind = cm.group(1)
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        # operands: names inside the call parens
+        call = rhs[rhs.index("("):] if "(" in rhs else ""
+        ops = [sizes.get(nm, 0) for nm in _OPERAND_RE.findall(call)]
+        operand = float(sum(ops))
+        out = float(sizes.get(m.group(1), 0))
+        g = _group_size(line, n_devices)
+        op_bytes[kind] += operand
+        if kind == "all-reduce":
+            wire[kind] += 2.0 * (g - 1) / g * operand
+        elif kind == "all-gather":
+            wire[kind] += (g - 1) / g * out
+        elif kind in ("reduce-scatter", "all-to-all"):
+            wire[kind] += (g - 1) / g * operand
+        else:  # collective-permute
+            wire[kind] += operand
+    return CollectiveStats(dict(op_bytes), dict(wire))

@@ -1,0 +1,5 @@
+"""Batched serving: prefill + cached decode with request batching."""
+
+from repro.serving.server import BatchedServer, Request
+
+__all__ = ["BatchedServer", "Request"]

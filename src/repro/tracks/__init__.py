@@ -1,0 +1,1 @@
+"""Aviation substrate: datasets, hierarchy, organize/archive/process workflow."""

@@ -1,0 +1,86 @@
+"""Workflow step 2: archive organized leaf directories (paper §III.A).
+
+Many small files => massive random I/O when thousands of parallel
+processes touch them (and Lustre's 1 MB block size wastes space). The fix:
+one zip archive per *bottom* directory, replicating the first three tiers
+of the hierarchy in a new parent directory.
+
+One Task per aircraft directory; runs under a self-scheduled Manager or a
+static cyclic distribution (the paper's §IV.B result: cyclic >90 % faster
+than block here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import zipfile
+
+from repro.core.messages import Task
+
+LUSTRE_BLOCK_BYTES = 1_000_000   # every file occupies >= 1 MB on Lustre
+
+
+@dataclasses.dataclass
+class ArchiveResult:
+    src_dir: str
+    zip_path: str
+    files: int
+    bytes_in: int
+    bytes_out: int
+    lustre_blocks_saved: int
+
+
+class Archiver:
+    """Zips one aircraft directory into the mirrored archive tree."""
+
+    def __init__(self, organized_root: str, archive_root: str,
+                 compression: int = zipfile.ZIP_STORED):
+        self.organized_root = organized_root
+        self.archive_root = archive_root
+        self.compression = compression
+
+    def __call__(self, task: Task) -> ArchiveResult:
+        return self.archive_dir(task.payload or task.task_id)
+
+    def archive_dir(self, rel_dir: str) -> ArchiveResult:
+        """rel_dir: '<year>/<type>/<seats>/<bucket>/<icao24>'."""
+        src = os.path.join(self.organized_root, rel_dir)
+        parts = rel_dir.split("/")
+        # Replicate the first three tiers; the leaf becomes '<icao>.zip'.
+        parent = os.path.join(self.archive_root, *parts[:-1])
+        os.makedirs(parent, exist_ok=True)
+        zip_path = os.path.join(parent, parts[-1] + ".zip")
+        files = 0
+        bytes_in = 0
+        tmp = zip_path + ".tmp"
+        with zipfile.ZipFile(tmp, "w", self.compression) as zf:
+            for name in sorted(os.listdir(src)):
+                p = os.path.join(src, name)
+                if os.path.isfile(p):
+                    zf.write(p, arcname=name)
+                    files += 1
+                    bytes_in += os.path.getsize(p)
+        os.replace(tmp, zip_path)   # atomic commit
+        bytes_out = os.path.getsize(zip_path)
+        saved = max(files - 1, 0) * LUSTRE_BLOCK_BYTES
+        return ArchiveResult(
+            src_dir=src, zip_path=zip_path, files=files,
+            bytes_in=bytes_in, bytes_out=bytes_out,
+            lustre_blocks_saved=saved)
+
+
+def archive_tasks_from_tree(organized_root: str) -> list[Task]:
+    """One Task per aircraft dir. Sorted by path => filename order, the
+    LLMapReduce default that makes block distribution pathological."""
+    tasks = []
+    for dirpath, dirnames, filenames in os.walk(organized_root):
+        if filenames and not dirnames:
+            rel = os.path.relpath(dirpath, organized_root)
+            size = sum(os.path.getsize(os.path.join(dirpath, f))
+                       for f in filenames)
+            tasks.append(Task(task_id=rel.replace(os.sep, "/"),
+                              size_bytes=size, timestamp=0.0,
+                              payload=rel.replace(os.sep, "/")))
+    tasks.sort(key=lambda t: t.task_id)
+    return tasks

@@ -1,0 +1,167 @@
+"""Sharded checkpointing with atomic commit, async save, auto-resume.
+
+Layout (one directory per step)::
+
+    <dir>/step_000123/
+        manifest.json          # tree structure, shapes, dtypes
+        leaf_00000.npy ...     # one file per leaf
+    <dir>/step_000123.COMMITTED  # rename-commit marker
+
+Fault-tolerance contract:
+  * a crash mid-save leaves no COMMITTED marker => restore ignores it;
+  * saves run on a background thread (training continues);
+  * restore re-shards onto ANY mesh via device_put with the target
+    shardings — this is what elastic re-mesh uses after a worker loss.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy round-trips ml_dtypes (bfloat16, fp8) as raw void — view-cast back
+# using the dtype recorded in the manifest.
+_EXOTIC_DTYPES = {
+    "bfloat16": ml_dtypes.bfloat16,
+    "float8_e4m3fn": getattr(ml_dtypes, "float8_e4m3fn", None),
+    "float8_e5m2": getattr(ml_dtypes, "float8_e5m2", None),
+}
+
+
+def _load_leaf(path: str, dtype_str: str) -> np.ndarray:
+    arr = np.load(path)
+    if arr.dtype.kind == "V" and dtype_str in _EXOTIC_DTYPES:
+        arr = arr.view(_EXOTIC_DTYPES[dtype_str])
+    return arr
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Synchronous sharded save with atomic commit."""
+    leaves, treedef = _flatten(tree)
+    tag = f"step_{step:09d}"
+    tmp = os.path.join(ckpt_dir, tag + ".tmp")
+    final = os.path.join(ckpt_dir, tag)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "n_leaves": len(leaves),
+                "treedef": str(treedef),
+                "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+        manifest["leaves"].append(
+            {"shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    # commit marker LAST: restore only trusts marked checkpoints
+    open(final + ".COMMITTED", "w").close()
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(list_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        tag = os.path.join(ckpt_dir, f"step_{s:09d}")
+        for p in (tag + ".COMMITTED", tag):
+            if os.path.isdir(p):
+                shutil.rmtree(p)
+            elif os.path.exists(p):
+                os.remove(p)
+
+
+def list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)\.COMMITTED", name)
+        if m and os.path.isdir(os.path.join(ckpt_dir, name[:-10])):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def restore(ckpt_dir: str, step: int, template: Any,
+            shardings: Optional[Any] = None) -> Any:
+    """Restore a step into the template's tree structure; optionally
+    device_put onto target shardings (elastic re-mesh path)."""
+    tag = os.path.join(ckpt_dir, f"step_{step:09d}")
+    _, treedef = _flatten(template)
+    with open(os.path.join(tag, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = [_load_leaf(os.path.join(tag, f"leaf_{i:05d}.npy"),
+                         manifest["leaves"][i]["dtype"])
+              for i in range(manifest["n_leaves"])]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+def restore_latest(ckpt_dir: str, template: Any,
+                   shardings: Optional[Any] = None
+                   ) -> tuple[Optional[Any], int]:
+    steps = list_steps(ckpt_dir)
+    if not steps:
+        return None, -1
+    step = steps[-1]
+    return restore(ckpt_dir, step, template, shardings), step
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing; at most one save in flight."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                step, tree = item
+                try:
+                    save(self.ckpt_dir, step, tree, keep=self.keep)
+                except BaseException as e:   # surfaced on next save/close
+                    self._err = e
+            finally:
+                self._q.task_done()
+
+    def save_async(self, step: int, tree: Any) -> None:
+        if self._err:
+            raise RuntimeError("previous async save failed") from self._err
+        # Snapshot to host BEFORE queueing so training can mutate buffers.
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+        self._q.put((step, host_tree))
+
+    def wait(self) -> None:
+        self._q.join()
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=10)
+        if self._err:
+            raise RuntimeError("async save failed") from self._err

@@ -1,0 +1,44 @@
+"""LR schedules: cosine, linear, and WSD (minicpm-2b's warmup-stable-decay).
+
+Pure functions step -> lr, jit-safe (jnp ops on traced step).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int, peak: float):
+    return peak * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+
+
+def cosine(step, *, peak: float, warmup_steps: int, total_steps: int,
+           floor: float = 0.1):
+    warm = linear_warmup(step, warmup_steps, peak)
+    t = jnp.clip((step - warmup_steps)
+                 / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, peak * cos)
+
+
+def wsd(step, *, peak: float, warmup_steps: int, stable_steps: int,
+        decay_steps: int, floor: float = 0.1):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear warmup,
+    long constant plateau, then a short exponential-ish decay to floor."""
+    warm = linear_warmup(step, warmup_steps, peak)
+    decay_start = warmup_steps + stable_steps
+    t = jnp.clip((step - decay_start) / jnp.maximum(decay_steps, 1),
+                 0.0, 1.0)
+    decay = peak * (floor ** t)         # exponential decay to floor*peak
+    return jnp.where(step < warmup_steps, warm,
+                     jnp.where(step < decay_start, peak, decay))
+
+
+def get_schedule(name: str, **kw):
+    if name == "cosine":
+        return lambda s: cosine(s, **kw)
+    if name == "wsd":
+        return lambda s: wsd(s, **kw)
+    if name == "constant":
+        return lambda s: jnp.asarray(kw["peak"])
+    raise ValueError(name)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run against the real single CPU device (the 512-device flag is
+# set ONLY inside launch/dryrun.py, never globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

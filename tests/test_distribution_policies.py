@@ -1,0 +1,75 @@
+"""Block/cyclic distribution rules (paper §II.D) + properties."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.distribution import (
+    DistributionPolicy, assignment_imbalance, block_distribution,
+    cyclic_distribution, distribute)
+from repro.core.messages import (
+    Task, organize_by_filename, organize_chronological,
+    organize_largest_first, organize_random)
+
+
+def test_paper_examples():
+    # "if there are two processes and four tasks, process #1 would be
+    # allocated tasks 1-2 and process #2 would be responsible for 3-4"
+    assert block_distribution([1, 2, 3, 4], 2) == [[1, 2], [3, 4]]
+    # cyclic: "the first process would be allocated tasks 1 and 3"
+    assert cyclic_distribution([1, 2, 3, 4], 2) == [[1, 3], [2, 4]]
+
+
+@given(st.lists(st.integers(), max_size=200), st.integers(1, 17))
+@settings(max_examples=50, deadline=None)
+def test_policies_partition_exactly(tasks, n):
+    for fn in (block_distribution, cyclic_distribution):
+        parts = fn(tasks, n)
+        assert len(parts) == n
+        flat = [t for p in parts for t in p]
+        assert sorted(flat) == sorted(tasks)
+
+
+@given(st.lists(st.integers(), min_size=1, max_size=100), st.integers(1, 9))
+@settings(max_examples=50, deadline=None)
+def test_block_is_consecutive_and_balanced(tasks, n):
+    parts = block_distribution(tasks, n)
+    # concatenation preserves order
+    assert [t for p in parts for t in p] == list(tasks)
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1
+
+
+@given(st.lists(st.integers(), min_size=1, max_size=100), st.integers(1, 9))
+@settings(max_examples=50, deadline=None)
+def test_cyclic_stride(tasks, n):
+    parts = cyclic_distribution(tasks, n)
+    for w, p in enumerate(parts):
+        assert p == list(tasks)[w::n]
+
+
+def test_distribute_dispatch():
+    assert distribute([1, 2, 3], 2, "block") == [[1, 2], [3]]
+    assert distribute([1, 2, 3], 2, DistributionPolicy.CYCLIC) == \
+        [[1, 3], [2]]
+
+
+def test_organizers():
+    tasks = [Task("b", size_bytes=5, timestamp=2.0),
+             Task("a", size_bytes=9, timestamp=3.0),
+             Task("c", size_bytes=1, timestamp=1.0)]
+    assert [t.task_id for t in organize_chronological(tasks)] == \
+        ["c", "b", "a"]
+    assert [t.task_id for t in organize_largest_first(tasks)] == \
+        ["a", "b", "c"]
+    assert [t.task_id for t in organize_by_filename(tasks)] == \
+        ["a", "b", "c"]
+    r = organize_random(tasks, seed=0)
+    assert sorted(t.task_id for t in r) == ["a", "b", "c"]
+    assert organize_random(tasks, seed=0) == organize_random(tasks, seed=0)
+
+
+def test_imbalance_metric():
+    even = [[Task("a", size_bytes=5)], [Task("b", size_bytes=5)]]
+    skew = [[Task("a", size_bytes=9)], [Task("b", size_bytes=1)]]
+    assert assignment_imbalance(even) == 1.0
+    assert assignment_imbalance(skew) == 1.8

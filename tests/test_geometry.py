@@ -1,0 +1,113 @@
+"""Aerodrome query-generation geometry (paper §III.B, Figs 1-2)."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.geometry import (
+    SyntheticGlobeDEM, generate_queries, make_bounding_boxes,
+    synthetic_aerodromes)
+from repro.geometry.queries import HARD_MSL_CEILING_FT
+from repro.geometry.rectilinear import (
+    connected_components, decompose_mask_into_rectangles,
+    rasterize_circles, rectangles_cover_mask, split_large_rectangles)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_decompose_exact_cover_random_masks(seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((rng.integers(1, 24), rng.integers(1, 24))) < 0.45
+    rects = decompose_mask_into_rectangles(mask)
+    assert rectangles_cover_mask(rects, mask)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 12))
+@settings(max_examples=30, deadline=None)
+def test_split_preserves_cover_and_bounds(seed, max_cells):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((16, 16)) < 0.5
+    rects = split_large_rectangles(
+        decompose_mask_into_rectangles(mask), max_cells)
+    assert rectangles_cover_mask(rects, mask)
+    for r0, c0, r1, c1 in rects:
+        assert (r1 - r0) * (c1 - c0) <= max(max_cells, 1)
+
+
+def test_connected_components_partition():
+    rng = np.random.default_rng(1)
+    mask = rng.random((30, 30)) < 0.4
+    comps = connected_components(mask)
+    acc = np.zeros_like(mask, dtype=int)
+    for c in comps:
+        acc += c
+    assert np.array_equal(acc > 0, mask)
+    assert acc.max() <= 1                      # disjoint
+
+
+@pytest.fixture(scope="module")
+def boxes():
+    return make_bounding_boxes()
+
+
+def test_paper_box_count(boxes):
+    """Tuned to the paper's 695 bounding boxes (synthetic aerodrome set
+    lands at 696 — within one box)."""
+    assert abs(len(boxes) - 695) <= 2
+
+
+def test_boxes_cover_every_aerodrome(boxes):
+    """Every in-class aerodrome lies inside some box (its circle's
+    center is in the union, so a covering rectangle must contain it)."""
+    aero = [a for a in synthetic_aerodromes()
+            if a.airspace_class in ("B", "C", "D")]
+    for a in aero:
+        assert any(b.lat_min - 1e-9 <= a.lat <= b.lat_max + 1e-9 and
+                   b.lon_min - 1e-9 <= a.lon <= b.lon_max + 1e-9
+                   for b in boxes), a.ident
+
+
+def test_msl_range_rules(boxes):
+    for b in boxes:
+        assert b.msl_max_ft <= HARD_MSL_CEILING_FT + 1e-6
+        assert b.msl_min_ft <= b.msl_max_ft
+        assert b.elev_min_ft <= b.elev_max_ft + 1e-6
+        assert -10 <= b.timezone_offset_h <= 0     # continental US
+
+
+def test_query_generation(boxes):
+    qs = generate_queries(boxes, n_days=196, n_groups=64)
+    assert len(qs) == len(boxes) * 196
+    assert len({q.query_id for q in qs}) == len(qs)
+    groups = {}
+    for q in qs:
+        groups.setdefault(q.group, set()).add(q.box_id)
+    # greedy largest-first balancing: every group used
+    assert len(groups) == 64
+    # every query's SQL carries its box's ranges
+    q0 = qs[0]
+    b0 = boxes[q0.box_id]
+    assert f"{b0.lat_min:.4f}" in q0.sql
+    assert "hour >=" in q0.sql
+
+
+def test_group_area_balance(boxes):
+    """Largest-first greedy grouping: group areas within 3x of mean."""
+    qs = generate_queries(boxes, n_days=1, n_groups=64)
+    area = {g: 0.0 for g in range(64)}
+    for q in qs:
+        area[q.group] += boxes[q.box_id].area_deg2
+    vals = np.array(list(area.values()))
+    assert vals.max() < 3.0 * vals.mean()
+
+
+def test_dem_bilinear_between_grid():
+    dem = SyntheticGlobeDEM(cells_per_deg=4)
+    lat = np.array([35.0, 40.125, 44.9])
+    lon = np.array([-100.0, -90.06, -75.3])
+    z = dem.bilinear(lat, lon)
+    assert z.shape == (3,)
+    assert np.all(z >= 0)
+    lo, hi = dem.minmax_in_box(34.9, 35.1, -100.1, -99.9)
+    assert lo <= z[0] <= hi + 1e-6 or abs(z[0] - lo) < 50

@@ -1,0 +1,128 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties.
+
+Kernels run in interpret mode on CPU (the TPU BlockSpec tiling is
+exercised structurally; numerics match the oracle)."""
+
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tracks(B, N, C, M, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    t_in = np.sort(rng.uniform(0, 900, (B, N)), axis=1).astype(dtype)
+    count = rng.integers(2, N + 1, size=B).astype(np.int32)
+    for b in range(B):
+        c = count[b]
+        t_in[b, c:] = t_in[b, c - 1] + np.arange(1, N - c + 1)
+    v_in = rng.normal(size=(B, C, N)).astype(dtype)
+    t_out = rng.uniform(-100, 1000, (B, M)).astype(dtype)
+    return t_in, v_in, count, t_out
+
+
+@pytest.mark.parametrize("B,N,C,M", [
+    (1, 16, 1, 32), (3, 100, 3, 257), (2, 128, 5, 512),
+    (4, 300, 2, 64), (2, 1024, 3, 1024),
+])
+def test_track_interp_matches_oracle(B, N, C, M):
+    t_in, v_in, count, t_out = _tracks(B, N, C, M, seed=B * 7 + M)
+    got = np.asarray(ops.track_interp(t_in, v_in, count, t_out))
+    want = np.asarray(ref.track_interp_ref(t_in, v_in, count, t_out))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_track_interp_exact_at_knots():
+    """Interpolating at the observation times returns the observations."""
+    B, N, C = 2, 64, 3
+    t_in, v_in, count, _ = _tracks(B, N, C, 1, seed=9)
+    got = np.asarray(ops.track_interp(t_in, v_in, count, t_in))
+    for b in range(B):
+        c = count[b]
+        np.testing.assert_allclose(
+            got[b, :c], v_in[b, :, :c].T, rtol=1e-4, atol=1e-3)
+
+
+def test_track_interp_clamps_out_of_range():
+    B, N, C, M = 1, 32, 2, 16
+    t_in, v_in, count, _ = _tracks(B, N, C, M, seed=3)
+    t_out = np.full((B, M), -1e6, np.float32)
+    got = np.asarray(ops.track_interp(t_in, v_in, count, t_out))
+    np.testing.assert_allclose(
+        got[0], np.tile(v_in[0, :, 0], (M, 1)), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("B,M", [(1, 16), (3, 240), (2, 1024), (5, 100)])
+def test_dynamic_rates_matches_oracle(B, M):
+    rng = np.random.default_rng(B * 11 + M)
+    v = np.zeros((B, 3, M), np.float32)
+    v[:, 0] = 40 + np.cumsum(rng.normal(0, 1e-4, (B, M)), axis=1)
+    v[:, 1] = -100 + np.cumsum(rng.normal(0, 1e-4, (B, M)), axis=1)
+    v[:, 2] = 1000 + np.cumsum(rng.normal(0, 2, (B, M)), axis=1)
+    count = rng.integers(2, M + 1, size=B).astype(np.int32)
+    got = np.asarray(ops.dynamic_rates(v, count, 1.0))
+    want = np.asarray(ref.dynamic_rates_ref(v, count, 1.0))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_dynamic_rates_constant_track_is_zero():
+    v = np.full((1, 3, 64), 1.0, np.float32)
+    v[0, 0] = 40.0
+    v[0, 1] = -100.0
+    v[0, 2] = 500.0
+    out = np.asarray(ops.dynamic_rates(v, np.array([64], np.int32), 1.0))
+    np.testing.assert_allclose(out[0, 0], 0.0, atol=1e-5)   # vrate
+    np.testing.assert_allclose(out[0, 1], 0.0, atol=1e-3)   # gspeed
+
+
+def test_dynamic_rates_straight_line_speed():
+    """Due-north at constant speed: gspeed == v, turn == 0."""
+    M = 128
+    v = np.zeros((1, 3, M), np.float32)
+    speed_ms = 100.0
+    v[0, 0] = 40.0 + np.arange(M) * speed_ms / 111_111.0
+    v[0, 1] = -100.0
+    v[0, 2] = 1000.0
+    out = np.asarray(ops.dynamic_rates(v, np.array([M], np.int32), 1.0))
+    # f32 lat accumulation rounds ~4e-6 deg => ~0.5 m/s noise
+    np.testing.assert_allclose(out[0, 1], speed_ms, rtol=1e-2)
+    np.testing.assert_allclose(out[0, 3], 0.0, atol=2e-2)
+
+
+@pytest.mark.parametrize("B,M,H,W", [
+    (1, 16, 64, 64), (3, 300, 200, 400), (2, 128, 128, 256),
+])
+def test_agl_lookup_matches_oracle(B, M, H, W):
+    rng = np.random.default_rng(B + M)
+    dem = rng.uniform(0, 3000, (H, W)).astype(np.float32)
+    fi = rng.uniform(2, min(H - 2, 100), (B, M)).astype(np.float32)
+    fj = rng.uniform(2, min(W - 2, 200), (B, M)).astype(np.float32)
+    alt = rng.uniform(0, 4000, (B, M)).astype(np.float32)
+    got = np.asarray(ops.agl_lookup(dem, fi, fj, alt))
+    want = np.asarray(ref.agl_lookup_ref(dem, fi, fj, alt))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_agl_lookup_wide_track_fallback():
+    """Tracks spanning multiple DEM tiles route to the oracle."""
+    rng = np.random.default_rng(5)
+    dem = rng.uniform(0, 3000, (512, 512)).astype(np.float32)
+    fi = rng.uniform(0, 500, (2, 64)).astype(np.float32)   # spans tiles
+    fj = rng.uniform(0, 500, (2, 64)).astype(np.float32)
+    alt = rng.uniform(0, 4000, (2, 64)).astype(np.float32)
+    got = np.asarray(ops.agl_lookup(dem, fi, fj, alt))
+    want = np.asarray(ref.agl_lookup_ref(dem, fi, fj, alt))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_agl_on_grid_points_is_exact():
+    rng = np.random.default_rng(6)
+    dem = rng.uniform(0, 3000, (128, 256)).astype(np.float32)
+    ii = rng.integers(0, 100, (1, 32))
+    jj = rng.integers(0, 200, (1, 32))
+    alt = np.zeros((1, 32), np.float32)
+    got = np.asarray(ops.agl_lookup(dem, ii.astype(np.float32),
+                                    jj.astype(np.float32), alt))
+    np.testing.assert_allclose(got[0], -dem[ii[0], jj[0]], rtol=1e-5)

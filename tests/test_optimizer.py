@@ -1,0 +1,156 @@
+"""Optimizer: AdamW reference check, int8 state quantization, schedules."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.train.optimizer import (
+    OptimizerConfig, apply_updates, dequantize_blockwise, global_norm,
+    init_opt_state, quantize_blockwise)
+from repro.train.schedules import cosine, get_schedule, wsd
+
+
+def _problem(seed=0, n=100):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(n,)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(7, 3)), jnp.float32)}
+    grads = {"w": jnp.asarray(rng.normal(size=(n,)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(7, 3)), jnp.float32)}
+    return params, grads
+
+
+def _reference_adamw(params, grads, m, v, t, cfg):
+    gnorm = np.sqrt(sum((np.asarray(g) ** 2).sum()
+                        for g in jax.tree_util.tree_leaves(grads)))
+    clip = min(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    out = {}
+    for k in params:
+        g = np.asarray(grads[k]) * clip
+        m[k] = cfg.b1 * m[k] + (1 - cfg.b1) * g
+        v[k] = cfg.b2 * v[k] + (1 - cfg.b2) * g * g
+        mh = m[k] / (1 - cfg.b1 ** t)
+        vh = v[k] / (1 - cfg.b2 ** t)
+        out[k] = np.asarray(params[k]) - cfg.lr * (
+            mh / (np.sqrt(vh) + cfg.eps)
+            + cfg.weight_decay * np.asarray(params[k]))
+    return out, m, v
+
+
+def test_adamw_matches_reference_fp32():
+    cfg = OptimizerConfig(lr=1e-2, state_dtype="float32")
+    params, grads = _problem()
+    state = init_opt_state(params, cfg)
+    m = {k: np.zeros_like(np.asarray(v)) for k, v in params.items()}
+    v = {k: np.zeros_like(np.asarray(vv)) for k, vv in params.items()}
+    p_ref = {k: np.asarray(vv) for k, vv in params.items()}
+    p, s = params, state
+    for t in range(1, 4):
+        p, s, _ = apply_updates(p, grads, s, cfg)
+        p_ref, m, v = _reference_adamw(p_ref, grads, m, v, t, cfg)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(p[k]), p_ref[k],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_int8_adam_converges_like_fp32():
+    """Per-element trajectory comparison is chaotic where v ~ 0 (Adam's
+    normalized step flips sign on noise), so the meaningful check is
+    optimization quality: int8-state Adam reaches the same loss as fp32
+    Adam on a least-squares problem."""
+    rng = np.random.default_rng(3)
+    A = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+
+    def loss_fn(w):
+        r = A @ w - b
+        return jnp.mean(r * r)
+
+    def run(cfg):
+        w = {"w": jnp.zeros((32,), jnp.float32)}
+        s = init_opt_state(w, cfg)
+        for _ in range(60):
+            loss, g = jax.value_and_grad(
+                lambda p: loss_fn(p["w"]))(w)
+            w, s, _ = apply_updates(w, g, s, cfg)
+        return float(loss_fn(w["w"]))
+
+    l32 = run(OptimizerConfig(lr=3e-2, weight_decay=0.0,
+                              state_dtype="float32"))
+    l8 = run(OptimizerConfig(lr=3e-2, weight_decay=0.0,
+                             state_dtype="int8"))
+    l0 = float(loss_fn(jnp.zeros((32,))))
+    opt = float(np.mean(
+        (np.asarray(A) @ np.linalg.lstsq(np.asarray(A), np.asarray(b),
+                                         rcond=None)[0]
+         - np.asarray(b)) ** 2))
+    # fp32 closed >=80 % of the closable gap; int8 matches it closely
+    assert l32 - opt < 0.2 * (l0 - opt), (l32, opt, l0)
+    assert abs(l8 - l32) < 0.05 * (l0 - opt) + 1e-4
+
+
+@given(st.integers(0, 1000), st.integers(1, 2000))
+@settings(max_examples=40, deadline=None)
+def test_quantize_roundtrip_error_bounded(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * rng.uniform(0.01, 100),
+                    jnp.float32)
+    q = quantize_blockwise(x)
+    y = dequantize_blockwise(q, x.shape)
+    # sqrt companding: |err| <= 2*sqrt(r)*bmax*(0.5/127) <= bmax/127
+    flat = np.asarray(x)
+    pad = (-len(flat)) % 256
+    blocks = np.pad(flat, (0, pad)).reshape(-1, 256)
+    bmax = np.abs(blocks).max(axis=1)
+    tol = np.repeat(bmax / 127 + 1e-7, 256)[: len(flat)]
+    assert np.all(np.abs(np.asarray(y) - flat) <= tol * 1.05)
+    # relative error for SMALL elements is bounded too (the point of
+    # companding): elements at 1e-3 of blockmax stay within ~30 %
+    r = np.abs(flat) / np.repeat(np.where(bmax > 0, bmax, 1), 256)[: len(flat)]
+    small = (r > 1e-3) & (r < 1e-2)
+    if small.any():
+        rel = np.abs(np.asarray(y) - flat)[small] / np.abs(flat)[small]
+        assert rel.max() < 0.35
+
+
+def test_sgd_path():
+    cfg = OptimizerConfig(kind="sgd", lr=0.1)
+    params, grads = _problem(5)
+    state = init_opt_state(params, cfg)
+    p, s, met = apply_updates(params, grads, state, cfg)
+    assert float(met["grad_norm"]) > 0
+    assert not np.allclose(np.asarray(p["w"]), np.asarray(params["w"]))
+
+
+def test_grad_clip_limits_update():
+    cfg = OptimizerConfig(lr=1.0, grad_clip=1e-3, weight_decay=0.0)
+    params, grads = _problem(7)
+    big = jax.tree_util.tree_map(lambda g: g * 1e6, grads)
+    state = init_opt_state(params, cfg)
+    _, _, met = apply_updates(params, big, state, cfg)
+    assert float(met["grad_norm"]) > 1e3   # raw norm reported
+
+
+def test_wsd_schedule_shape():
+    lr = get_schedule("wsd", peak=1.0, warmup_steps=10, stable_steps=80,
+                      decay_steps=10)
+    xs = np.array([float(lr(jnp.asarray(s))) for s in range(110)])
+    assert xs[0] == 0.0
+    assert abs(xs[10] - 1.0) < 1e-6
+    assert np.all(np.abs(xs[10:90] - 1.0) < 1e-6)     # plateau
+    assert xs[-1] <= 0.12                              # decayed
+    assert np.all(np.diff(xs[90:]) <= 1e-9)            # monotone decay
+
+
+def test_cosine_schedule():
+    xs = np.array([float(cosine(jnp.asarray(s), peak=2.0, warmup_steps=5,
+                                total_steps=50)) for s in range(50)])
+    assert xs.argmax() == 5
+    assert xs[-1] < xs[5]
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((4,)), "b": jnp.ones((3,))}
+    assert abs(float(global_norm(t)) - np.sqrt(7)) < 1e-6

@@ -1,0 +1,99 @@
+"""HLO collective parsing + roofline term math."""
+
+import glob
+import json
+import os
+
+import pytest
+
+from repro.roofline.analysis import RooflineTerms, compute_terms
+from repro.roofline.hlo_parse import collective_bytes, parse_hlo_shapes
+
+FAKE_HLO = """
+HloModule jit_f, num_partitions=8
+
+ENTRY %main_spmd (p0: f32[64,64]) -> f32[64,64] {
+  %p0 = f32[64,64]{1,0} parameter(0)
+  %dot = f32[64,64]{1,0} dot(%p0, %p0)
+  %all-reduce = f32[64,64]{1,0} all-reduce(%dot), channel_id=1, replica_groups={{0,2,4,6},{1,3,5,7}}, use_global_device_ids=true
+  %ag = bf16[128,64]{1,0} all-gather(%small), dimensions={0}, replica_groups=[2,4]<=[8]
+  %small = bf16[32,64]{1,0} copy(%p0)
+  %rs = f32[8,64]{1,0} reduce-scatter(%all-reduce), replica_groups={{0,1,2,3,4,5,6,7}}
+  %cp = f32[64,64]{1,0} collective-permute(%dot), source_target_pairs={{0,1}}
+  ROOT %out = f32[64,64]{1,0} add(%cp, %cp)
+}
+"""
+
+
+def test_parse_hlo_shapes():
+    sizes = parse_hlo_shapes(FAKE_HLO)
+    assert sizes["p0"] == 64 * 64 * 4
+    assert sizes["ag"] == 128 * 64 * 2
+    assert sizes["small"] == 32 * 64 * 2
+    assert sizes["rs"] == 8 * 64 * 4
+
+
+def test_collective_bytes_categories():
+    st = collective_bytes(FAKE_HLO, n_devices=8)
+    f64 = 64 * 64 * 4
+    # all-reduce over group of 4: operand f32[64,64]
+    assert st.operand_bytes["all-reduce"] == f64
+    assert abs(st.wire_bytes["all-reduce"] - 2 * 3 / 4 * f64) < 1e-6
+    # all-gather: wire ~ (g-1)/g * output, group 4
+    assert abs(st.wire_bytes["all-gather"] - 3 / 4 * 128 * 64 * 2) < 1e-6
+    # reduce-scatter over 8: operand = f64
+    assert abs(st.wire_bytes["reduce-scatter"] - 7 / 8 * f64) < 1e-6
+    # collective-permute: operand bytes
+    assert st.wire_bytes["collective-permute"] == f64
+
+
+def test_roofline_terms_math():
+    t = RooflineTerms(
+        arch="a", shape="train_4k", mesh="16x16", chips=256,
+        flops=197e12 * 0.5,            # 0.5 s of per-chip compute
+        hbm_bytes=819e9 * 0.25,        # 0.25 s of HBM
+        collective_bytes=50e9 * 1.0,   # 1.0 s of ICI
+        model_flops=197e12 * 256 * 0.4).finalize()
+    assert abs(t.compute_s - 0.5) < 1e-9
+    assert abs(t.memory_s - 0.25) < 1e-9
+    assert abs(t.collective_s - 1.0) < 1e-9
+    assert t.bottleneck == "collective"
+    assert abs(t.useful_ratio - 0.8) < 1e-9
+    assert abs(t.roofline_fraction - 0.4) < 1e-9
+
+
+def test_compute_terms_composition():
+    rec = {
+        "arch": "a", "shape": "train_4k", "mesh": "16x16", "chips": 256,
+        "n_superblocks": 10,
+        "cost": {"flops": 100.0, "bytes accessed": 10.0},
+        "block_cost": {"flops": 7.0, "bytes accessed": 1.0},
+        "collectives": {"wire_bytes_total": 20.0},
+        "block_collectives": {"wire_bytes_total": 2.0},
+        "model_flops": 1e6,
+    }
+    t = compute_terms(rec)
+    assert t.flops == 100.0 + 9 * 7.0
+    assert t.hbm_bytes == 10.0 + 9 * 1.0
+    assert t.collective_bytes == 20.0 + 9 * 2.0
+
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(DRYRUN_DIR, "*.json")),
+                    reason="dry-run records not generated yet")
+def test_dryrun_records_all_ok_and_terms_positive():
+    """Deliverable (e): every (arch x shape x mesh) cell compiled."""
+    recs = [json.load(open(p))
+            for p in glob.glob(os.path.join(DRYRUN_DIR, "*.json"))]
+    assert len(recs) >= 60            # 32 cells x 2 meshes
+    meshes = {r["mesh"] for r in recs}
+    assert meshes == {"16x16", "2x16x16"}
+    for r in recs:
+        assert r["ok"], (r["arch"], r["shape"], r["mesh"], r.get("error"))
+        t = compute_terms(r)
+        assert t.compute_s > 0 and t.memory_s > 0
+        assert t.collective_s >= 0
+        assert r["memory"].get("temp_size_in_bytes", 1) >= 0

@@ -1,0 +1,101 @@
+"""The real threaded manager/worker runtime (paper §II.D protocol)."""
+
+import threading
+import time
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.messages import Task
+from repro.core.selfsched import Manager, ManagerCheckpoint, run_self_scheduled
+
+FAST = dict(poll_interval=0.002)
+
+
+def _tasks(n, size_fn=lambda i: (i * 37) % 23 + 1):
+    return [Task(task_id=f"t{i:04d}", size_bytes=size_fn(i), timestamp=i)
+            for i in range(n)]
+
+
+def test_all_tasks_complete_exactly_once():
+    seen = []
+    lock = threading.Lock()
+
+    def fn(task):
+        with lock:
+            seen.append(task.task_id)
+        return task.size_bytes
+
+    r = run_self_scheduled(_tasks(40), 6, fn, **FAST)
+    assert sorted(seen) == sorted(t.task_id for t in _tasks(40))
+    assert len(r.results) == 40
+    assert r.messages_sent == 40
+
+
+@given(st.integers(1, 60), st.integers(1, 9), st.integers(1, 5),
+       st.sampled_from(["largest_first", "chronological", "random"]))
+@settings(max_examples=15, deadline=None)
+def test_exactly_once_property(n_tasks, n_workers, k, organization):
+    r = run_self_scheduled(
+        _tasks(n_tasks), n_workers, lambda t: 1, tasks_per_message=k,
+        organization=organization, **FAST)
+    assert len(r.results) == n_tasks
+    total_assigned = sum(s.tasks_completed for s in r.worker_stats.values())
+    assert total_assigned == n_tasks
+
+
+def test_eager_initial_allocation():
+    """Manager sends to every worker up front, before any DONE."""
+    started = []
+    gate = threading.Event()
+
+    def fn(task):
+        started.append(task.task_id)
+        gate.wait(timeout=2.0)
+        return 0
+
+    mgr = Manager(_tasks(8), 4, fn, **FAST)
+    t = threading.Thread(target=mgr.run, daemon=True)
+    t.start()
+    time.sleep(0.2)
+    assert len(started) == 4      # one in-flight per worker, none done
+    gate.set()
+    t.join(timeout=10)
+
+
+def test_worker_failure_requeues_tasks():
+    r = run_self_scheduled(
+        _tasks(30), 4, lambda t: time.sleep(0.001) or 1,
+        failure_timeout=0.15, worker_fail_after={"w0": 3}, **FAST)
+    assert len(r.results) == 30
+    assert r.failed_workers == ["w0"]
+    assert r.reassigned_tasks >= 1
+
+
+def test_task_exception_reported():
+    def fn(task):
+        if task.task_id == "t0002":
+            raise ValueError("boom")
+        return 1
+    with pytest.raises(RuntimeError, match="1 tasks failed"):
+        run_self_scheduled(_tasks(6), 2, fn, **FAST)
+
+
+def test_checkpoint_restart_skips_completed():
+    tasks = _tasks(20)
+    m = Manager(tasks, 3, lambda t: 1, **FAST)
+    m.completed = {f"t{i:04d}" for i in range(12)}
+    m.pending = [t for t in m.pending if t.task_id not in m.completed]
+    blob = m.checkpoint().dumps()
+    m2 = Manager(tasks, 3, lambda t: 1,
+                 checkpoint=ManagerCheckpoint.loads(blob), **FAST)
+    r = m2.run()
+    assert len(r.results) == 8
+
+
+def test_tasks_per_message_batches():
+    r = run_self_scheduled(_tasks(30), 2, lambda t: 1,
+                           tasks_per_message=10, **FAST)
+    assert len(r.results) == 30
+    assert r.messages_sent == 3

@@ -1,0 +1,160 @@
+"""EXPERIMENTS.md §Paper-validation: the simulator reproduces the paper's
+measured relations (Tables I-II, Figs 4-9, §IV.A-C, §V)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ARCHIVE_PHASE, ORGANIZE_PHASE, PROCESS_PHASE, RADAR_PHASE,
+    feasible_table_cells, simulate_self_scheduling, simulate_static)
+from repro.core.cost_model import LEGACY_LAUNCH_PENALTY
+from repro.tracks.datasets import (
+    aircraft_archive_manifest, monday_manifest, processing_manifest,
+    radar_message_manifest)
+
+PAPER_CHRONO = {(2048, 32): 5640, (1024, 32): 5944, (512, 32): 7493,
+                (256, 32): 11944, (1024, 16): 5963, (512, 16): 7157,
+                (256, 16): 11860, (512, 8): 6989, (256, 8): 11860}
+PAPER_SIZE = {(2048, 32): 5456, (1024, 32): 5704, (512, 32): 6608,
+              (256, 32): 11015, (1024, 16): 5568, (512, 16): 6330,
+              (256, 16): 10428, (512, 8): 6171, (256, 8): 10428}
+
+
+@pytest.fixture(scope="module")
+def organize_sims():
+    tasks = monday_manifest()
+    out = {}
+    for org in ("chronological", "largest_first"):
+        for cores, nppn in feasible_table_cells():
+            r = simulate_self_scheduling(
+                tasks, n_workers=cores - 1, nodes=cores // nppn, nppn=nppn,
+                model=ORGANIZE_PHASE, organization=org)
+            out[(org, cores, nppn)] = r
+    return out
+
+
+def test_tables_within_20pct(organize_sims):
+    for (org, cores, nppn), r in organize_sims.items():
+        paper = (PAPER_CHRONO if org == "chronological"
+                 else PAPER_SIZE)[(cores, nppn)]
+        assert abs(r.job_seconds / paper - 1) < 0.20, \
+            (org, cores, nppn, r.job_seconds, paper)
+
+
+def test_largest_first_always_wins(organize_sims):
+    """Paper: 'organizing tasks by size always outperformed
+    chronological task organization.'"""
+    for cores, nppn in feasible_table_cells():
+        size = organize_sims[("largest_first", cores, nppn)].job_seconds
+        chrono = organize_sims[("chronological", cores, nppn)].job_seconds
+        assert size <= chrono * 1.001, (cores, nppn)
+
+
+def test_min_nppn_wins_at_fixed_cores(organize_sims):
+    """Paper: 'minimizing NPPN also improved performance.'"""
+    for org in ("chronological", "largest_first"):
+        for cores in (256, 512):
+            t8 = organize_sims[(org, cores, 8)].job_seconds
+            t16 = organize_sims[(org, cores, 16)].job_seconds
+            t32 = organize_sims[(org, cores, 32)].job_seconds
+            assert t8 <= t16 * 1.01 <= t32 * 1.02, (org, cores)
+
+
+def test_fig4_half_nodes_same_performance(organize_sims):
+    """Paper Fig 4: 1024 cores/NPPN=16/size-order outperformed
+    2048 cores/NPPN=32/chronological => 50% fewer nodes, same perf."""
+    better = organize_sims[("largest_first", 1024, 16)].job_seconds
+    worse = organize_sims[("chronological", 2048, 32)].job_seconds
+    assert better < worse
+
+
+def test_fig56_size_order_minimizes_span(organize_sims):
+    """Paper Figs 5-6: size organization 'minimized the time span between
+    the slowest and fastest workers'."""
+    chrono = organize_sims[("chronological", 256, 8)]
+    size = organize_sims[("largest_first", 256, 8)]
+    assert size.worker_time_span < 0.75 * chrono.worker_time_span
+
+
+def test_fig56_nppn_shifts_distribution_not_shape(organize_sims):
+    """Paper Figs 5-6: 'reducing NPPN shifts the distribution to faster
+    times, rather than changing the distribution's shape'."""
+    lo = organize_sims[("chronological", 256, 8)]
+    hi = organize_sims[("chronological", 256, 32)]
+    med_lo = np.median([b for b in lo.worker_busy if b > 0])
+    med_hi = np.median([b for b in hi.worker_busy if b > 0])
+    assert med_lo < med_hi                               # faster
+    ratio = np.std(lo.worker_busy) / np.std(hi.worker_busy)
+    assert 0.8 < ratio < 1.25                            # same shape
+
+
+def test_fig7_tasks_per_message_degrades():
+    tasks = monday_manifest()
+    times = []
+    for k in (1, 2, 4, 8):
+        r = simulate_self_scheduling(
+            tasks, n_workers=511, nodes=64, nppn=8, model=ORGANIZE_PHASE,
+            organization="largest_first", tasks_per_message=k)
+        times.append(r.job_seconds)
+    assert times == sorted(times), times      # monotonic degradation
+
+
+def test_sec4b_cyclic_cuts_archive_time_90pct():
+    """Paper §IV.B: block->cyclic reduced archive job time by >90 %."""
+    arch = aircraft_archive_manifest()
+    rb = simulate_static(arch, n_workers=1023, nodes=64, nppn=16,
+                         model=ARCHIVE_PHASE, policy="block")
+    rc = simulate_static(arch, n_workers=1023, nodes=64, nppn=16,
+                         model=ARCHIVE_PHASE, policy="cyclic")
+    assert 1 - rc.job_seconds / rb.job_seconds > 0.90
+
+
+def test_sec4a_median_worker_minus_14pct():
+    """Paper §IV.A: self-scheduling + triples-mode cut the median worker
+    time by 14 % vs the legacy batch/block launcher."""
+    tasks = monday_manifest()
+    rs = simulate_self_scheduling(
+        tasks, n_workers=255, nodes=32, nppn=8, model=ORGANIZE_PHASE,
+        organization="largest_first")
+    rb = simulate_static(
+        tasks, n_workers=255, nodes=32, nppn=8, model=ORGANIZE_PHASE,
+        policy="block", organization="chronological",
+        legacy_launch_penalty=LEGACY_LAUNCH_PENALTY)
+    delta = rs.median_worker_busy / rb.median_worker_busy - 1
+    assert -0.18 < delta < -0.10, delta
+
+
+def test_sec4c_processing_worker_distribution():
+    """Paper §IV.C: median 13.1 h, 99.1 % < 18 h, all < 29.6 h."""
+    proc = processing_manifest()
+    r = simulate_self_scheduling(
+        proc, n_workers=1023, nodes=64, nppn=16, model=PROCESS_PHASE,
+        organization="random")
+    busy = np.array([b for b in r.worker_busy if b > 0])
+    assert abs(np.median(busy) / (13.1 * 3600) - 1) < 0.10
+    assert np.percentile(busy, 99.1) < 20 * 3600
+    assert busy.max() < 32 * 3600
+
+
+def test_sec4c_legacy_batch_needs_days():
+    """Paper: batch distribution without self-scheduling/triples-mode
+    required more than 7 days."""
+    proc = processing_manifest()
+    r = simulate_static(
+        proc, n_workers=1023, nodes=32, nppn=32, model=PROCESS_PHASE,
+        policy="block", organization="filename",
+        legacy_launch_penalty=LEGACY_LAUNCH_PENALTY)
+    assert r.job_seconds > 7 * 86400
+
+
+def test_sec5_radar_tight_span():
+    """Paper §V: median 24.34 h, span only 1.12 h, 300 tasks/message."""
+    rad = radar_message_manifest()
+    r = simulate_self_scheduling(
+        rad, n_workers=1023, nodes=128, nppn=8, model=RADAR_PHASE,
+        organization="random")
+    busy = np.array([b for b in r.worker_busy if b > 0])
+    assert abs(np.median(busy) / 87633 - 1) < 0.05
+    span_h = (busy.max() - busy.min()) / 3600
+    assert span_h < 2.5          # paper: 1.12 h; tight by construction
+    assert len(rad) == 43_969    # 13,190,700 ids / 300 per message

@@ -1,0 +1,139 @@
+"""Discrete-event simulator invariants (hypothesis)."""
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.cost_model import PhaseCostModel
+from repro.core.messages import Task
+from repro.core.simulator import (
+    merge_tasks_per_message, simulate_self_scheduling, simulate_static)
+
+MODEL = PhaseCostModel(
+    name="t", r_process=1e6, b_node=8e6, b_global=64e6,
+    cpu_rate=50e6, contention_alpha=0.001, task_overhead_s=0.01,
+    msg_overhead_s=0.001)
+
+
+def _tasks(sizes):
+    return [Task(task_id=f"t{i:04d}", size_bytes=s, timestamp=i)
+            for i, s in enumerate(sizes)]
+
+
+@st.composite
+def size_lists(draw):
+    n = draw(st.integers(1, 60))
+    return draw(st.lists(st.integers(1, 50_000_000),
+                         min_size=n, max_size=n))
+
+
+@given(size_lists(), st.integers(1, 32),
+       st.sampled_from(["largest_first", "chronological", "random"]))
+@settings(max_examples=25, deadline=None)
+def test_selfsched_completes_all_and_bounds(sizes, n_workers, org):
+    tasks = _tasks(sizes)
+    r = simulate_self_scheduling(
+        tasks, n_workers=n_workers, nodes=max(n_workers // 8, 1), nppn=8,
+        model=MODEL, organization=org)
+    assert len(r.task_records) == len(tasks)
+    assert len({t.task_id for t in r.task_records}) == len(tasks)
+    # lower bounds: serial work / workers, and the single longest task
+    durations = [rec.end_s - rec.start_s for rec in r.task_records]
+    assert r.job_seconds >= max(durations) - 1e-6
+    total_busy = sum(r.worker_busy)
+    assert r.job_seconds >= total_busy / n_workers - 1e-6
+    # conservation: busy time == sum of task durations
+    assert abs(total_busy - sum(durations)) < 1e-3 * max(total_busy, 1)
+
+
+@given(size_lists(), st.integers(1, 16),
+       st.sampled_from(["block", "cyclic"]))
+@settings(max_examples=25, deadline=None)
+def test_static_completes_all(sizes, n_workers, policy):
+    tasks = _tasks(sizes)
+    r = simulate_static(tasks, n_workers=n_workers,
+                        nodes=max(n_workers // 8, 1), nppn=8,
+                        model=MODEL, policy=policy)
+    assert len(r.task_records) == len(tasks)
+
+
+@given(size_lists())
+@settings(max_examples=20, deadline=None)
+def test_more_workers_never_slower_much(sizes):
+    """Self-scheduling with more workers shouldn't get meaningfully
+    slower (shared-I/O saturation can flatten it, not invert it)."""
+    tasks = _tasks(sizes)
+    r8 = simulate_self_scheduling(tasks, n_workers=8, nodes=1, nppn=8,
+                                  model=MODEL)
+    r32 = simulate_self_scheduling(tasks, n_workers=32, nodes=4, nppn=8,
+                                   model=MODEL)
+    assert r32.job_seconds <= r8.job_seconds * 1.10
+
+
+def test_worker_death_recovers_all_tasks():
+    tasks = _tasks([10_000_000] * 40)
+    r = simulate_self_scheduling(
+        tasks, n_workers=8, nodes=1, nppn=8, model=MODEL,
+        worker_death={0: 5.0, 3: 20.0}, failure_timeout=2.0)
+    assert len(r.task_records) == 40
+    assert set(r.dead_workers) == {0, 3}
+    assert r.reassigned_tasks >= 1
+    # dead workers processed nothing after death
+    for rec in r.task_records:
+        if rec.worker in (0, 3):
+            assert rec.end_s <= {0: 5.0, 3: 20.0}[rec.worker] + 1e-6
+
+
+def test_static_death_reassigns():
+    tasks = _tasks([5_000_000] * 24)
+    r = simulate_static(tasks, n_workers=6, nodes=1, nppn=8, model=MODEL,
+                        policy="cyclic", worker_death={1: 1.0},
+                        failure_timeout=2.0)
+    assert len(r.task_records) == 24
+
+
+def test_merge_tasks_per_message():
+    tasks = _tasks(range(1, 301))
+    merged = merge_tasks_per_message(tasks, 300)
+    assert len(merged) == 1
+    assert merged[0].size_bytes == sum(range(1, 301))
+    merged2 = merge_tasks_per_message(tasks, 100)
+    assert len(merged2) == 3
+
+
+def test_speculative_execution_exactly_once_and_helps():
+    """Backup tasks (beyond-paper): exactly-once results, and makespan
+    improves when stragglers hold the last big tasks."""
+    tasks = _tasks([20_000_000] * 30)
+    speed = [1.0] * 8
+    speed[0] = speed[1] = 0.1            # two 10x-slow workers
+    plain = simulate_self_scheduling(
+        tasks, n_workers=8, nodes=1, nppn=8, model=MODEL,
+        organization="largest_first", worker_speed=speed)
+    spec = simulate_self_scheduling(
+        tasks, n_workers=8, nodes=1, nppn=8, model=MODEL,
+        organization="largest_first", worker_speed=speed,
+        speculative=True)
+    for r in (plain, spec):
+        ids = [t.task_id for t in r.task_records]
+        assert len(ids) == len(set(ids)) == 30
+    assert spec.job_seconds < plain.job_seconds
+
+
+def test_worker_speed_slows_job():
+    tasks = _tasks([5_000_000] * 16)
+    fast = simulate_self_scheduling(tasks, n_workers=4, nodes=1, nppn=4,
+                                    model=MODEL)
+    slow = simulate_self_scheduling(tasks, n_workers=4, nodes=1, nppn=4,
+                                    model=MODEL,
+                                    worker_speed=[0.5] * 4)
+    assert slow.job_seconds > fast.job_seconds * 1.5
+
+
+def test_poll_interval_adds_latency():
+    tasks = _tasks([1_000_000] * 4)
+    fast = simulate_self_scheduling(tasks, n_workers=4, nodes=1, nppn=4,
+                                    model=MODEL, poll_interval=0.01)
+    slow = simulate_self_scheduling(tasks, n_workers=4, nodes=1, nppn=4,
+                                    model=MODEL, poll_interval=5.0)
+    assert slow.job_seconds > fast.job_seconds

@@ -1,0 +1,67 @@
+"""Triples-mode exclusive-allocation arithmetic (paper §II.C)."""
+
+import pytest
+
+from repro.core.triples import (
+    DEFAULT_ALLOCATION_CORES, NodeType, TriplesConfig, TriplesError,
+    UPGRADED_ALLOCATION_CORES, feasible_table_cells, paper_configs)
+
+
+def test_exclusive_mode_charges_full_nodes():
+    c = TriplesConfig(nodes=4, nppn=8)
+    assert c.allocated_cores == 4 * 64
+    assert c.total_processes == 32
+
+
+def test_max_nodes_is_64_at_default_allocation():
+    assert TriplesConfig.max_nodes() == 64
+    TriplesConfig(nodes=64, nppn=32)          # fits
+    with pytest.raises(TriplesError):
+        TriplesConfig(nodes=65, nppn=32)      # 65*64 > 4096
+
+
+def test_two_slot_processes_halve_worker_count():
+    # paper: 6 GB jobs need 2 slots; 2048 workers x 2 slots = 4096 cores
+    c = TriplesConfig(nodes=64, nppn=32, slots_per_process=2)
+    assert c.total_processes == 2048
+    assert c.gb_per_process == 6
+    with pytest.raises(TriplesError):
+        TriplesConfig(nodes=64, nppn=33, slots_per_process=2)  # >64 slots
+
+
+def test_upgraded_allocation_allows_128_nodes():
+    c = TriplesConfig(nodes=128, nppn=8, threads_per_process=2,
+                      allocation_cores=UPGRADED_ALLOCATION_CORES)
+    assert c.allocated_cores == 8192
+    with pytest.raises(TriplesError):
+        TriplesConfig(nodes=128, nppn=8,
+                      allocation_cores=DEFAULT_ALLOCATION_CORES)
+
+
+def test_table_cells_match_paper_dashes():
+    """Tables I/II have dashes exactly where nodes would exceed 64."""
+    cells = set(feasible_table_cells())
+    assert (2048, 32) in cells
+    assert (2048, 16) not in cells      # 128 nodes > 64
+    assert (2048, 8) not in cells
+    assert (1024, 8) not in cells       # 128 nodes > 64
+    assert (1024, 16) in cells
+    assert len(cells) == 9              # 12 cells - 3 dashes
+
+
+def test_paper_configs_all_valid():
+    cfgs = paper_configs()
+    assert "organize_c2048_n32" in cfgs
+    assert cfgs["process_64n_nppn16"].total_processes == 1024
+    assert cfgs["radar_128n_nppn8"].total_processes == 1024
+    assert cfgs["radar_128n_nppn8"].threads_per_process == 2
+
+
+def test_recommendation_warnings():
+    assert TriplesConfig(nodes=2, nppn=40).validate_recommended()
+    assert not TriplesConfig(nodes=2, nppn=16).validate_recommended()
+
+
+def test_mesh_shape_from_triple():
+    c = TriplesConfig(nodes=2, nppn=16, threads_per_process=2)
+    assert c.mesh_shape(chips_per_node=4) == (2, 16, 8)
