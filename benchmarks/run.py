@@ -3,25 +3,70 @@
 Prints ``name,us_per_call,derived`` CSV rows:
   * paper_tables: Tables I/II + Figs 4-9 + §IV.A/B/C + §V headline
     numbers, reproduced by the calibrated full-scale simulator;
+  * beyond_paper: beyond-paper scenarios (stragglers, speculation, ...);
   * kernels_bench: Pallas kernel micro-benchmarks vs jnp oracles;
+  * dispatch_bench: protocol-core dispatch throughput (deque vs the old
+    O(n^2) list.pop(0) manager);
   * roofline_table: per-(arch x shape x mesh) roofline terms from the
     multi-pod dry-run records (skipped if dryrun hasn't run).
+
+``--backend {threads,processes,sim}`` instead runs one fixed-seed
+self-scheduled smoke workload through the unified runtime entry point
+(``repro.runtime.run_job``) and exits non-zero unless every task
+completes — the CI smoke job is ``benchmarks/run.py --backend sim``.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
+import time
 import traceback
 
 
+def _smoke_fn(task):
+    time.sleep(task.size_bytes * 2e-5)   # pretend to parse a file
+    return task.size_bytes
+
+
+def run_backend_smoke(backend: str) -> int:
+    from repro.core.messages import Task
+    from repro.core.triples import TriplesConfig
+    from repro.runtime import run_job
+
+    tasks = [Task(task_id=f"t{i:04d}", size_bytes=(i * 37) % 23 + 1,
+                  timestamp=i) for i in range(200)]
+    triple = TriplesConfig(nodes=1, nppn=8)     # 8 processes, 7 workers
+    r = run_job(tasks, _smoke_fn, backend=backend, triple=triple,
+                tasks_per_message=5, poll_interval=0.002)
+    print("name,us_per_call,derived")
+    print(f"run_job_{backend},{r.job_seconds * 1e6 / len(tasks):.1f},"
+          f"tasks={len(r.completed_ids)}_msgs={r.messages_sent}"
+          f"_workers={len(r.worker_stats)}", flush=True)
+    ok = r.completed_ids == {t.task_id for t in tasks}
+    if not ok:
+        print(f"run_job_{backend},0,ERROR_incomplete", flush=True)
+    return 0 if ok else 1
+
+
 def main() -> None:
-    from benchmarks import (beyond_paper, kernels_bench, paper_tables,
-                            roofline_table)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default=None,
+                    choices=["threads", "processes", "sim"],
+                    help="run a fixed-seed run_job smoke workload on one "
+                         "execution backend instead of the full suite")
+    args = ap.parse_args()
+    if args.backend:
+        sys.exit(run_backend_smoke(args.backend))
+
+    from benchmarks import (beyond_paper, dispatch_bench, kernels_bench,
+                            paper_tables, roofline_table)
 
     print("name,us_per_call,derived")
     groups = [("paper", paper_tables.ALL),
               ("beyond", beyond_paper.ALL),
               ("kernels", kernels_bench.ALL),
+              ("dispatch", dispatch_bench.ALL),
               ("roofline", roofline_table.ALL)]
     failures = 0
     for _gname, fns in groups:

@@ -2,8 +2,9 @@
 
 1. Build a triples-mode resource request (nodes x NPPN x threads) and
    validate it under LLSC exclusive-mode rules.
-2. Run a real self-scheduled job (threaded manager/workers) with
-   largest-first task organization.
+2. Run a real self-scheduled job through the unified runtime
+   (``run_job``) on the threads AND processes backends — same protocol
+   core, interchangeable execution.
 3. Simulate the same job at full 2048-core scale and compare orderings —
    the paper's Table II experiment in miniature.
 
@@ -13,40 +14,46 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import time
 
 from repro.core import (
-    ORGANIZE_PHASE, Task, TriplesConfig, run_self_scheduled,
-    simulate_self_scheduling)
+    ORGANIZE_PHASE, Task, TriplesConfig, simulate_self_scheduling)
+from repro.runtime import run_job
 from repro.tracks.datasets import monday_manifest
-
-# -- 1. triples-mode request (paper §II.C) ---------------------------------
-triple = TriplesConfig(nodes=64, nppn=32, threads_per_process=1,
-                       slots_per_process=2)
-print(f"triples request: {triple.nodes} nodes x NPPN={triple.nppn} "
-      f"-> {triple.total_processes} processes, "
-      f"{triple.allocated_cores} cores charged (exclusive mode), "
-      f"{triple.gb_per_process:.0f} GB/process")
-
-# -- 2. real self-scheduled job (paper §II.D) ------------------------------
-tasks = [Task(task_id=f"file{i:03d}", size_bytes=(i * 131) % 977 + 23,
-              timestamp=i) for i in range(64)]
-
 
 def process(task: Task) -> int:
     time.sleep(task.size_bytes * 2e-5)          # pretend to parse a file
     return task.size_bytes
 
 
-result = run_self_scheduled(tasks, n_workers=8, fn=process,
-                            organization="largest_first",
-                            poll_interval=0.005)
-print(f"real run: {len(result.results)} tasks on 8 workers in "
-      f"{result.job_seconds:.2f}s, {result.messages_sent} messages")
+def main() -> None:
+    # -- 1. triples-mode request (paper §II.C) -----------------------------
+    triple = TriplesConfig(nodes=64, nppn=32, threads_per_process=1,
+                           slots_per_process=2)
+    print(f"triples request: {triple.nodes} nodes x NPPN={triple.nppn} "
+          f"-> {triple.total_processes} processes, "
+          f"{triple.allocated_cores} cores charged (exclusive mode), "
+          f"{triple.gb_per_process:.0f} GB/process")
 
-# -- 3. full-scale simulation (paper Table II) ------------------------------
-manifest = monday_manifest()          # 2425 files, 714 GB (synthetic)
-for org in ("chronological", "largest_first"):
-    sim = simulate_self_scheduling(
-        manifest, n_workers=2047, nodes=64, nppn=32,
-        model=ORGANIZE_PHASE, organization=org)
-    print(f"simulated 2048-core organize, {org:14s}: "
-          f"{sim.job_seconds:,.0f} s")
-print("=> largest-first wins, as in the paper's Tables I/II")
+    # -- 2. real self-scheduled job (paper §II.D) --------------------------
+    tasks = [Task(task_id=f"file{i:03d}", size_bytes=(i * 131) % 977 + 23,
+                  timestamp=i) for i in range(64)]
+    for backend in ("threads", "processes"):
+        result = run_job(tasks, process, backend=backend, n_workers=8,
+                         organization="largest_first", poll_interval=0.005)
+        print(f"real run [{backend:9s}]: {len(result.results)} tasks on "
+              f"8 workers in {result.job_seconds:.2f}s, "
+              f"{result.messages_sent} messages")
+
+    # -- 3. full-scale simulation (paper Table II) -------------------------
+    manifest = monday_manifest()          # 2425 files, 714 GB (synthetic)
+    for org in ("chronological", "largest_first"):
+        sim = simulate_self_scheduling(
+            manifest, n_workers=2047, nodes=64, nppn=32,
+            model=ORGANIZE_PHASE, organization=org)
+        print(f"simulated 2048-core organize, {org:14s}: "
+              f"{sim.job_seconds:,.0f} s")
+    print("=> largest-first wins, as in the paper's Tables I/II")
+
+
+# The __main__ guard matters: the processes backend may use the spawn
+# start method, which re-imports this module in every worker.
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,13 @@
-"""Paper core: triples-mode launch + self-scheduling task distribution."""
+"""Paper core: triples-mode launch + self-scheduling task distribution.
+
+The runtime itself (manager/worker protocol, thread/process/sim backends)
+lives in :mod:`repro.runtime`; the names below from the old
+``core.selfsched`` / ``core.simulator`` modules are loaded lazily (PEP
+562) so that ``repro.runtime`` can import the task/message/cost models
+from this package without a circular import.
+"""
+
+import importlib
 
 from repro.core.cost_model import (
     ARCHIVE_PHASE, ORGANIZE_PHASE, PHASES, PROCESS_PHASE, RADAR_PHASE,
@@ -10,15 +19,36 @@ from repro.core.messages import (
     Message, MessageKind, ORGANIZERS, Task, get_organizer,
     organize_by_filename, organize_chronological, organize_largest_first,
     organize_random)
-from repro.core.selfsched import (
-    JobResult, Manager, ManagerCheckpoint, Worker, WorkerStats,
-    run_self_scheduled)
-from repro.core.simulator import (
-    SimResult, SimTaskRecord, merge_tasks_per_message, simulate_self_scheduling,
-    simulate_static)
 from repro.core.triples import (
     DEFAULT_ALLOCATION_CORES, NodeType, TriplesConfig, TriplesError,
     UPGRADED_ALLOCATION_CORES, feasible_table_cells, paper_configs)
+
+# Names backed by repro.runtime (resolved on first access).
+_LAZY = {
+    "JobResult": "repro.core.selfsched",
+    "Manager": "repro.core.selfsched",
+    "ManagerCheckpoint": "repro.core.selfsched",
+    "WorkerStats": "repro.core.selfsched",
+    "run_self_scheduled": "repro.core.selfsched",
+    "SimResult": "repro.core.simulator",
+    "SimTaskRecord": "repro.core.simulator",
+    "merge_tasks_per_message": "repro.core.simulator",
+    "simulate_self_scheduling": "repro.core.simulator",
+    "simulate_static": "repro.core.simulator",
+    "RunResult": "repro.runtime",
+    "SchedulerCore": "repro.runtime",
+    "run_job": "repro.runtime",
+}
+
+
+def __getattr__(name):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value
+    return value
+
 
 __all__ = [
     "ARCHIVE_PHASE", "ORGANIZE_PHASE", "PHASES", "PROCESS_PHASE",
@@ -28,10 +58,11 @@ __all__ = [
     "Message", "MessageKind", "ORGANIZERS", "Task", "get_organizer",
     "organize_by_filename", "organize_chronological",
     "organize_largest_first", "organize_random",
-    "JobResult", "Manager", "ManagerCheckpoint", "Worker", "WorkerStats",
+    "DEFAULT_ALLOCATION_CORES", "NodeType", "TriplesConfig", "TriplesError",
+    "UPGRADED_ALLOCATION_CORES", "feasible_table_cells", "paper_configs",
+    "JobResult", "Manager", "ManagerCheckpoint", "WorkerStats",
     "run_self_scheduled",
     "SimResult", "SimTaskRecord", "merge_tasks_per_message",
     "simulate_self_scheduling", "simulate_static",
-    "DEFAULT_ALLOCATION_CORES", "NodeType", "TriplesConfig", "TriplesError",
-    "UPGRADED_ALLOCATION_CORES", "feasible_table_cells", "paper_configs",
+    "RunResult", "SchedulerCore", "run_job",
 ]

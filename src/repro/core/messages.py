@@ -12,9 +12,9 @@ The paper's protocol (§II.D):
     every 0.3 s for idle workers.
   * A message may carry multiple tasks (tasks-per-message; Fig 7 / §V).
 
-This module is transport-agnostic: the same dataclasses drive the real
-threaded/process runtime (selfsched.py) and the discrete-event simulator
-(simulator.py).
+This module is transport-agnostic: the same dataclasses drive every
+execution backend of repro.runtime (threads, processes, and the
+discrete-event simulator).
 """
 
 from __future__ import annotations
@@ -73,6 +73,11 @@ class Message:
     sender: str
     tasks: tuple[Task, ...] = ()
     task_ids: tuple[str, ...] = ()
+    # DONE messages carry the task results (aligned with task_ids) and the
+    # worker's busy time for the batch — the manager never peeks at worker
+    # memory, so the same message works across threads AND processes.
+    results: tuple[Any, ...] = ()
+    busy_seconds: float = 0.0
     error: Optional[str] = None
     sent_at: float = dataclasses.field(default_factory=time.monotonic)
 

@@ -1,177 +1,42 @@
-"""Real manager/worker self-scheduling runtime (threads or processes).
+"""Back-compat wrapper: the live manager/worker runtime moved to
+``repro.runtime`` (one protocol core, pluggable thread/process/sim
+backends).  This module keeps the original API surface:
 
-Implements the paper's protocol (§II.D) faithfully:
+  * :class:`Manager` / :func:`run_self_scheduled` — the threaded runtime,
+    now a thin shell over ``repro.runtime.run_job(backend="threads")``.
+  * :class:`ManagerCheckpoint`, :class:`WorkerStats`, :class:`JobResult`
+    (an alias of the unified :class:`~repro.runtime.result.RunResult`).
+  * :func:`worker_loop` — the shared worker loop (the old ``Worker``
+    thread class is gone; transports manage their own workers).
 
-  * The manager sequentially allocates initial tasks to all workers as fast
-    as possible and does NOT pause between the initial sends.
-  * Workers run their task(s), then report DONE to the manager.
-  * The manager re-allocates to idle workers until the queue drains.
-  * Both sides poll on a configurable interval (paper default: 0.3 s).
-  * Optional tasks-per-message batching (Fig 7; §V used 300).
-
-Beyond-paper (large-scale runnability):
-  * Fault tolerance: workers heartbeat; if a worker misses
-    ``failure_timeout`` the manager declares it dead, re-queues its
-    in-flight tasks, and finishes the job with the survivors (the paper's
-    protocol has no failure story).
-  * Checkpoint/restart: the manager's state (completed ids + remaining
-    queue) serializes to JSON; a restarted job skips completed tasks.
-  * Exactly-once accounting: completed tasks are tracked by id, so a
-    re-queued task that was actually finished by a slow "dead" worker is
-    not double-counted.
-
-This runtime is used by the track workflow and the LM data pipeline at
-real (small) scale; full LLSC-scale benchmarks use core/simulator.py.
+New code should call :func:`repro.runtime.run_job` instead.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import json
-import queue
-import threading
-import time
+from collections import deque
 from typing import Any, Callable, Optional, Sequence
 
-from repro.core.messages import (
-    Message, MessageKind, Task, get_organizer)
+from repro.core.messages import Task
+from repro.runtime.protocol import (
+    DEFAULT_POLL_INTERVAL_S, ManagerCheckpoint, SchedulerCore, drive)
+from repro.runtime.result import RunResult, WorkerStats
+from repro.runtime.transports import ThreadTransport, worker_loop
 
-DEFAULT_POLL_INTERVAL_S = 0.3
+JobResult = RunResult
 
-
-@dataclasses.dataclass
-class WorkerStats:
-    worker_id: str
-    tasks_completed: int = 0
-    busy_seconds: float = 0.0
-    idle_seconds: float = 0.0
-    first_task_at: Optional[float] = None
-    last_done_at: Optional[float] = None
-
-    @property
-    def span_seconds(self) -> float:
-        if self.first_task_at is None or self.last_done_at is None:
-            return 0.0
-        return self.last_done_at - self.first_task_at
-
-
-@dataclasses.dataclass
-class JobResult:
-    """What the manager measures: 'total job time ... as measured by the
-    manager' (§IV.A)."""
-    job_seconds: float
-    results: dict[str, Any]
-    worker_stats: dict[str, WorkerStats]
-    failed_workers: list[str]
-    reassigned_tasks: int
-    messages_sent: int
-
-    @property
-    def worker_times(self) -> list[float]:
-        return sorted(s.busy_seconds for s in self.worker_stats.values())
-
-
-class ManagerCheckpoint:
-    """JSON-serializable manager state for restart (beyond-paper)."""
-
-    def __init__(self, completed: set[str], pending_ids: list[str]):
-        self.completed = completed
-        self.pending_ids = pending_ids
-
-    def dumps(self) -> str:
-        return json.dumps({"completed": sorted(self.completed),
-                           "pending": self.pending_ids})
-
-    @classmethod
-    def loads(cls, s: str) -> "ManagerCheckpoint":
-        d = json.loads(s)
-        return cls(set(d["completed"]), list(d["pending"]))
-
-
-class _Transport:
-    """In-memory mailboxes: one inbox per worker + one manager inbox."""
-
-    def __init__(self, worker_ids: Sequence[str]):
-        self.worker_inbox: dict[str, "queue.Queue[Message]"] = {
-            w: queue.Queue() for w in worker_ids}
-        self.manager_inbox: "queue.Queue[Message]" = queue.Queue()
-
-    def to_worker(self, worker_id: str, msg: Message) -> None:
-        self.worker_inbox[worker_id].put(msg)
-
-    def to_manager(self, msg: Message) -> None:
-        self.manager_inbox.put(msg)
-
-
-class Worker(threading.Thread):
-    """A worker process: poll for ASSIGN, run, report DONE, repeat.
-
-    ``fail_after`` kills the worker after N completed tasks (fault-injection
-    hook for tests)."""
-
-    def __init__(self, worker_id: str, transport: _Transport,
-                 fn: Callable[[Task], Any],
-                 poll_interval: float = DEFAULT_POLL_INTERVAL_S,
-                 heartbeat_interval: Optional[float] = None,
-                 fail_after: Optional[int] = None):
-        super().__init__(name=f"worker-{worker_id}", daemon=True)
-        self.worker_id = worker_id
-        self.transport = transport
-        self.fn = fn
-        self.poll_interval = poll_interval
-        self.heartbeat_interval = heartbeat_interval
-        self.fail_after = fail_after
-        self.stats = WorkerStats(worker_id)
-        self._results: dict[str, Any] = {}
-
-    def run(self) -> None:
-        inbox = self.transport.worker_inbox[self.worker_id]
-        completed = 0
-        last_heartbeat = time.monotonic()
-        while True:
-            try:
-                # "While idle, the workers wait 0.3 seconds prior between
-                # checking if another task was sent from the manager."
-                msg = inbox.get(timeout=self.poll_interval)
-            except queue.Empty:
-                self.stats.idle_seconds += self.poll_interval
-                now = time.monotonic()
-                if (self.heartbeat_interval is not None
-                        and now - last_heartbeat >= self.heartbeat_interval):
-                    self.transport.to_manager(Message(
-                        MessageKind.HEARTBEAT, sender=self.worker_id))
-                    last_heartbeat = now
-                continue
-            if msg.kind is MessageKind.SHUTDOWN:
-                return
-            assert msg.kind is MessageKind.ASSIGN
-            done_ids = []
-            t0 = time.monotonic()
-            if self.stats.first_task_at is None:
-                self.stats.first_task_at = t0
-            for task in msg.tasks:
-                if self.fail_after is not None and completed >= self.fail_after:
-                    return  # simulate node death mid-batch: no DONE sent
-                try:
-                    self._results[task.task_id] = self.fn(task)
-                    done_ids.append(task.task_id)
-                    completed += 1
-                except Exception as e:  # report, don't die
-                    self.transport.to_manager(Message(
-                        MessageKind.FAILED, sender=self.worker_id,
-                        task_ids=(task.task_id,), error=repr(e)))
-            dt = time.monotonic() - t0
-            self.stats.busy_seconds += dt
-            self.stats.tasks_completed += len(done_ids)
-            self.stats.last_done_at = time.monotonic()
-            if done_ids:
-                self.transport.to_manager(Message(
-                    MessageKind.DONE, sender=self.worker_id,
-                    task_ids=tuple(done_ids)))
+__all__ = ["DEFAULT_POLL_INTERVAL_S", "JobResult", "Manager",
+           "ManagerCheckpoint", "WorkerStats", "run_self_scheduled",
+           "worker_loop"]
 
 
 class Manager:
-    """The managing process of §II.D, with re-queue on worker failure."""
+    """The managing process of §II.D over the threads backend.
+
+    Thin wrapper: all protocol state lives in a shared
+    :class:`~repro.runtime.protocol.SchedulerCore`; ``completed`` and
+    ``pending`` delegate to it for checkpoint-surgery compatibility.
+    """
 
     def __init__(self, tasks: Sequence[Task],
                  n_workers: int,
@@ -185,151 +50,61 @@ class Manager:
                  organize_seed: int = 0):
         if n_workers < 1:
             raise ValueError("need at least one worker")
-        if tasks_per_message < 1:
-            raise ValueError("tasks_per_message must be >= 1")
-        organizer = get_organizer(organization)
-        if organization == "random":
-            ordered = organizer(tasks, seed=organize_seed)  # type: ignore[call-arg]
-        else:
-            ordered = organizer(tasks)
-        self._by_id = {t.task_id: t for t in ordered}
-        if len(self._by_id) != len(ordered):
-            raise ValueError("task ids must be unique")
-        self.completed: set[str] = set()
-        if checkpoint is not None:
-            self.completed |= checkpoint.completed & set(self._by_id)
-            ordered = [t for t in ordered if t.task_id not in self.completed]
-        self.pending: list[Task] = list(ordered)
+        self.core = SchedulerCore(
+            tasks, organization=organization,
+            tasks_per_message=tasks_per_message,
+            checkpoint=checkpoint, organize_seed=organize_seed)
         self.n_workers = n_workers
         self.fn = fn
         self.tasks_per_message = tasks_per_message
         self.poll_interval = poll_interval
         self.failure_timeout = failure_timeout
         self.worker_fail_after = worker_fail_after or {}
-        self.messages_sent = 0
-        self.reassigned = 0
 
-    # -- checkpoint hook ----------------------------------------------------
+    # -- state passthrough (checkpoint surgery, tests) ---------------------
+
+    @property
+    def completed(self) -> set[str]:
+        return self.core.completed
+
+    @completed.setter
+    def completed(self, value: set[str]) -> None:
+        self.core.completed = set(value)
+
+    @property
+    def pending(self) -> deque[Task]:
+        return self.core.pending
+
+    @pending.setter
+    def pending(self, value: Sequence[Task]) -> None:
+        self.core.pending = deque(value)
+
+    @property
+    def messages_sent(self) -> int:
+        return self.core.messages_sent
+
+    @property
+    def reassigned(self) -> int:
+        return self.core.reassigned
+
     def checkpoint(self) -> ManagerCheckpoint:
-        return ManagerCheckpoint(
-            set(self.completed),
-            [t.task_id for t in self.pending])
+        return self.core.checkpoint()
 
     # -- main loop ----------------------------------------------------------
+
     def run(self) -> JobResult:
-        worker_ids = [f"w{i}" for i in range(self.n_workers)]
-        transport = _Transport(worker_ids)
         heartbeat = (self.failure_timeout / 3
                      if self.failure_timeout is not None else None)
-        workers = {
-            wid: Worker(wid, transport, self.fn,
-                        poll_interval=self.poll_interval,
-                        heartbeat_interval=heartbeat,
-                        fail_after=self.worker_fail_after.get(wid))
-            for wid in worker_ids}
-        for w in workers.values():
-            w.start()
-
-        t_start = time.monotonic()
-        in_flight: dict[str, list[str]] = {wid: [] for wid in worker_ids}
-        last_seen: dict[str, float] = {wid: t_start for wid in worker_ids}
-        dead: set[str] = set()
-        results: dict[str, Any] = {}
-        failures: dict[str, str] = {}
-
-        def send_batch(wid: str) -> None:
-            batch = []
-            while self.pending and len(batch) < self.tasks_per_message:
-                batch.append(self.pending.pop(0))
-            if batch:
-                in_flight[wid].extend(t.task_id for t in batch)
-                transport.to_worker(wid, Message(
-                    MessageKind.ASSIGN, sender="manager", tasks=tuple(batch)))
-                self.messages_sent += 1
-
-        # "the manager sequentially allocates initial tasks to all workers
-        # as fast as possible ... does not pause when sending"
-        for wid in worker_ids:
-            send_batch(wid)
-
-        total = len(self._by_id)
-        while len(self.completed) + len(failures) < total:
-            # Drain every message currently waiting, then sleep the poll
-            # interval ("the manager waits 0.3 seconds prior to checking
-            # for more idle workers").
-            drained_any = False
-            while True:
-                try:
-                    msg = transport.manager_inbox.get_nowait()
-                except queue.Empty:
-                    break
-                drained_any = True
-                last_seen[msg.sender] = time.monotonic()
-                if msg.kind is MessageKind.DONE:
-                    for tid in msg.task_ids:
-                        if tid in self.completed:
-                            continue  # exactly-once: late DONE from 'dead' worker
-                        self.completed.add(tid)
-                        w = workers.get(msg.sender)
-                        if w is not None:
-                            results[tid] = w._results.get(tid)
-                        if tid in in_flight.get(msg.sender, []):
-                            in_flight[msg.sender].remove(tid)
-                    if msg.sender not in dead:
-                        send_batch(msg.sender)
-                elif msg.kind is MessageKind.FAILED:
-                    for tid in msg.task_ids:
-                        failures[tid] = msg.error or "unknown"
-                        if tid in in_flight.get(msg.sender, []):
-                            in_flight[msg.sender].remove(tid)
-                    if msg.sender not in dead:
-                        send_batch(msg.sender)
-                # HEARTBEAT just refreshes last_seen.
-
-            # Failure detection: re-queue in-flight tasks of timed-out workers.
-            if self.failure_timeout is not None:
-                now = time.monotonic()
-                for wid in worker_ids:
-                    if wid in dead or not in_flight[wid]:
-                        continue
-                    if now - last_seen[wid] > self.failure_timeout:
-                        dead.add(wid)
-                        requeue = [self._by_id[tid] for tid in in_flight[wid]
-                                   if tid not in self.completed]
-                        in_flight[wid] = []
-                        self.reassigned += len(requeue)
-                        # Largest-first among re-queued, ahead of the rest.
-                        self.pending = sorted(
-                            requeue, key=lambda t: -t.size_bytes) + self.pending
-                        # Kick idle live workers so re-queued work starts
-                        # without waiting for another DONE.
-                        for w2 in worker_ids:
-                            if w2 not in dead and not in_flight[w2]:
-                                send_batch(w2)
-
-            if not drained_any:
-                time.sleep(self.poll_interval)
-                # Re-poll idle workers (they may have raced the initial send).
-                for wid in worker_ids:
-                    if wid not in dead and not in_flight[wid] and self.pending:
-                        send_batch(wid)
-
-        for wid in worker_ids:
-            transport.to_worker(wid, Message(MessageKind.SHUTDOWN, "manager"))
-        for w in workers.values():
-            w.join(timeout=5.0)
-
-        job_seconds = time.monotonic() - t_start
-        if failures:
-            raise RuntimeError(f"{len(failures)} tasks failed: "
-                               f"{dict(list(failures.items())[:3])}")
-        return JobResult(
-            job_seconds=job_seconds,
-            results=results,
-            worker_stats={wid: w.stats for wid, w in workers.items()},
-            failed_workers=sorted(dead),
-            reassigned_tasks=self.reassigned,
-            messages_sent=self.messages_sent)
+        transport = ThreadTransport(
+            self.n_workers, self.fn,
+            batch_fn=getattr(self.fn, "process_batch", None),
+            poll_interval=self.poll_interval,
+            heartbeat_interval=heartbeat,
+            worker_fail_after=self.worker_fail_after)
+        return drive(self.core, transport,
+                     poll_interval=self.poll_interval,
+                     failure_timeout=self.failure_timeout,
+                     backend="threads")
 
 
 def run_self_scheduled(tasks: Sequence[Task], n_workers: int,

@@ -1,455 +1,19 @@
-"""Discrete-event simulator for triples-mode + self-scheduling jobs.
+"""Back-compat wrapper: the discrete-event engine moved to
+``repro.runtime.sim``, where it shares one SchedulerCore with the live
+threads/processes backends.  ``SimResult`` is now an alias of the unified
+:class:`~repro.runtime.result.RunResult` (same fields + properties).
 
-The container has one physical core; the paper benchmarks 256-2048 worker
-processes. This simulator reproduces the paper's experiments at full scale:
-it executes the *exact* manager/worker protocol of §II.D (eager initial
-allocation, 0.3 s polls, serial manager sends, tasks-per-message) against
-the calibrated cost models of cost_model.py.
-
-Engine notes
-------------
-I/O is processor-shared: every task in its I/O phase receives the same
-instantaneous rate rho(n_active) (three-level min — see PhaseCostModel).
-Equal sharing admits the classic *virtual-time* trick: let V(t) advance at
-rate rho(n(t)); a task entering I/O at virtual time V0 with demand d bytes
-completes when V reaches V0 + d. Completions pop off a heap keyed on
-V0 + d, so each event costs O(log n) instead of O(n) rescans. CPU phases
-are dedicated (one task per core) and sit in an ordinary event heap.
-
-Fault injection: ``worker_death`` kills workers at given sim times; the
-manager re-queues their in-flight tasks after ``failure_timeout`` — the
-same recovery loop as the real runtime in selfsched.py.
+New code should call ``repro.runtime.run_job(..., backend="sim")`` or the
+re-exported functions below.
 """
 
-from __future__ import annotations
+from repro.runtime.result import RunResult, SimTaskRecord
+from repro.runtime.sim import (
+    DEFAULT_POLL_S, merge_tasks_per_message, simulate_self_scheduling,
+    simulate_static)
 
-import dataclasses
-import heapq
-import itertools
-from typing import Optional, Sequence
+SimResult = RunResult
 
-from repro.core.cost_model import PhaseCostModel
-from repro.core.distribution import (
-    DistributionPolicy, block_distribution, cyclic_distribution)
-from repro.core.messages import Task, get_organizer
-
-DEFAULT_POLL_S = 0.3
-
-
-@dataclasses.dataclass
-class SimTaskRecord:
-    task_id: str
-    worker: int
-    start_s: float
-    end_s: float
-    size_bytes: int
-
-
-@dataclasses.dataclass
-class SimResult:
-    """Mirror of selfsched.JobResult, in simulated seconds."""
-    job_seconds: float
-    worker_busy: list[float]          # per-worker busy seconds
-    worker_span: list[float]          # first-start..last-end per worker
-    task_records: list[SimTaskRecord]
-    messages_sent: int
-    reassigned_tasks: int
-    dead_workers: list[int]
-
-    @property
-    def median_worker_busy(self) -> float:
-        xs = sorted(b for b in self.worker_busy if b > 0)
-        if not xs:
-            return 0.0
-        n = len(xs)
-        return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
-
-    @property
-    def worker_time_span(self) -> float:
-        xs = [b for b in self.worker_busy if b > 0]
-        return (max(xs) - min(xs)) if xs else 0.0
-
-
-# Event kinds (heap entries are (time, seq, kind, data)).
-_CPU_DONE = 0       # data = worker index
-_RECV = 1           # data = (worker, tuple[int task indices])
-_MGR_DONE = 2       # data = worker index (DONE arrived at manager)
-_DEATH = 3          # data = worker index
-_REDISPATCH = 4     # data = worker index whose tasks get re-queued
-
-
-class _Sim:
-    def __init__(self, tasks: Sequence[Task], n_workers: int, nodes: int,
-                 nppn: int, model: PhaseCostModel,
-                 tasks_per_message: int,
-                 poll_interval: float,
-                 worker_death: Optional[dict[int, float]],
-                 failure_timeout: float,
-                 legacy_launch_penalty: float = 1.0,
-                 worker_speed: Optional[Sequence[float]] = None,
-                 speculative: bool = False):
-        self.tasks = list(tasks)
-        self.n_workers = n_workers
-        self.nodes = max(nodes, 1)
-        self.nppn = max(nppn, 1)
-        self.model = model
-        self.k = tasks_per_message
-        self.latency = poll_interval / 2.0   # expected poll delay, each hop
-        self.worker_death = dict(worker_death or {})
-        self.failure_timeout = failure_timeout
-        # >1.0 models the pre-triples launcher: no EPPAC placement/affinity
-        # => cache/NUMA thrash on the 64-core mesh slows every task.
-        self.legacy = legacy_launch_penalty
-        # Per-worker speed multipliers on task cost (beyond-paper:
-        # heterogeneous fleets / persistent stragglers). 1.0 = nominal;
-        # 0.25 = a worker running 4x slow.
-        self.speed = (list(worker_speed) if worker_speed is not None
-                      else [1.0] * n_workers)
-        # Beyond-paper: MapReduce-style backup tasks. When the queue is
-        # empty and a worker goes idle, the manager re-issues the
-        # longest-running in-flight task; first completion wins
-        # (exactly-once via completed_set).
-        self.speculative = speculative
-        self.completed_set: set[int] = set()
-        self.dup_count: dict[int, int] = {}
-        self.speculated = 0
-
-        self.now = 0.0
-        self.seq = itertools.count()
-        self.events: list[tuple[float, int, int, object]] = []
-
-        # Virtual-time I/O processor sharing.
-        self.V = 0.0                      # attained per-task service (bytes)
-        self.io_heap: list[tuple[float, int, int]] = []  # (V_target, seq, worker)
-        self.n_io = 0
-
-        # Manager.
-        self.pending: list[int] = []      # indices into self.tasks (FIFO)
-        self.mgr_free_at = 0.0
-        self.messages_sent = 0
-        self.reassigned = 0
-
-        # Workers.
-        self.inflight: list[list[int]] = [[] for _ in range(n_workers)]
-        self.batch_pos: list[int] = [0] * n_workers
-        self.cur_task: list[Optional[int]] = [None] * n_workers
-        self.dead: list[bool] = [False] * n_workers
-        self.busy: list[float] = [0.0] * n_workers
-        self.first_start: list[Optional[float]] = [None] * n_workers
-        self.last_end: list[float] = [0.0] * n_workers
-        self.task_start: list[float] = [0.0] * n_workers
-        self.records: list[SimTaskRecord] = []
-        self.completed = 0
-        self.failed_tasks: set[int] = set()
-
-    # -- helpers -------------------------------------------------------------
-
-    def _push(self, t: float, kind: int, data: object) -> None:
-        heapq.heappush(self.events, (t, next(self.seq), kind, data))
-
-    def _rho(self) -> float:
-        return self.model.io_rate(self.n_io, self.nodes, self.nppn)
-
-    def _advance_virtual(self, t: float) -> None:
-        if t > self.now and self.n_io > 0:
-            self.V += self._rho() * (t - self.now)
-        self.now = t
-
-    def _next_io_time(self) -> float:
-        if not self.io_heap:
-            return float("inf")
-        v_target = self.io_heap[0][0]
-        rho = self._rho()
-        if rho <= 0:
-            return float("inf")
-        return self.now + max(v_target - self.V, 0.0) / rho
-
-    # -- manager -------------------------------------------------------------
-
-    def _mgr_send(self, worker: int) -> None:
-        """Serial manager send: batch up to k tasks to an idle worker."""
-        if self.dead[worker]:
-            return
-        if not self.pending:
-            if self.speculative:
-                self._mgr_speculate(worker)
-            return
-        batch = self.pending[:self.k]
-        del self.pending[:len(batch)]
-        send_start = max(self.now, self.mgr_free_at)
-        self.mgr_free_at = send_start + self.model.msg_overhead_s
-        self.messages_sent += 1
-        self._push(self.mgr_free_at + self.latency, _RECV,
-                   (worker, tuple(batch)))
-
-    def _mgr_speculate(self, worker: int) -> None:
-        """Re-issue the longest-running in-flight task to an idle worker."""
-        best, best_start = None, None
-        for w in range(self.n_workers):
-            if w == worker or self.dead[w]:
-                continue
-            idx = self.cur_task[w]
-            if idx is None or idx in self.completed_set:
-                continue
-            if self.dup_count.get(idx, 0) >= 2:
-                continue
-            if best is None or self.task_start[w] < best_start:
-                best, best_start = idx, self.task_start[w]
-        if best is None:
-            return
-        self.dup_count[best] = 2
-        self.speculated += 1
-        send_start = max(self.now, self.mgr_free_at)
-        self.mgr_free_at = send_start + self.model.msg_overhead_s
-        self.messages_sent += 1
-        self._push(self.mgr_free_at + self.latency, _RECV,
-                   (worker, (best,)))
-
-    # -- worker task lifecycle -------------------------------------------------
-
-    def _start_task(self, worker: int) -> None:
-        batch = self.inflight[worker]
-        pos = self.batch_pos[worker]
-        if pos >= len(batch):
-            return
-        idx = batch[pos]
-        self.cur_task[worker] = idx
-        self.task_start[worker] = self.now
-        if self.first_start[worker] is None:
-            self.first_start[worker] = self.now
-        demand = self.model.io_bytes(self.tasks[idx].size_bytes) \
-            * self.legacy / self.speed[worker]
-        self.n_io += 1
-        heapq.heappush(self.io_heap, (self.V + demand, next(self.seq), worker))
-
-    def _io_done(self, worker: int) -> None:
-        self.n_io -= 1
-        idx = self.cur_task[worker]
-        assert idx is not None
-        t = self.tasks[idx]
-        cpu = self.model.cpu_seconds(t.size_bytes, self.nppn, t.cpu_cost_hint)
-        self._push(self.now + cpu * self.legacy / self.speed[worker],
-                   _CPU_DONE, worker)
-
-    def _cpu_done(self, worker: int) -> None:
-        idx = self.cur_task[worker]
-        assert idx is not None
-        t = self.tasks[idx]
-        self.busy[worker] += self.now - self.task_start[worker]
-        self.last_end[worker] = self.now
-        if idx not in self.completed_set:   # first copy wins (speculation)
-            self.completed_set.add(idx)
-            self.records.append(SimTaskRecord(
-                t.task_id, worker, self.task_start[worker], self.now,
-                t.size_bytes))
-            self.completed += 1
-        self.cur_task[worker] = None
-        self.batch_pos[worker] += 1
-        if self.batch_pos[worker] < len(self.inflight[worker]):
-            self._start_task(worker)          # next task of the same message
-        else:
-            self.inflight[worker] = []
-            self.batch_pos[worker] = 0
-            # DONE message reaches the manager after one poll hop.
-            self._push(self.now + self.latency, _MGR_DONE, worker)
-
-    def _kill(self, worker: int) -> None:
-        if self.dead[worker]:
-            return
-        self.dead[worker] = True
-        # Drop current I/O task from the PS pool (lazy: mark; the heap entry
-        # is skipped when popped).
-        if self.cur_task[worker] is not None:
-            # Current progress is lost; leave heap entry to be skipped.
-            pass
-        lost = [i for i in self.inflight[worker][self.batch_pos[worker]:]
-                if True]
-        self.inflight[worker] = []
-        self.batch_pos[worker] = 0
-        if lost:
-            self._push(self.now + self.failure_timeout, _REDISPATCH,
-                       tuple(lost))
-
-    # -- main loop -------------------------------------------------------------
-
-    def run_self_scheduled(self, order: Sequence[int]) -> SimResult:
-        self.pending = list(order)
-        for w, t in self.worker_death.items():
-            if 0 <= w < self.n_workers:
-                self._push(t, _DEATH, w)
-        # Eager initial allocation to every worker, serially, no pauses.
-        for w in range(self.n_workers):
-            if not self.pending:
-                break
-            self._mgr_send(w)
-        return self._loop()
-
-    def run_static(self, assignment: Sequence[Sequence[int]]) -> SimResult:
-        """Block/cyclic: all tasks pre-assigned; workers start at t=0."""
-        for w, batch in enumerate(assignment):
-            self.inflight[w] = list(batch)
-            self.batch_pos[w] = 0
-            if batch:
-                self._start_task(w)
-        return self._loop(static=True)
-
-    def _loop(self, static: bool = False) -> SimResult:
-        n_total = len(self.tasks)
-        dead_workers: list[int] = []
-        while self.completed + len(self.failed_tasks) < n_total:
-            t_io = self._next_io_time()
-            t_ev = self.events[0][0] if self.events else float("inf")
-            if t_io == float("inf") and t_ev == float("inf"):
-                break  # no progress possible (all workers dead)
-            if t_io <= t_ev:
-                self._advance_virtual(t_io)
-                _, _, worker = heapq.heappop(self.io_heap)
-                if self.dead[worker] or self.cur_task[worker] is None:
-                    continue  # stale entry from a killed worker
-                self._io_done(worker)
-                continue
-            t, _, kind, data = heapq.heappop(self.events)
-            self._advance_virtual(t)
-            if kind == _CPU_DONE:
-                w = data  # type: ignore[assignment]
-                if not self.dead[w]:
-                    self._cpu_done(w)
-            elif kind == _RECV:
-                w, batch = data  # type: ignore[misc]
-                if self.dead[w]:
-                    self._push(self.now + self.failure_timeout,
-                               _REDISPATCH, tuple(batch))
-                else:
-                    self.inflight[w] = list(batch)
-                    self.batch_pos[w] = 0
-                    self._start_task(w)
-            elif kind == _MGR_DONE:
-                w = data  # type: ignore[assignment]
-                if not static:
-                    self._mgr_send(w)
-            elif kind == _DEATH:
-                w = data  # type: ignore[assignment]
-                dead_workers.append(w)
-                self._kill(w)
-            elif kind == _REDISPATCH:
-                lost = list(data)  # type: ignore[arg-type]
-                self.reassigned += len(lost)
-                if static:
-                    # Static jobs have no manager: reassign round-robin to
-                    # the survivors' tails (models a restart-from-list).
-                    alive = [w for w in range(self.n_workers)
-                             if not self.dead[w]]
-                    for i, idx in enumerate(lost):
-                        w = alive[i % len(alive)]
-                        self.inflight[w].append(idx)
-                        if self.cur_task[w] is None and \
-                                self.batch_pos[w] < len(self.inflight[w]):
-                            self._start_task(w)
-                else:
-                    # Largest-first among the re-queued, ahead of the rest.
-                    lost.sort(key=lambda i: -self.tasks[i].size_bytes)
-                    self.pending = lost + self.pending
-                    for w in range(self.n_workers):
-                        if (not self.dead[w] and not self.inflight[w]
-                                and self.pending):
-                            self._mgr_send(w)
-
-        job_end = max(self.last_end) + self.latency if self.records else 0.0
-        return SimResult(
-            job_seconds=job_end,
-            worker_busy=list(self.busy),
-            worker_span=[
-                (self.last_end[w] - self.first_start[w])
-                if self.first_start[w] is not None else 0.0
-                for w in range(self.n_workers)],
-            task_records=self.records,
-            messages_sent=self.messages_sent,
-            reassigned_tasks=self.reassigned,
-            dead_workers=sorted(dead_workers))
-
-
-# ---------------------------------------------------------------------------
-# Public entry points.
-# ---------------------------------------------------------------------------
-
-def simulate_self_scheduling(
-        tasks: Sequence[Task], *,
-        n_workers: int,
-        nodes: int,
-        nppn: int,
-        model: PhaseCostModel,
-        organization: str = "largest_first",
-        tasks_per_message: int = 1,
-        poll_interval: float = DEFAULT_POLL_S,
-        worker_death: Optional[dict[int, float]] = None,
-        failure_timeout: float = 30.0,
-        legacy_launch_penalty: float = 1.0,
-        worker_speed: Optional[Sequence[float]] = None,
-        speculative: bool = False,
-        organize_seed: int = 0) -> SimResult:
-    """Simulate a triples-mode self-scheduled job (the paper's §II.D)."""
-    organizer = get_organizer(organization)
-    if organization == "random":
-        ordered = organizer(tasks, seed=organize_seed)  # type: ignore[call-arg]
-    else:
-        ordered = organizer(tasks)
-    index = {id(t): i for i, t in enumerate(tasks)}
-    order = [index[id(t)] for t in ordered]
-    sim = _Sim(tasks, n_workers, nodes, nppn, model, tasks_per_message,
-               poll_interval, worker_death, failure_timeout,
-               legacy_launch_penalty, worker_speed, speculative)
-    return sim.run_self_scheduled(order)
-
-
-def simulate_static(
-        tasks: Sequence[Task], *,
-        n_workers: int,
-        nodes: int,
-        nppn: int,
-        model: PhaseCostModel,
-        policy: DistributionPolicy | str = DistributionPolicy.BLOCK,
-        organization: str = "filename",
-        poll_interval: float = DEFAULT_POLL_S,
-        worker_death: Optional[dict[int, float]] = None,
-        failure_timeout: float = 30.0,
-        legacy_launch_penalty: float = 1.0,
-        worker_speed: Optional[Sequence[float]] = None) -> SimResult:
-    """Simulate a static block/cyclic job (LLMapReduce-style, §II.D/IV.B).
-
-    ``organization`` defaults to 'filename' because LLMapReduce sorts tasks
-    by filename before splitting (§IV.B) — that interaction with the 4-tier
-    hierarchy is exactly what made block distribution pathological.
-    """
-    if isinstance(policy, str):
-        policy = DistributionPolicy(policy)
-    organizer = get_organizer(organization)
-    ordered = organizer(tasks)
-    index = {id(t): i for i, t in enumerate(tasks)}
-    order = [index[id(t)] for t in ordered]
-    if policy is DistributionPolicy.BLOCK:
-        assignment = block_distribution(order, n_workers)
-    elif policy is DistributionPolicy.CYCLIC:
-        assignment = cyclic_distribution(order, n_workers)
-    else:
-        raise ValueError("use simulate_self_scheduling for dynamic policy")
-    sim = _Sim(tasks, n_workers, nodes, nppn, model, 1,
-               poll_interval, worker_death, failure_timeout,
-               legacy_launch_penalty, worker_speed)
-    return sim.run_static(assignment)
-
-
-def merge_tasks_per_message(tasks: Sequence[Task], k: int) -> list[Task]:
-    """Pre-merge k real tasks into one sim unit (radar: k=300, 13.2 M ids
-    -> 43,969 message units) so huge jobs stay simulable."""
-    out = []
-    for i in range(0, len(tasks), k):
-        chunk = tasks[i:i + k]
-        out.append(Task(
-            task_id=f"m{i // k:07d}",
-            size_bytes=sum(t.size_bytes for t in chunk),
-            timestamp=min(t.timestamp for t in chunk),
-            cpu_cost_hint=(
-                sum(t.cpu_cost_hint for t in chunk)
-                if all(t.cpu_cost_hint is not None for t in chunk) else None),
-        ))
-    return out
+__all__ = ["DEFAULT_POLL_S", "SimResult", "SimTaskRecord",
+           "merge_tasks_per_message", "simulate_self_scheduling",
+           "simulate_static"]

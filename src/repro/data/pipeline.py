@@ -1,29 +1,31 @@
 """Self-scheduled training-data ingestion (DESIGN.md §4).
 
 The paper's manager/worker loop applied to the input layer: training
-shards are tasks, ingest hosts are workers. The manager hands out shards
+shards are tasks, ingest hosts are workers.  The manager hands out shards
 largest-first; a straggling host simply claims fewer shards, and a dead
 host's in-flight shards are re-queued — the same straggler story as
 §IV.A, now protecting the training input pipeline.
 
-On this single-host container the 'hosts' are threads; on a real fleet
-the Manager runs on host 0 and messages ride the existing control plane.
-The loader exposes a per-step iterator of fixed-shape (tokens, labels)
-batches, which the trainer device_puts against the mesh.
+Ingest runs on the unified runtime (:func:`repro.runtime.run_job`), so
+the 'hosts' can be threads (default) or real OS processes.  Workers no
+longer mutate a shared buffer: each shard's sequences return to the
+manager inside the DONE message, which is what makes the process backend
+(and a real fleet's control plane) work unchanged.  The loader exposes a
+per-step iterator of fixed-shape (tokens, labels) batches, which the
+trainer device_puts against the mesh.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import os
-import threading
 from collections import deque
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 
 from repro.core.messages import Task
-from repro.core.selfsched import Manager
+from repro.runtime import run_job
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +64,7 @@ class SelfScheduledLoader:
                  n_ingest_workers: int = 4,
                  organization: str = "largest_first",
                  poll_interval: float = 0.005,
+                 exec_backend: str = "threads",
                  seed: int = 0):
         self.shards = shards
         self.batch_size = batch_size
@@ -69,34 +72,39 @@ class SelfScheduledLoader:
         self.n_ingest_workers = n_ingest_workers
         self.organization = organization
         self.poll_interval = poll_interval
+        self.exec_backend = exec_backend
         self.rng = np.random.default_rng(seed)
         self._buf: deque[np.ndarray] = deque()
-        self._lock = threading.Lock()
         self._ingested_tokens = 0
         self._run_ingest()
 
     # -- ingest phase (the paper's protocol) -------------------------------
 
-    def _ingest_shard(self, task: Task) -> int:
+    def _ingest_shard(self, task: Task) -> np.ndarray:
+        """Worker fn: shard file -> (n_seq, seq_len+1) sequence array,
+        returned to the manager in the DONE message."""
         toks = np.load(task.payload)
         L = self.seq_len + 1
         n_seq = len(toks) // L
         if n_seq == 0:
-            return 0
-        seqs = toks[: n_seq * L].reshape(n_seq, L)
-        with self._lock:
-            for s in seqs:
-                self._buf.append(s)
-            self._ingested_tokens += int(seqs.size)
-        return n_seq
+            return np.zeros((0, L), np.int32)
+        return toks[: n_seq * L].reshape(n_seq, L).astype(np.int32)
 
     def _run_ingest(self) -> None:
         tasks = [Task(task_id=s.shard_id, size_bytes=s.size_bytes,
                       payload=s.path) for s in self.shards]
-        mgr = Manager(tasks, self.n_ingest_workers, self._ingest_shard,
-                      organization=self.organization,
-                      poll_interval=self.poll_interval)
-        self.job_result = mgr.run()
+        self.job_result = run_job(
+            tasks, self._ingest_shard,
+            backend=self.exec_backend,
+            n_workers=self.n_ingest_workers,
+            organization=self.organization,
+            poll_interval=self.poll_interval)
+        # Deterministic buffer order regardless of DONE arrival order.
+        for tid in sorted(self.job_result.results):
+            seqs = self.job_result.results[tid]
+            for s in seqs:
+                self._buf.append(s)
+            self._ingested_tokens += int(seqs.size)
 
     # -- batch iterator ----------------------------------------------------
 

@@ -33,6 +33,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax >= 0.5 renamed TPUMemorySpace -> MemorySpace; support both.
+_MemorySpace = getattr(pltpu, "MemorySpace",
+                       getattr(pltpu, "TPUMemorySpace", None))
+
 F32 = jnp.float32
 NEG_INF = -1e30
 
@@ -132,9 +136,9 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                lambda b, h, i, j: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, T, hd), q.dtype),
         scratch_shapes=[
-            pltpu.MemorySpace.VMEM((block_q, hd), F32),
-            pltpu.MemorySpace.VMEM((block_q,), F32),
-            pltpu.MemorySpace.VMEM((block_q,), F32),
+            _MemorySpace.VMEM((block_q, hd), F32),
+            _MemorySpace.VMEM((block_q,), F32),
+            _MemorySpace.VMEM((block_q,), F32),
         ],
         interpret=interpret,
     )(q, k, v)

@@ -41,10 +41,12 @@ from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
 from repro.distribution.sharding import (
     batch_shardings, batch_spec, cache_shardings, make_spec,
     opt_state_shardings, param_shardings)
-from repro.launch.mesh import make_production_mesh
+from repro.core.messages import Task
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.launch import steps
 from repro.models import model as M
 from repro.roofline.hlo_parse import collective_bytes
+from repro.runtime import run_job
 from repro.train.optimizer import OptimizerConfig, init_opt_state
 
 F32 = jnp.float32
@@ -147,7 +149,7 @@ def run_cell(cfg: ArchConfig, shape: ShapeConfig, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     rec["chips"] = mesh.devices.size
     try:
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             pspecs = steps.param_specs(cfg)
             psh = param_shardings(pspecs, mesh)
             batch = steps.input_specs(cfg, shape)
@@ -275,6 +277,22 @@ def _measure_block(cfg: ArchConfig, shape: ShapeConfig, mesh,
     return out
 
 
+def _compile_cell(task: Task, *, opt_cfg: OptimizerConfig,
+                  measure_block: bool) -> bool:
+    """Worker fn for the self-scheduled cell dispatcher (module-level so
+    it pickles under the multiprocessing spawn start method)."""
+    a, s, mp, path = task.payload
+    print(f"[run ] {task.task_id}", flush=True)
+    rec = run_cell(get_arch(a), SHAPES[s], mp, opt_cfg,
+                   measure_block=measure_block)
+    with open(path, "w") as f:
+        json.dump(_j(rec), f, indent=1)
+    status = "ok" if rec["ok"] else f"FAIL: {rec.get('error')}"
+    print(f"[done] {task.task_id}: {status} ({rec['total_s']}s)",
+          flush=True)
+    return bool(rec["ok"])
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None,
@@ -289,6 +307,11 @@ def main() -> None:
                     help="skip per-superblock roofline measurement")
     ap.add_argument("--opt-state", default="int8",
                     choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="concurrent compile workers (self-scheduled)")
+    ap.add_argument("--exec-backend", default="threads",
+                    choices=["threads", "processes"],
+                    help="execution backend for the cell dispatcher")
     args = ap.parse_args()
 
     cells: list[tuple[str, str]] = []
@@ -305,22 +328,26 @@ def main() -> None:
     os.makedirs(args.out, exist_ok=True)
     opt_cfg = OptimizerConfig(state_dtype=args.opt_state)
 
+    # Each (arch x shape x mesh) cell is one self-scheduled task; sized by
+    # param count so largest-first compiles the heavyweight models first.
+    cell_tasks: list[Task] = []
     for a, s in cells:
         for mp in meshes:
-            cfg = get_arch(a)
-            shape = SHAPES[s]
             tag = f"{a}__{s}__{'2x16x16' if mp else '16x16'}"
             path = os.path.join(args.out, tag + ".json")
             if os.path.exists(path):
                 print(f"[skip] {tag} (exists)")
                 continue
-            print(f"[run ] {tag}", flush=True)
-            rec = run_cell(cfg, shape, mp, opt_cfg,
-                           measure_block=not args.no_block)
-            with open(path, "w") as f:
-                json.dump(_j(rec), f, indent=1)
-            status = "ok" if rec["ok"] else f"FAIL: {rec.get('error')}"
-            print(f"[done] {tag}: {status} ({rec['total_s']}s)", flush=True)
+            cell_tasks.append(Task(
+                task_id=tag, size_bytes=get_arch(a).param_count(),
+                payload=(a, s, mp, path)))
+
+    if cell_tasks:
+        run_job(cell_tasks,
+                functools.partial(_compile_cell, opt_cfg=opt_cfg,
+                                  measure_block=not args.no_block),
+                backend=args.exec_backend, n_workers=args.jobs,
+                organization="largest_first", poll_interval=0.05)
 
 
 if __name__ == "__main__":

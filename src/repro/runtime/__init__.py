@@ -1,0 +1,31 @@
+"""Unified execution-backend runtime for the paper's §II.D protocol.
+
+One self-scheduling core (protocol.SchedulerCore) over three backends:
+
+  * threads    — in-process worker threads (transports.ThreadTransport)
+  * processes  — multiprocessing workers, real NPPN-style process
+                 isolation (transports.ProcessTransport)
+  * sim        — the calibrated discrete-event engine at full LLSC scale
+                 (sim.simulate_self_scheduling)
+
+Entry point: :func:`run_job`.  The legacy modules ``repro.core.selfsched``
+and ``repro.core.simulator`` are thin wrappers over this package.
+"""
+
+from repro.runtime.result import RunResult, SimTaskRecord, WorkerStats
+from repro.runtime.protocol import (
+    DEFAULT_POLL_INTERVAL_S, ManagerCheckpoint, SchedulerCore, drive)
+from repro.runtime.transports import (
+    ProcessTransport, ThreadTransport, Transport, worker_loop)
+from repro.runtime.sim import (
+    DEFAULT_POLL_S, merge_tasks_per_message, simulate_self_scheduling,
+    simulate_static)
+from repro.runtime.api import BACKENDS, run_job
+
+__all__ = [
+    "BACKENDS", "DEFAULT_POLL_INTERVAL_S", "DEFAULT_POLL_S",
+    "ManagerCheckpoint", "ProcessTransport", "RunResult", "SchedulerCore",
+    "SimTaskRecord", "ThreadTransport", "Transport", "WorkerStats",
+    "drive", "merge_tasks_per_message", "run_job",
+    "simulate_self_scheduling", "simulate_static", "worker_loop",
+]

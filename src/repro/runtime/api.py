@@ -1,0 +1,144 @@
+"""``run_job`` — one entry point, three execution backends.
+
+    from repro.runtime import run_job
+    r = run_job(tasks, fn, backend="processes",
+                triple=TriplesConfig(nodes=2, nppn=8))
+
+Backends:
+  * ``threads``   — in-process worker threads (fast start, shared memory).
+  * ``processes`` — one OS process per worker via multiprocessing: the
+    real process isolation of triples-mode NPPN placement.
+  * ``sim``       — the calibrated discrete-event engine at full LLSC
+    scale (``fn`` is not executed; timing comes from ``cost_model``).
+
+All three run the identical §II.D protocol through one
+:class:`~repro.runtime.protocol.SchedulerCore`, so for a fixed job spec
+they produce the same completed-task set and the same dispatch log
+(``RunResult.batches``).
+
+A :class:`~repro.core.triples.TriplesConfig` triple selects worker count
+and placement uniformly: ``worker_processes`` (total processes minus the
+manager) becomes the worker count on every backend, and nodes/NPPN feed
+the sim's I/O-contention model.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence
+
+from repro.core.messages import Task
+from repro.runtime.protocol import (
+    DEFAULT_POLL_INTERVAL_S, ManagerCheckpoint, SchedulerCore, drive)
+from repro.runtime.result import RunResult
+from repro.runtime.transports import TRANSPORTS
+from repro.runtime import sim as _sim
+
+BACKENDS = ("threads", "processes", "sim")
+
+__all__ = ["BACKENDS", "run_job"]
+
+
+def run_job(tasks: Sequence[Task],
+            fn: Optional[Callable[[Task], Any]] = None, *,
+            backend: str = "threads",
+            n_workers: Optional[int] = None,
+            triple: Optional[Any] = None,
+            organization: str = "largest_first",
+            tasks_per_message: int = 1,
+            poll_interval: float = DEFAULT_POLL_INTERVAL_S,
+            failure_timeout: Optional[float] = None,
+            checkpoint: Optional[ManagerCheckpoint] = None,
+            on_checkpoint: Optional[Callable[[ManagerCheckpoint], None]] = None,
+            checkpoint_interval_s: float = 1.0,
+            organize_seed: int = 0,
+            batch_fn: Optional[Callable[[list[Task]], dict]] = None,
+            raise_on_failure: bool = True,
+            worker_fail_after: Optional[dict[str, int]] = None,
+            # sim-backend knobs
+            cost_model: Optional[Any] = None,
+            nodes: Optional[int] = None,
+            nppn: Optional[int] = None,
+            worker_death: Optional[dict[int, float]] = None,
+            worker_speed: Optional[Sequence[float]] = None,
+            speculative: bool = False,
+            legacy_launch_penalty: float = 1.0,
+            mp_context: Optional[str] = None) -> RunResult:
+    """Run a self-scheduled job on the chosen execution backend.
+
+    ``fn`` is the per-task worker function (required for live backends,
+    ignored by ``sim``).  If ``fn`` exposes a ``process_batch`` method —
+    or ``batch_fn`` is passed — a multi-task ASSIGN executes as ONE call
+    (e.g. a single vectorized pallas invocation) instead of per-task
+    Python dispatch.  ``worker_fail_after`` / ``worker_death`` are
+    fault-injection hooks (live / sim respectively).  ``on_checkpoint``
+    fires on wall-clock intervals and therefore applies to the live
+    backends only; the sim backend ignores it (simulated jobs rebuild
+    from their task list, not from mid-run state).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"choose from {BACKENDS}")
+    if triple is not None:
+        if n_workers is None:
+            n_workers = max(triple.worker_processes, 1)
+        if nodes is None:
+            nodes = triple.nodes
+        if nppn is None:
+            nppn = triple.nppn
+    if n_workers is None:
+        n_workers = 4
+    if n_workers < 1:
+        raise ValueError("need at least one worker")
+
+    core = SchedulerCore(tasks, organization=organization,
+                         tasks_per_message=tasks_per_message,
+                         checkpoint=checkpoint, organize_seed=organize_seed)
+
+    if backend == "sim":
+        if cost_model is None:
+            from repro.core.cost_model import PROCESS_PHASE
+            cost_model = PROCESS_PHASE
+        result = _sim.simulate_self_scheduling(
+            list(tasks),
+            n_workers=n_workers,
+            nodes=nodes if nodes is not None else max(n_workers // 8, 1),
+            nppn=nppn if nppn is not None else min(n_workers, 8),
+            model=cost_model,
+            poll_interval=poll_interval,
+            worker_death=worker_death,
+            failure_timeout=(failure_timeout if failure_timeout is not None
+                             else 30.0),
+            legacy_launch_penalty=legacy_launch_penalty,
+            worker_speed=worker_speed,
+            speculative=speculative,
+            core=core)
+        # Same contract as the live backends: an incomplete job (e.g.
+        # every simulated worker died) raises instead of returning a
+        # silently partial result.
+        missing = core.total - len(result.completed_ids)
+        if raise_on_failure and missing > 0:
+            raise RuntimeError(
+                f"sim job ended with {missing} of {core.total} tasks "
+                f"incomplete (all workers dead?)")
+        return result
+
+    if fn is None:
+        raise ValueError(f"backend {backend!r} needs a worker fn")
+    if batch_fn is None:
+        batch_fn = getattr(fn, "process_batch", None)
+    heartbeat = (failure_timeout / 3 if failure_timeout is not None else None)
+    transport_cls = TRANSPORTS[backend]
+    kwargs: dict[str, Any] = {}
+    if backend == "processes" and mp_context is not None:
+        kwargs["mp_context"] = mp_context
+    transport = transport_cls(
+        n_workers, fn, batch_fn=batch_fn, poll_interval=poll_interval,
+        heartbeat_interval=heartbeat, worker_fail_after=worker_fail_after,
+        **kwargs)
+    return drive(core, transport,
+                 poll_interval=poll_interval,
+                 failure_timeout=failure_timeout,
+                 on_checkpoint=on_checkpoint,
+                 checkpoint_interval_s=checkpoint_interval_s,
+                 raise_on_failure=raise_on_failure,
+                 backend=backend)

@@ -1,0 +1,99 @@
+"""Unified result type for every execution backend.
+
+Before this package existed the repo had two divergent result types:
+``selfsched.JobResult`` (real runs, wall-clock seconds) and
+``simulator.SimResult`` (simulated seconds).  ``RunResult`` subsumes both:
+the live backends fill ``results``/``worker_stats``; the sim backend
+additionally fills ``task_records``.  The old names remain as aliases so
+existing callers keep working.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+__all__ = ["WorkerStats", "SimTaskRecord", "RunResult"]
+
+
+@dataclasses.dataclass
+class WorkerStats:
+    worker_id: Any
+    tasks_completed: int = 0
+    busy_seconds: float = 0.0
+    idle_seconds: float = 0.0
+    first_task_at: Optional[float] = None
+    last_done_at: Optional[float] = None
+
+    @property
+    def span_seconds(self) -> float:
+        if self.first_task_at is None or self.last_done_at is None:
+            return 0.0
+        return self.last_done_at - self.first_task_at
+
+
+@dataclasses.dataclass
+class SimTaskRecord:
+    task_id: str
+    worker: int
+    start_s: float
+    end_s: float
+    size_bytes: int
+
+
+@dataclasses.dataclass
+class RunResult:
+    """What the manager measures: 'total job time ... as measured by the
+    manager' (paper §IV.A) — plus per-worker stats, exactly-once results,
+    and the dispatch log shared by all backends."""
+
+    job_seconds: float
+    results: dict[str, Any] = dataclasses.field(default_factory=dict)
+    worker_stats: dict[Any, WorkerStats] = dataclasses.field(
+        default_factory=dict)
+    failed_workers: list = dataclasses.field(default_factory=list)
+    reassigned_tasks: int = 0
+    messages_sent: int = 0
+    backend: str = "threads"
+    # Sim-only extras (empty on live backends).
+    task_records: list[SimTaskRecord] = dataclasses.field(
+        default_factory=list)
+    # The manager's dispatch log: one tuple of task ids per ASSIGN message,
+    # in send order.  Identical across backends for the same job spec.
+    batches: list[tuple[str, ...]] = dataclasses.field(default_factory=list)
+    completed_ids: frozenset = frozenset()
+
+    # -- JobResult compatibility -------------------------------------------
+
+    @property
+    def worker_times(self) -> list[float]:
+        return sorted(s.busy_seconds for s in self.worker_stats.values())
+
+    # -- SimResult compatibility -------------------------------------------
+
+    @property
+    def worker_busy(self) -> list[float]:
+        """Per-worker busy seconds, in worker order."""
+        return [s.busy_seconds for s in self.worker_stats.values()]
+
+    @property
+    def worker_span(self) -> list[float]:
+        """First-start..last-end per worker, in worker order."""
+        return [s.span_seconds for s in self.worker_stats.values()]
+
+    @property
+    def dead_workers(self) -> list:
+        return self.failed_workers
+
+    @property
+    def median_worker_busy(self) -> float:
+        xs = sorted(b for b in self.worker_busy if b > 0)
+        if not xs:
+            return 0.0
+        n = len(xs)
+        return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+    @property
+    def worker_time_span(self) -> float:
+        xs = [b for b in self.worker_busy if b > 0]
+        return (max(xs) - min(xs)) if xs else 0.0

@@ -1,22 +1,29 @@
 """End-to-end track-processing workflow driver (paper §III.A).
 
 Glues the three phases — organize -> archive -> process — behind the
-self-scheduling Manager, with a JSON phase checkpoint so a killed job
-resumes where it left off. This is the real (scaled-down) counterpart of
-the simulated full-scale benchmarks.
+unified self-scheduling runtime (:func:`repro.runtime.run_job`), with a
+JSON phase checkpoint so a killed job resumes where it left off.  The
+execution backend is pluggable: ``threads`` (default) or ``processes``
+(real NPPN-style process isolation); periodic *mid-phase* manager
+checkpoints mean a kill-and-restart resumes inside a phase, not just at
+phase boundaries.  This is the real (scaled-down) counterpart of the
+simulated full-scale benchmarks.
+
+CLI:  PYTHONPATH=src python -m repro.tracks.workflow --backend processes
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import json
 import os
-import time
 from typing import Optional
 
-from repro.core.selfsched import JobResult, Manager, ManagerCheckpoint
+from repro.core.triples import TriplesConfig
 from repro.geometry.aerodromes import synthetic_aerodromes
 from repro.geometry.dem import SyntheticGlobeDEM
+from repro.runtime import ManagerCheckpoint, RunResult, run_job
 from repro.tracks.archive import Archiver, archive_tasks_from_tree
 from repro.tracks.datasets import ScaledDatasetSpec, write_scaled_dataset
 from repro.tracks.organize import Organizer, organize_tasks_from_dir
@@ -34,7 +41,7 @@ class PhaseReport:
     messages: int
 
     @classmethod
-    def from_job(cls, phase: str, r: JobResult, tasks: int,
+    def from_job(cls, phase: str, r: RunResult, tasks: int,
                  workers: int) -> "PhaseReport":
         return cls(phase=phase, job_seconds=r.job_seconds, tasks=tasks,
                    workers=workers, messages=r.messages_sent)
@@ -47,16 +54,29 @@ class TrackWorkflow:
                  organization: str = "largest_first",
                  poll_interval: float = 0.01,
                  backend: str = "pallas",
+                 exec_backend: str = "threads",
+                 tasks_per_message: int = 1,
+                 checkpoint_interval_s: float = 0.5,
+                 triple: Optional[TriplesConfig] = None,
                  seed: int = 0):
+        if exec_backend not in ("threads", "processes"):
+            raise ValueError(
+                "workflow phases do real work; exec_backend must be "
+                "'threads' or 'processes' (use benchmarks/run.py "
+                "--backend sim for simulated timing)")
         self.root = root
         self.raw_dir = os.path.join(root, "raw")
         self.organized_dir = os.path.join(root, "organized")
         self.archive_dir = os.path.join(root, "archived")
         self.ckpt_path = os.path.join(root, "workflow_ckpt.json")
-        self.n_workers = n_workers
+        self.n_workers = (max(triple.worker_processes, 1)
+                          if triple is not None else n_workers)
         self.organization = organization
         self.poll_interval = poll_interval
         self.backend = backend
+        self.exec_backend = exec_backend
+        self.tasks_per_message = tasks_per_message
+        self.checkpoint_interval_s = checkpoint_interval_s
         self.seed = seed
         self.registry = synthetic_registry(n=2000, seed=seed + 13)
         self.reports: list[PhaseReport] = []
@@ -84,16 +104,34 @@ class TrackWorkflow:
         return len(paths)
 
     def _run_phase(self, phase: str, tasks, fn,
-                   organization: Optional[str] = None) -> JobResult:
+                   organization: Optional[str] = None,
+                   tasks_per_message: Optional[int] = None) -> RunResult:
         state = self._load_ckpt()
         ck = None
         if state.get("manager") and state.get("manager_phase") == phase:
             ck = ManagerCheckpoint.loads(state["manager"])
-        mgr = Manager(tasks, self.n_workers, fn,
-                      organization=organization or self.organization,
-                      poll_interval=self.poll_interval,
-                      checkpoint=ck)
-        result = mgr.run()
+
+        def save_mid_phase(c: ManagerCheckpoint) -> None:
+            # Persist the manager's ledger periodically so a kill mid-phase
+            # resumes from the last checkpoint instead of re-running the
+            # whole phase.
+            mid = dict(state)
+            mid["manager"] = c.dumps()
+            mid["manager_phase"] = phase
+            self._save_ckpt(mid)
+
+        result = run_job(
+            tasks, fn,
+            backend=self.exec_backend,
+            n_workers=self.n_workers,
+            organization=organization or self.organization,
+            tasks_per_message=(tasks_per_message
+                               if tasks_per_message is not None
+                               else self.tasks_per_message),
+            poll_interval=self.poll_interval,
+            checkpoint=ck,
+            on_checkpoint=save_mid_phase,
+            checkpoint_interval_s=self.checkpoint_interval_s)
         state["phases_done"].append(phase)
         state["manager"] = None
         state["manager_phase"] = None
@@ -121,6 +159,46 @@ class TrackWorkflow:
                 aerodromes=synthetic_aerodromes(n=64),
                 backend=self.backend)
             tasks = segment_tasks_from_archive_tree(self.archive_dir)
-            # §IV.C: random organization for processing.
+            # §IV.C: random organization for processing.  A multi-task
+            # ASSIGN executes as ONE vectorized pallas call via
+            # SegmentProcessor.process_batch.
             self._run_phase("process", tasks, proc, organization="random")
         return self.reports
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Run the organize->archive->process track workflow "
+                    "on a chosen execution backend.")
+    ap.add_argument("--root", default="experiments/trackwf")
+    ap.add_argument("--backend", default="threads",
+                    choices=["threads", "processes"],
+                    help="execution backend for the self-scheduled phases")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--nodes", type=int, default=None,
+                    help="triples-mode nodes (overrides --workers)")
+    ap.add_argument("--nppn", type=int, default=None,
+                    help="triples-mode processes per node")
+    ap.add_argument("--files", type=int, default=8)
+    ap.add_argument("--scale", type=float, default=2e4)
+    ap.add_argument("--tasks-per-message", type=int, default=4)
+    args = ap.parse_args()
+
+    triple = None
+    if args.nodes is not None:
+        triple = TriplesConfig(nodes=args.nodes, nppn=args.nppn or 8)
+    wf = TrackWorkflow(args.root, n_workers=args.workers,
+                       exec_backend=args.backend,
+                       tasks_per_message=args.tasks_per_message,
+                       poll_interval=0.005, triple=triple)
+    if not os.path.isdir(wf.raw_dir):
+        n = wf.generate_raw(n_files=args.files, scale=args.scale)
+        print(f"generated {n} raw files under {wf.raw_dir}")
+    for r in wf.run():
+        print(f"{r.phase:10s}: {r.tasks:5d} tasks on {r.workers} "
+              f"{args.backend} workers in {r.job_seconds:.2f}s "
+              f"({r.messages} messages)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Strategy subset for the hypothesis shim (see package docstring).
+
+Each strategy is just a deterministic ``draw(rng)``; only the strategies
+the test suite uses are implemented: integers, lists, sampled_from,
+floats, booleans, just, tuples, composite.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, Sequence
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn: Callable[[random.Random], Any],
+                 label: str = "strategy"):
+        self._draw = draw_fn
+        self._label = label
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, f: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: f(self._draw(rng)),
+                              f"{self._label}.map")
+
+    def __repr__(self) -> str:
+        return self._label
+
+
+def integers(min_value: int = -(2 ** 16),
+             max_value: int = 2 ** 16) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value),
+                          f"integers({min_value}, {max_value})")
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_kw) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: rng.uniform(min_value, max_value),
+        f"floats({min_value}, {max_value})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, f"just({value!r})")
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from needs a non-empty sequence")
+    return SearchStrategy(
+        lambda rng: elements[rng.randrange(len(elements))],
+        f"sampled_from({elements!r})")
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+    return SearchStrategy(draw, f"lists({elements!r})")
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.draw(rng) for s in strategies), "tuples")
+
+
+def composite(f: Callable[..., Any]) -> Callable[..., SearchStrategy]:
+    """``@st.composite`` — f's first arg is the ``draw`` callable."""
+    def builder(*args, **kwargs) -> SearchStrategy:
+        def draw_value(rng: random.Random):
+            return f(lambda strategy: strategy.draw(rng), *args, **kwargs)
+        return SearchStrategy(draw_value, f"composite({f.__name__})")
+    return builder

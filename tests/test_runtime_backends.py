@@ -1,0 +1,265 @@
+"""Backend equivalence: one protocol core over threads/processes/sim.
+
+The acceptance bar of the runtime refactor: the same fixed-seed workload
+must complete the identical task-id set with identical message-batching
+behavior on every backend, and worker death must re-queue on (at least)
+two backends.
+"""
+
+import json
+import os
+import time
+
+import pytest
+
+from repro.core.cost_model import PhaseCostModel
+from repro.core.messages import Task
+from repro.core.triples import TriplesConfig
+from repro.runtime import ManagerCheckpoint, SchedulerCore, run_job
+from repro.tracks.workflow import TrackWorkflow
+
+BACKENDS = ["threads", "processes", "sim"]
+FAST = dict(poll_interval=0.002)
+
+SIM_MODEL = PhaseCostModel(
+    name="t", r_process=1e6, b_node=8e6, b_global=64e6,
+    cpu_rate=50e6, contention_alpha=0.001, task_overhead_s=0.01,
+    msg_overhead_s=0.001)
+
+
+def _tasks(n, size_fn=lambda i: (i * 37) % 23 + 1):
+    return [Task(task_id=f"t{i:04d}", size_bytes=size_fn(i), timestamp=i)
+            for i in range(n)]
+
+
+def _double(task):            # module-level: picklable for processes
+    return task.size_bytes * 2
+
+
+def _slow(task):
+    time.sleep(0.001)
+    return 1
+
+
+# -- completion + batching equivalence ----------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_completes_all(backend):
+    r = run_job(_tasks(30), _double, backend=backend, n_workers=4,
+                tasks_per_message=3, **FAST)
+    assert r.completed_ids == {t.task_id for t in _tasks(30)}
+    assert r.messages_sent == 10
+    assert r.backend == backend
+
+
+def test_backends_identical_completion_and_batching():
+    runs = {b: run_job(_tasks(40), _double, backend=b, n_workers=5,
+                       tasks_per_message=4, organization="largest_first",
+                       **FAST)
+            for b in BACKENDS}
+    ids = {b: r.completed_ids for b, r in runs.items()}
+    assert ids["threads"] == ids["processes"] == ids["sim"]
+    # The dispatch log (sequence of ASSIGN batches) is decided by the
+    # shared SchedulerCore, so it is bit-identical across backends.
+    assert runs["threads"].batches == runs["processes"].batches \
+        == runs["sim"].batches
+    # Results travel in DONE messages on both live backends.
+    assert runs["threads"].results == runs["processes"].results
+    assert len(runs["threads"].results) == 40
+
+
+def test_random_organization_seed_consistent_across_backends():
+    runs = [run_job(_tasks(25), _double, backend=b, n_workers=3,
+                    organization="random", organize_seed=7,
+                    tasks_per_message=2, **FAST)
+            for b in BACKENDS]
+    assert runs[0].batches == runs[1].batches == runs[2].batches
+
+
+def test_triple_selects_worker_count_uniformly():
+    triple = TriplesConfig(nodes=1, nppn=8)     # 8 processes -> 7 workers
+    for backend in ("threads", "sim"):
+        r = run_job(_tasks(10), _double, backend=backend, triple=triple,
+                    **FAST)
+        assert len(r.worker_stats) == triple.worker_processes == 7
+
+
+# -- fault injection on two live backends + sim --------------------------
+
+
+def _slow20(task):
+    time.sleep(0.02)
+    return 1
+
+
+@pytest.mark.parametrize("backend", ["threads", "processes"])
+def test_worker_death_requeues(backend):
+    # Enough aggregate work (60 x 20ms) that w0 is guaranteed to receive
+    # its fatal 4th task even when spawn-based workers boot staggered.
+    r = run_job(_tasks(60), _slow20, backend=backend, n_workers=4,
+                failure_timeout=0.5, worker_fail_after={"w0": 3}, **FAST)
+    assert r.completed_ids == {t.task_id for t in _tasks(60)}
+    assert r.failed_workers == ["w0"]
+    assert r.reassigned_tasks >= 1
+
+
+def test_long_task_does_not_trip_failure_detection():
+    """Heartbeats beat THROUGH task execution: a healthy worker busy far
+    longer than failure_timeout must not be condemned."""
+    def long_task(task):
+        time.sleep(0.4)
+        return 1
+
+    r = run_job(_tasks(4), long_task, backend="threads", n_workers=2,
+                failure_timeout=0.1, **FAST)
+    assert r.completed_ids == {t.task_id for t in _tasks(4)}
+    assert r.failed_workers == []
+    assert r.reassigned_tasks == 0
+
+
+def test_hard_thread_death_detected_without_timeout():
+    """A worker whose thread dies hard is detected even with no
+    failure_timeout configured (no silent hang)."""
+    r = run_job(_tasks(20), _slow, backend="threads", n_workers=3,
+                worker_fail_after={"w1": 2}, **FAST)
+    assert r.completed_ids == {t.task_id for t in _tasks(20)}
+    assert r.failed_workers == ["w1"]
+    assert r.reassigned_tasks >= 1
+
+
+def _poison(task):
+    # First worker to see t0003 dies hard (os._exit: no DONE, no FAILED);
+    # the file flag makes the re-queued copy succeed on the next worker.
+    flag = task.payload
+    if task.task_id == "t0003" and flag and not os.path.exists(flag):
+        open(flag, "w").close()
+        os._exit(1)
+    time.sleep(0.001)
+    return 1
+
+
+def test_hard_process_death_detected_without_timeout(tmp_path):
+    """An OOM-kill-style process death (no DONE, no FAILED, process gone)
+    is detected without failure_timeout — the job must not hang."""
+    flag = str(tmp_path / "died_once")
+    tasks = [Task(task_id=f"t{i:04d}", size_bytes=(i * 37) % 23 + 1,
+                  payload=flag) for i in range(20)]
+    r = run_job(tasks, _poison, backend="processes", n_workers=3, **FAST)
+    assert r.completed_ids == {t.task_id for t in tasks}
+    assert len(r.failed_workers) == 1
+    assert r.reassigned_tasks >= 1
+
+
+def test_sim_worker_death_requeues():
+    tasks = _tasks(40, size_fn=lambda i: 10_000_000)
+    r = run_job(tasks, backend="sim", n_workers=8, nodes=1, nppn=8,
+                cost_model=SIM_MODEL, worker_death={0: 5.0},
+                failure_timeout=2.0)
+    assert r.completed_ids == {t.task_id for t in tasks}
+    assert r.dead_workers == [0]
+    assert r.reassigned_tasks >= 1
+
+
+def test_sim_all_workers_dead_raises():
+    """Same contract as live backends: an unfinishable job raises rather
+    than returning a silently partial result."""
+    tasks = _tasks(40, size_fn=lambda i: 10_000_000)
+    with pytest.raises(RuntimeError, match="incomplete"):
+        run_job(tasks, backend="sim", n_workers=4, nodes=1, nppn=4,
+                cost_model=SIM_MODEL,
+                worker_death={i: 1.0 for i in range(4)},
+                failure_timeout=2.0)
+
+
+def test_batch_fn_runs_whole_assign_message():
+    calls = []
+
+    class BatchedFn:
+        def __call__(self, task):
+            return task.size_bytes
+
+        def process_batch(self, tasks):
+            calls.append(len(tasks))
+            return {t.task_id: t.size_bytes for t in tasks}
+
+    r = run_job(_tasks(24), BatchedFn(), backend="threads", n_workers=2,
+                tasks_per_message=6, **FAST)
+    assert len(r.completed_ids) == 24
+    assert calls and all(c == 6 for c in calls)   # one call per message
+
+
+# -- mid-phase manager checkpointing -------------------------------------
+
+
+def test_on_checkpoint_called_mid_job():
+    seen = []
+    run_job(_tasks(40), _slow, backend="threads", n_workers=2,
+            on_checkpoint=lambda ck: seen.append(ck),
+            checkpoint_interval_s=0.005, **FAST)
+    assert seen, "expected at least one mid-job checkpoint"
+    assert all(isinstance(c, ManagerCheckpoint) for c in seen)
+    # A mid-job checkpoint is a partial ledger.
+    assert 0 < len(seen[0].completed) <= 40
+
+
+def test_workflow_saves_mid_phase_checkpoints(tmp_path, monkeypatch):
+    wf = TrackWorkflow(str(tmp_path), n_workers=2, poll_interval=0.002,
+                       checkpoint_interval_s=0.005)
+    saved = []
+    orig = wf._save_ckpt
+
+    def spy(state):
+        saved.append(json.loads(json.dumps(state)))
+        orig(state)
+
+    monkeypatch.setattr(wf, "_save_ckpt", spy)
+    wf._run_phase("organize", _tasks(40), _slow)
+    mid = [s for s in saved if s.get("manager")]
+    assert mid, "no mid-phase manager checkpoint was persisted"
+    assert mid[0]["manager_phase"] == "organize"
+    ck = ManagerCheckpoint.loads(mid[0]["manager"])
+    assert 0 < len(ck.completed) <= 40
+    # After the phase completes the manager slot is cleared.
+    final = saved[-1]
+    assert final["manager"] is None
+    assert "organize" in final["phases_done"]
+
+
+def test_workflow_resumes_from_mid_phase_checkpoint(tmp_path):
+    tasks = _tasks(20)
+    done_before = {f"t{i:04d}" for i in range(12)}
+    ck = ManagerCheckpoint(done_before, [])
+    state = {"phases_done": [], "manager": ck.dumps(),
+             "manager_phase": "organize"}
+    os.makedirs(tmp_path, exist_ok=True)
+    with open(os.path.join(tmp_path, "workflow_ckpt.json"), "w") as f:
+        json.dump(state, f)
+
+    ran = []
+    wf = TrackWorkflow(str(tmp_path), n_workers=2, poll_interval=0.002)
+    wf._run_phase("organize", tasks, lambda t: ran.append(t.task_id))
+    assert sorted(ran) == sorted(
+        t.task_id for t in tasks if t.task_id not in done_before)
+
+
+# -- protocol-core unit behavior -----------------------------------------
+
+
+def test_core_exactly_once_on_late_done():
+    core = SchedulerCore(_tasks(4), tasks_per_message=2)
+    b1 = core.next_batch("w0")
+    assert [t.task_id for t in b1] == ["t0003", "t0001"]  # largest first
+    core.mark_dead("w0")       # requeues the in-flight pair
+    assert core.reassigned == 2
+    # Late DONE from the "dead" worker: exactly-once, no double count.
+    assert core.on_done("w0", ["t0001"]) == ["t0001"]
+    assert core.on_done("w0", ["t0001"]) == []
+    # The stale requeued copy is skipped at dispatch time.
+    b2 = core.next_batch("w1")
+    assert "t0001" not in {t.task_id for t in b2}
+
+
+def test_core_rejects_duplicate_task_ids():
+    with pytest.raises(ValueError, match="unique"):
+        SchedulerCore([Task(task_id="a"), Task(task_id="a")])

@@ -115,6 +115,37 @@ def test_processing_produces_valid_segments(workflow):
     assert np.all(out.alt_agl_m[mask] <= out.alt_msl_m[mask] + 1e-3)
 
 
+def test_segment_batch_matches_per_task(workflow):
+    """process_batch (one vectorized pallas call per ASSIGN message) must
+    agree with per-task dispatch."""
+    from repro.tracks.segments import segment_tasks_from_archive_tree
+    tasks = segment_tasks_from_archive_tree(workflow.archive_dir)[:3]
+    assert tasks
+    proc = SegmentProcessor(backend="pallas")
+    batched = proc.process_batch(tasks)
+    assert set(batched) == {t.task_id for t in tasks}
+    for t in tasks:
+        single = proc(t)
+        b = batched[t.task_id]
+        assert b.icao24 == single.icao24
+        assert b.airspace == single.airspace
+        np.testing.assert_array_equal(b.count, single.count)
+        for field in ("times", "lat", "lon", "alt_msl_m", "alt_agl_m",
+                      "vrate_ms", "gspeed_ms", "heading_rad", "turn_rad_s"):
+            np.testing.assert_allclose(
+                getattr(b, field), getattr(single, field),
+                atol=1e-4, rtol=1e-4, err_msg=field)
+
+
+def test_workflow_runs_on_process_backend(tmp_path):
+    wf = TrackWorkflow(str(tmp_path), n_workers=2, poll_interval=0.003,
+                       exec_backend="processes", tasks_per_message=2)
+    wf.generate_raw(n_files=3, scale=2e4)
+    reports = wf.run()
+    assert [r.phase for r in reports] == ["organize", "archive", "process"]
+    assert all(r.tasks > 0 for r in reports)
+
+
 def test_workflow_checkpoint_resume(tmp_path):
     wf = TrackWorkflow(str(tmp_path), n_workers=2, poll_interval=0.003)
     wf.generate_raw(n_files=3, scale=2e4)
