@@ -1,158 +1,47 @@
-"""Beyond-paper benchmarks — the paper's own declared future work.
+"""Beyond-paper benchmarks — thin adapter over repro.bench.beyond.
 
-§VI: "Additional benchmarking is possible future work, as we did not
-vary the number of threads" — plus two knobs the paper fixed on LLSC
-advice (0.3 s poll) or abandoned after one data point (tasks/message).
-
-  * threads_sweep    — vary threads-per-process at fixed cores
-  * poll_sweep       — vary the 0.3 s poll interval
-  * batching_regimes — tasks/message across task-size regimes: shows WHY
-                       k>1 hurt dataset #1 (2425 big tasks) but k=300
-                       was required for radar (13.2 M tiny tasks)
-  * failure_sweep    — makespan vs worker-failure rate (self-scheduling's
-                       re-queue keeps the job alive; the paper has no
-                       failure story at all)
+The sweep declarations (threads-per-process, poll interval, batching
+regimes, failures, stragglers) live in :mod:`repro.bench.beyond` as
+scenario-matrix cells; this module only groups them for the historical
+CSV harness (benchmarks/run.py).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-
-import numpy as np
-
-from repro.core import (
-    ORGANIZE_PHASE, RADAR_PHASE, simulate_self_scheduling)
-from repro.core.cost_model import PhaseCostModel
-from repro.tracks.datasets import monday_manifest, radar_message_manifest
+from repro.bench import beyond_scenarios, csv_rows, run_scenario
 
 
-def _timed(fn):
-    t0 = time.perf_counter()
-    out = fn()
-    return out, (time.perf_counter() - t0) * 1e6
+def _rows(*groups: str) -> list[str]:
+    return csv_rows([run_scenario(sc) for sc in beyond_scenarios()
+                     if sc.group in groups])
 
 
 def threads_sweep() -> list[str]:
-    """Threads-per-process: more threads/process at fixed total cores
-    means fewer processes sharing the node's I/O path (lower effective
-    NPPN) but also fewer concurrent workers. Model: nppn' = nppn/threads,
-    workers' = workers/threads, per-task CPU / threads**0.7 (imperfect
-    intra-task scaling)."""
-    tasks = monday_manifest()
-    rows = []
-    for threads in (1, 2, 4):
-        m = dataclasses.replace(
-            ORGANIZE_PHASE,
-            cpu_rate=ORGANIZE_PHASE.cpu_rate * threads ** 0.7)
-        workers = 1024 // threads - 1
-        nppn = max(16 // threads, 1)
-        r, us = _timed(lambda: simulate_self_scheduling(
-            tasks, n_workers=workers, nodes=64, nppn=nppn, model=m,
-            organization="largest_first"))
-        rows.append(f"beyond_threads_{threads},{us:.0f},"
-                    f"{r.job_seconds:.0f}s_{workers}workers")
-    return rows
+    """Vary threads-per-process at fixed total cores (§VI future work)."""
+    return _rows("beyond_threads")
 
 
 def poll_sweep() -> list[str]:
-    """The 0.3 s poll was an LLSC recommendation, never benchmarked.
-    For dataset #1's ~600 s tasks it is irrelevant; it only matters when
-    tasks are near the poll scale."""
-    tasks = monday_manifest()
-    rows = []
-    for poll in (0.05, 0.3, 2.0, 10.0):
-        r, us = _timed(lambda: simulate_self_scheduling(
-            tasks, n_workers=511, nodes=64, nppn=8, model=ORGANIZE_PHASE,
-            organization="largest_first", poll_interval=poll))
-        rows.append(f"beyond_poll_{poll},{us:.0f},{r.job_seconds:.0f}s")
-    return rows
+    """Vary the 0.3 s poll interval (an LLSC recommendation, never
+    benchmarked)."""
+    return _rows("beyond_poll")
 
 
 def batching_regimes() -> list[str]:
-    """tasks/message interacts with the task-size regime: batching is a
-    load-balancing tax on big-task jobs and a manager-serialization
-    rescue on tiny-task jobs."""
-    rows = []
-    # Regime 1: dataset #1 (2425 tasks, ~600 s each) — batching hurts.
-    big = monday_manifest()
-    for k in (1, 8):
-        r, us = _timed(lambda: simulate_self_scheduling(
-            big, n_workers=511, nodes=64, nppn=8, model=ORGANIZE_PHASE,
-            organization="largest_first", tasks_per_message=k))
-        rows.append(f"beyond_batch_bigtasks_k{k},{us:.0f},"
-                    f"{r.job_seconds:.0f}s")
-    # Regime 2: radar-like tiny tasks where the MANAGER's serial send
-    # loop is the constraint (the reason §V used 300 tasks/message):
-    # 131,400 x ~0.25 s tasks on 1023 workers — work/worker ~= 85 s while
-    # unbatched messaging costs 131,400 x 2 ms = 263 s of pure manager
-    # serialization. k=1 is manager-bound, k=300 is granularity-bound at
-    # this task count, k=30 balances both.
-    from repro.core.messages import Task
-    rng = np.random.default_rng(0)
-    tiny = [Task(task_id=f"t{i:06d}", size_bytes=400_000,
-                 cpu_cost_hint=float(rng.gamma(8.0, 0.25 / 8)))
-            for i in range(131_400)]
-    for k in (1, 30, 300):
-        r, us = _timed(lambda kk=k: simulate_self_scheduling(
-            tiny, n_workers=1023, nodes=128, nppn=8, model=RADAR_PHASE,
-            organization="random", tasks_per_message=kk))
-        rows.append(
-            f"beyond_batch_tinytasks_k{k},{us:.0f},"
-            f"{r.job_seconds:.0f}s_msgs{r.messages_sent}")
-    return rows
+    """tasks/message across task-size regimes: a load-balancing tax on
+    big-task jobs, a manager-serialization rescue on tiny-task jobs."""
+    return _rows("beyond_batch_bigtasks", "beyond_batch_tinytasks")
 
 
 def failure_sweep() -> list[str]:
-    """Worker deaths at increasing rates: self-scheduling re-queues the
-    lost work; makespan grows ~linearly with lost capacity, no cliff."""
-    tasks = monday_manifest()
-    rows = []
-    for frac in (0.0, 0.05, 0.2):
-        n_workers = 511
-        deaths = {i: 1000.0 + 7.0 * i
-                  for i in range(int(n_workers * frac))}
-        r, us = _timed(lambda: simulate_self_scheduling(
-            tasks, n_workers=n_workers, nodes=64, nppn=8,
-            model=ORGANIZE_PHASE, organization="largest_first",
-            worker_death=deaths, failure_timeout=30.0))
-        rows.append(
-            f"beyond_failures_{int(frac*100)}pct,{us:.0f},"
-            f"{r.job_seconds:.0f}s_reassigned{r.reassigned_tasks}")
-    return rows
+    """Worker deaths at increasing rates: re-queue keeps the job alive."""
+    return _rows("beyond_failures")
 
 
 def straggler_sweep() -> list[str]:
-    """Persistent SLOW workers (not dead — 4x slower): the quantitative
-    version of the paper's central qualitative claim. Static distribution
-    is hostage to its slowest assignee; self-scheduling routes work away
-    from stragglers automatically."""
-    from repro.core import simulate_static
-    tasks = monday_manifest()
-    n_workers = 511
-    rows = []
-    rng = np.random.default_rng(0)
-    for frac in (0.0, 0.1):
-        speed = np.ones(n_workers)
-        slow = rng.choice(n_workers, int(n_workers * frac), replace=False)
-        speed[slow] = 0.25
-        rs, us1 = _timed(lambda: simulate_self_scheduling(
-            tasks, n_workers=n_workers, nodes=64, nppn=8,
-            model=ORGANIZE_PHASE, organization="largest_first",
-            worker_speed=speed))
-        rb, us2 = _timed(lambda: simulate_static(
-            tasks, n_workers=n_workers, nodes=64, nppn=8,
-            model=ORGANIZE_PHASE, policy="cyclic",
-            organization="chronological", worker_speed=speed))
-        rsp, us3 = _timed(lambda: simulate_self_scheduling(
-            tasks, n_workers=n_workers, nodes=64, nppn=8,
-            model=ORGANIZE_PHASE, organization="largest_first",
-            worker_speed=speed, speculative=True))
-        rows.append(
-            f"beyond_stragglers_{int(frac*100)}pct,{us1+us2+us3:.0f},"
-            f"selfsched={rs.job_seconds:.0f}s_static={rb.job_seconds:.0f}s"
-            f"_speculative={rsp.job_seconds:.0f}s")
-    return rows
+    """Persistent 4x-slow workers: self-scheduling vs static vs
+    speculative backup tasks."""
+    return _rows("beyond_stragglers")
 
 
 ALL = [threads_sweep, poll_sweep, batching_regimes, failure_sweep,

@@ -1,173 +1,64 @@
-"""One benchmark per paper table/figure (simulator at full LLSC scale).
+"""One benchmark per paper table/figure — thin adapter over repro.bench.
 
-Each function returns a list of CSV rows ``name,us_per_call,derived``:
-  * us_per_call — wall-clock microseconds to produce the benchmark
-    (i.e. simulator cost on this container);
-  * derived — the headline figure-of-merit the paper reports
-    (job seconds, reduction %, span hours, ...).
+The scenario *declarations* (datasets, triples, organizations, reference
+cells, tolerances) live in :mod:`repro.bench.paper`; this module only
+groups them for the historical ``name,us_per_call,derived`` CSV harness
+(benchmarks/run.py).  For the structured artifact with per-cell deltas
+and pass/fail checks, run ``python -m repro.bench.campaign`` instead.
 """
 
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
-from repro.core import (
-    ARCHIVE_PHASE, ORGANIZE_PHASE, PROCESS_PHASE, RADAR_PHASE,
-    feasible_table_cells, simulate_self_scheduling, simulate_static)
-from repro.core.cost_model import LEGACY_LAUNCH_PENALTY
-from repro.tracks.datasets import (
-    aircraft_archive_manifest, monday_manifest, processing_manifest,
-    radar_message_manifest)
-
-PAPER_TABLE1 = {(2048, 32): 5640, (1024, 32): 5944, (512, 32): 7493,
-                (256, 32): 11944, (1024, 16): 5963, (512, 16): 7157,
-                (256, 16): 11860, (512, 8): 6989, (256, 8): 11860}
-PAPER_TABLE2 = {(2048, 32): 5456, (1024, 32): 5704, (512, 32): 6608,
-                (256, 32): 11015, (1024, 16): 5568, (512, 16): 6330,
-                (256, 16): 10428, (512, 8): 6171, (256, 8): 10428}
+from repro.bench import csv_rows, paper_scenarios, run_scenario
+from repro.bench.paper import (          # noqa: F401  (back-compat re-export)
+    PAPER_TABLE1, PAPER_TABLE2, TABLE_TOLERANCE)
 
 
-def _timed(fn):
-    t0 = time.perf_counter()
-    out = fn()
-    return out, (time.perf_counter() - t0) * 1e6
+def _rows(*groups: str) -> list[str]:
+    return csv_rows([run_scenario(sc) for sc in paper_scenarios()
+                     if sc.group in groups])
 
 
 def table1_organize_chrono() -> list[str]:
     """TABLE I: organize dataset #1, chronological + self-scheduling."""
-    tasks = monday_manifest()
-    rows = []
-    for cores, nppn in feasible_table_cells():
-        r, us = _timed(lambda: simulate_self_scheduling(
-            tasks, n_workers=cores - 1, nodes=cores // nppn, nppn=nppn,
-            model=ORGANIZE_PHASE, organization="chronological"))
-        paper = PAPER_TABLE1[(cores, nppn)]
-        rows.append(f"table1_c{cores}_n{nppn},{us:.0f},"
-                    f"{r.job_seconds:.0f}s_sim_vs_{paper}s_paper")
-    return rows
+    return _rows("table1")
 
 
 def table2_organize_size() -> list[str]:
     """TABLE II: organize dataset #1, largest-first + self-scheduling."""
-    tasks = monday_manifest()
-    rows = []
-    for cores, nppn in feasible_table_cells():
-        r, us = _timed(lambda: simulate_self_scheduling(
-            tasks, n_workers=cores - 1, nodes=cores // nppn, nppn=nppn,
-            model=ORGANIZE_PHASE, organization="largest_first"))
-        paper = PAPER_TABLE2[(cores, nppn)]
-        rows.append(f"table2_c{cores}_n{nppn},{us:.0f},"
-                    f"{r.job_seconds:.0f}s_sim_vs_{paper}s_paper")
-    return rows
+    return _rows("table2")
 
 
 def fig4_jobtime() -> list[str]:
     """Fig 4: job time vs cores; the 50%-fewer-nodes headline."""
-    tasks = monday_manifest()
-    (better, worse), us = _timed(lambda: (
-        simulate_self_scheduling(tasks, n_workers=1023, nodes=64, nppn=16,
-                                 model=ORGANIZE_PHASE,
-                                 organization="largest_first"),
-        simulate_self_scheduling(tasks, n_workers=2047, nodes=64, nppn=32,
-                                 model=ORGANIZE_PHASE,
-                                 organization="chronological")))
-    return [f"fig4_1024c16_size_beats_2048c32_chrono,{us:.0f},"
-            f"{better.job_seconds:.0f}s<{worse.job_seconds:.0f}s"]
+    return _rows("fig4")
 
 
 def fig56_worker_dists() -> list[str]:
     """Figs 5-6: worker-time distribution shift/shape."""
-    tasks = monday_manifest()
-    rows = []
-    for org in ("chronological", "largest_first"):
-        r, us = _timed(lambda: simulate_self_scheduling(
-            tasks, n_workers=255, nodes=32, nppn=8, model=ORGANIZE_PHASE,
-            organization=org))
-        busy = np.array([b for b in r.worker_busy if b > 0])
-        rows.append(
-            f"fig56_{org},{us:.0f},"
-            f"median={np.median(busy):.0f}s_span={r.worker_time_span:.0f}s")
-    return rows
+    return _rows("fig56")
 
 
 def fig7_tasks_per_message() -> list[str]:
     """Fig 7: performance decrease as tasks/message increases."""
-    tasks = monday_manifest()
-    rows = []
-    for k in (1, 2, 4, 8, 16):
-        r, us = _timed(lambda: simulate_self_scheduling(
-            tasks, n_workers=511, nodes=64, nppn=8, model=ORGANIZE_PHASE,
-            organization="largest_first", tasks_per_message=k))
-        rows.append(f"fig7_k{k},{us:.0f},{r.job_seconds:.0f}s")
-    return rows
-
-
-def sec4b_archive_cyclic() -> list[str]:
-    """§IV.B: block -> cyclic archive job time reduction (>90%)."""
-    arch = aircraft_archive_manifest()
-    (rb, rc), us = _timed(lambda: (
-        simulate_static(arch, n_workers=1023, nodes=64, nppn=16,
-                        model=ARCHIVE_PHASE, policy="block"),
-        simulate_static(arch, n_workers=1023, nodes=64, nppn=16,
-                        model=ARCHIVE_PHASE, policy="cyclic")))
-    red = (1 - rc.job_seconds / rb.job_seconds) * 100
-    return [f"sec4b_block_to_cyclic,{us:.0f},"
-            f"{red:.1f}pct_reduction_paper_gt90"]
+    return _rows("fig7")
 
 
 def sec4a_median_worker() -> list[str]:
     """§IV.A: median worker time -14% vs legacy batch/block."""
-    tasks = monday_manifest()
-    (rs, rb), us = _timed(lambda: (
-        simulate_self_scheduling(tasks, n_workers=255, nodes=32, nppn=8,
-                                 model=ORGANIZE_PHASE,
-                                 organization="largest_first"),
-        simulate_static(tasks, n_workers=255, nodes=32, nppn=8,
-                        model=ORGANIZE_PHASE, policy="block",
-                        organization="chronological",
-                        legacy_launch_penalty=LEGACY_LAUNCH_PENALTY)))
-    delta = (rs.median_worker_busy / rb.median_worker_busy - 1) * 100
-    return [f"sec4a_median_worker_delta,{us:.0f},"
-            f"{delta:.1f}pct_paper_minus14"]
+    return _rows("sec4a")
 
 
-def fig8_processing() -> list[str]:
-    """§IV.C / Fig 8: processing worker-time distribution."""
-    proc = processing_manifest()
-    r, us = _timed(lambda: simulate_self_scheduling(
-        proc, n_workers=1023, nodes=64, nppn=16, model=PROCESS_PHASE,
-        organization="random"))
-    busy = np.array([b for b in r.worker_busy if b > 0])
-    return [f"fig8_processing,{us:.0f},"
-            f"median={np.median(busy)/3600:.1f}h_paper13.1"
-            f"_max={busy.max()/3600:.1f}h_paper29.6"]
+def sec4b_archive_cyclic() -> list[str]:
+    """§IV.B: block -> cyclic archive job time reduction (>90%)."""
+    return _rows("sec4b")
 
 
-def fig8_legacy_batch() -> list[str]:
-    """§IV.C: legacy batch/block needs >7 days."""
-    proc = processing_manifest()
-    r, us = _timed(lambda: simulate_static(
-        proc, n_workers=1023, nodes=32, nppn=32, model=PROCESS_PHASE,
-        policy="block", organization="filename",
-        legacy_launch_penalty=LEGACY_LAUNCH_PENALTY))
-    return [f"fig8_legacy_batch_block,{us:.0f},"
-            f"{r.job_seconds/86400:.1f}days_paper_gt7"]
-
-
-def fig9_radar() -> list[str]:
-    """§V / Fig 9: radar dataset, 300 tasks/message, tight span."""
-    rad = radar_message_manifest()
-    r, us = _timed(lambda: simulate_self_scheduling(
-        rad, n_workers=1023, nodes=128, nppn=8, model=RADAR_PHASE,
-        organization="random"))
-    busy = np.array([b for b in r.worker_busy if b > 0])
-    return [f"fig9_radar,{us:.0f},"
-            f"median={np.median(busy)/3600:.2f}h_paper24.34"
-            f"_span={(busy.max()-busy.min())/3600:.2f}h_paper1.12"]
+def fig89_processing_radar() -> list[str]:
+    """§IV.C / Fig 8 + §V / Fig 9: processing + radar distributions."""
+    return _rows("fig8", "fig9")
 
 
 ALL = [table1_organize_chrono, table2_organize_size, fig4_jobtime,
-       fig56_worker_dists, fig7_tasks_per_message, sec4b_archive_cyclic,
-       sec4a_median_worker, fig8_processing, fig8_legacy_batch, fig9_radar]
+       fig56_worker_dists, fig7_tasks_per_message, sec4a_median_worker,
+       sec4b_archive_cyclic, fig89_processing_radar]

@@ -2,7 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV rows:
   * paper_tables: Tables I/II + Figs 4-9 + §IV.A/B/C + §V headline
-    numbers, reproduced by the calibrated full-scale simulator;
+    numbers, reproduced by the calibrated full-scale simulator (scenario
+    declarations live in repro.bench.paper);
   * beyond_paper: beyond-paper scenarios (stragglers, speculation, ...);
   * kernels_bench: Pallas kernel micro-benchmarks vs jnp oracles;
   * dispatch_bench: protocol-core dispatch throughput (deque vs the old
@@ -12,41 +13,60 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 ``--backend {threads,processes,sim}`` instead runs one fixed-seed
 self-scheduled smoke workload through the unified runtime entry point
-(``repro.runtime.run_job``) and exits non-zero unless every task
-completes — the CI smoke job is ``benchmarks/run.py --backend sim``.
+(``repro.runtime.run_job``) and writes a structured ``BENCH_smoke.json``
+record; it exits non-zero if the record is schema-invalid or any
+completion check fails — the CI smoke job is
+``benchmarks/run.py --backend sim``.
+
+For the full structured campaign artifact (per-scenario reference deltas,
+regression gates), use ``python -m repro.bench.campaign``.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
 
-
-def _smoke_fn(task):
-    time.sleep(task.size_bytes * 2e-5)   # pretend to parse a file
-    return task.size_bytes
+SMOKE_OUT = "BENCH_smoke.json"
 
 
-def run_backend_smoke(backend: str) -> int:
-    from repro.core.messages import Task
-    from repro.core.triples import TriplesConfig
-    from repro.runtime import run_job
+def run_backend_smoke(backend: str, out: str = SMOKE_OUT) -> int:
+    from repro.bench import (
+        Check, RunSpec, Scenario, csv_rows, run_scenario)
+    from repro.bench.schema import (
+        SCHEMA_VERSION, SMOKE_SCHEMA, validate_smoke)
 
-    tasks = [Task(task_id=f"t{i:04d}", size_bytes=(i * 37) % 23 + 1,
-                  timestamp=i) for i in range(200)]
-    triple = TriplesConfig(nodes=1, nppn=8)     # 8 processes, 7 workers
-    r = run_job(tasks, _smoke_fn, backend=backend, triple=triple,
-                tasks_per_message=5, poll_interval=0.002)
+    sc = Scenario(
+        name=f"run_job_{backend}", group="smoke", tier="quick",
+        run=RunSpec(dataset="smoke", phase="organize", backend=backend,
+                    n_workers=7, nodes=1, nppn=8, tasks_per_message=5),
+        checks=(Check("tasks_completed", "within_abs", 200.0, 0.0,
+                      "smoke invariant (exactly-once completion)"),
+                Check("messages_sent", "within_abs", 40.0, 0.0,
+                      "smoke invariant (200 tasks / 5 per message)")))
+    record = run_scenario(sc)
+    doc = {"schema": SMOKE_SCHEMA, "schema_version": SCHEMA_VERSION,
+           "created_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+           "scenario": record}
+    problems = validate_smoke(doc)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
     print("name,us_per_call,derived")
-    print(f"run_job_{backend},{r.job_seconds * 1e6 / len(tasks):.1f},"
-          f"tasks={len(r.completed_ids)}_msgs={r.messages_sent}"
-          f"_workers={len(r.worker_stats)}", flush=True)
-    ok = r.completed_ids == {t.task_id for t in tasks}
-    if not ok:
-        print(f"run_job_{backend},0,ERROR_incomplete", flush=True)
-    return 0 if ok else 1
+    print(csv_rows([record])[0], flush=True)
+    if problems:
+        print(f"{out} is SCHEMA-INVALID: " + "; ".join(problems),
+              file=sys.stderr)
+        return 2
+    print(f"wrote {out}")
+    if record["status"] != "pass":
+        print(f"smoke {record['status']}: {record.get('error') or record['checks']}",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 def main() -> None:
@@ -55,9 +75,11 @@ def main() -> None:
                     choices=["threads", "processes", "sim"],
                     help="run a fixed-seed run_job smoke workload on one "
                          "execution backend instead of the full suite")
+    ap.add_argument("--smoke-out", default=SMOKE_OUT,
+                    help=f"smoke artifact path (default {SMOKE_OUT})")
     args = ap.parse_args()
     if args.backend:
-        sys.exit(run_backend_smoke(args.backend))
+        sys.exit(run_backend_smoke(args.backend, args.smoke_out))
 
     from benchmarks import (beyond_paper, dispatch_bench, kernels_bench,
                             paper_tables, roofline_table)

@@ -1,0 +1,103 @@
+"""Diff two BENCH campaign artifacts: ``python -m repro.bench.compare``.
+
+Matches scenarios by name and compares the deterministic headline metric
+(sim ``job_seconds``) between an old and a new artifact.  A scenario
+*regresses* when its job time grows by more than ``--threshold``
+(relative).  Exit codes: 0 — no regressions; 1 — regressions found.
+
+Typical PR workflow::
+
+    git stash && python -m repro.bench.campaign --quick --out old.json
+    git stash pop && python -m repro.bench.campaign --quick --out new.json
+    python -m repro.bench.compare old.json new.json --threshold 0.10
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+__all__ = ["compare_docs", "render_rows", "main"]
+
+METRIC = "job_seconds"
+
+
+def compare_docs(old: dict, new: dict, *, threshold: float = 0.10,
+                 metric: str = METRIC):
+    """-> (rows, regressions): per-scenario metric deltas old -> new.
+
+    Only scenarios present in both artifacts with a numeric deterministic
+    ``metric`` are compared (live-backend wall-clock times live under
+    ``measured`` and are deliberately NOT regression-gated — they measure
+    the CI machine, not the code).
+    """
+    def metric_map(doc):
+        out = {}
+        for rec in doc.get("scenarios", []):
+            v = rec.get("metrics", {}).get(metric)
+            if isinstance(v, (int, float)) and v > 0:
+                out[rec["name"]] = v
+        return out
+
+    o, n = metric_map(old), metric_map(new)
+    rows, regressions = [], []
+    for name in sorted(o.keys() & n.keys()):
+        delta = n[name] / o[name] - 1.0
+        row = {"name": name, "metric": metric, "old": o[name],
+               "new": n[name], "delta_pct": delta * 100.0,
+               "regressed": delta > threshold}
+        rows.append(row)
+        if row["regressed"]:
+            regressions.append(row)
+    for name in sorted(o.keys() - n.keys()):
+        rows.append({"name": name, "metric": metric, "old": o[name],
+                     "new": None, "delta_pct": None, "regressed": False})
+    for name in sorted(n.keys() - o.keys()):
+        rows.append({"name": name, "metric": metric, "old": None,
+                     "new": n[name], "delta_pct": None, "regressed": False})
+    return rows, regressions
+
+
+def render_rows(rows) -> list[str]:
+    lines = [f"{'scenario':44s} {'old':>12s} {'new':>12s} {'delta':>8s}"]
+    for r in rows:
+        old = f"{r['old']:.1f}" if r["old"] is not None else "-"
+        new = f"{r['new']:.1f}" if r["new"] is not None else "-"
+        delta = (f"{r['delta_pct']:+.1f}%" if r["delta_pct"] is not None
+                 else "n/a")
+        flag = "  << REGRESSED" if r["regressed"] else ""
+        lines.append(f"{r['name']:44s} {old:>12s} {new:>12s} "
+                     f"{delta:>8s}{flag}")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.bench.compare",
+        description="Compare two BENCH_campaign.json artifacts and fail "
+                    "on job-time regressions.")
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max allowed relative regression (default 0.10)")
+    ap.add_argument("--metric", default=METRIC)
+    args = ap.parse_args(argv)
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    rows, regressions = compare_docs(old, new, threshold=args.threshold,
+                                     metric=args.metric)
+    for line in render_rows(rows):
+        print(line)
+    if regressions:
+        print(f"{len(regressions)} scenario(s) regressed beyond "
+              f"{args.threshold:.0%}")
+        return 1
+    print("no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,190 @@
+"""The BENCH artifact schema: validation + canonical serialization.
+
+Two artifact kinds share the scenario-record shape:
+
+  * ``BENCH_campaign.json`` (``repro.bench.campaign/v1``) — one record per
+    scenario plus a campaign summary;
+  * ``BENCH_smoke.json`` (``repro.bench.smoke/v1``) — a single record
+    emitted by ``benchmarks/run.py --backend ...``.
+
+Scenario record layout::
+
+    {
+      "name": str, "group": str, "tier": str, "status": str,
+      "spec":     {"run": {...RunSpec...}, "baseline": {...}|null},
+      "metrics":  {...},   # deterministic for a fixed spec + seed
+      "measured": {...},   # wall-clock measurements (live backends)
+      "checks":   [{metric, kind, expect, tol, source, actual, passed}],
+      "timing":   {"wall_s": float},
+      "error":    str|null
+    }
+
+Determinism contract: for a fixed seed, ``canonical_bytes`` of two runs of
+the same campaign are byte-identical.  Everything nondeterministic lives
+under the ``NONDETERMINISTIC_KEYS`` (per record: ``measured``/``timing``;
+per campaign: ``created_at``/``environment``/``timing``), which canonical
+serialization drops.  The validator is hand-rolled (no jsonschema
+dependency in the container).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any
+
+__all__ = ["CAMPAIGN_SCHEMA", "SMOKE_SCHEMA", "SCHEMA_VERSION",
+           "NONDETERMINISTIC_RECORD_KEYS", "NONDETERMINISTIC_DOC_KEYS",
+           "validate_record", "validate_campaign", "validate_smoke",
+           "canonical_bytes"]
+
+SCHEMA_VERSION = 1
+CAMPAIGN_SCHEMA = "repro.bench.campaign/v1"
+SMOKE_SCHEMA = "repro.bench.smoke/v1"
+
+NONDETERMINISTIC_RECORD_KEYS = ("measured", "timing")
+NONDETERMINISTIC_DOC_KEYS = ("created_at", "environment", "timing")
+
+_STATUSES = ("pass", "fail", "ran", "error")
+_CHECK_KEYS = ("metric", "kind", "expect", "tol", "source", "actual",
+               "passed")
+_RECORD_KEYS = ("name", "group", "tier", "status", "spec", "metrics",
+                "measured", "checks", "timing", "error")
+_SPEC_REQUIRED = ("dataset", "phase", "backend", "mode", "n_workers",
+                  "organization", "tasks_per_message", "fault_profile",
+                  "seed")
+
+
+def _num(x: Any) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def validate_record(rec: Any, where: str = "record") -> list[str]:
+    """Structural validation of one scenario record; returns problems."""
+    errs: list[str] = []
+    if not isinstance(rec, dict):
+        return [f"{where}: not an object"]
+    for key in _RECORD_KEYS:
+        if key not in rec:
+            errs.append(f"{where}: missing key {key!r}")
+    for key in ("name", "group", "tier"):
+        if key in rec and not isinstance(rec[key], str):
+            errs.append(f"{where}.{key}: not a string")
+    if rec.get("status") not in _STATUSES:
+        errs.append(f"{where}.status: {rec.get('status')!r} not in "
+                    f"{_STATUSES}")
+    spec = rec.get("spec")
+    if not isinstance(spec, dict) or "run" not in spec:
+        errs.append(f"{where}.spec: missing 'run' object")
+    else:
+        run = spec["run"]
+        if not isinstance(run, dict):
+            errs.append(f"{where}.spec.run: not an object")
+        else:
+            for key in _SPEC_REQUIRED:
+                if key not in run:
+                    errs.append(f"{where}.spec.run: missing key {key!r}")
+        base = spec.get("baseline")
+        if base is not None and not isinstance(base, dict):
+            errs.append(f"{where}.spec.baseline: not an object or null")
+    for key in ("metrics", "measured"):
+        if key in rec and not isinstance(rec[key], dict):
+            errs.append(f"{where}.{key}: not an object")
+    if rec.get("status") in ("pass", "fail", "ran"):
+        merged = {}
+        for key in ("metrics", "measured"):
+            if isinstance(rec.get(key), dict):
+                merged.update(rec[key])
+        for key in ("tasks_completed", "messages_sent"):
+            if not _num(merged.get(key)):
+                errs.append(f"{where}: metric {key!r} missing/non-numeric")
+    checks = rec.get("checks")
+    if not isinstance(checks, list):
+        errs.append(f"{where}.checks: not a list")
+    else:
+        for i, c in enumerate(checks):
+            if not isinstance(c, dict):
+                errs.append(f"{where}.checks[{i}]: not an object")
+                continue
+            for key in _CHECK_KEYS:
+                if key not in c:
+                    errs.append(f"{where}.checks[{i}]: missing {key!r}")
+            if not isinstance(c.get("passed"), bool):
+                errs.append(f"{where}.checks[{i}].passed: not a bool")
+    timing = rec.get("timing")
+    if not isinstance(timing, dict) or not _num(timing.get("wall_s")):
+        errs.append(f"{where}.timing.wall_s: missing/non-numeric")
+    if rec.get("status") == "error" and not isinstance(rec.get("error"), str):
+        errs.append(f"{where}.error: status=error needs an error string")
+    return errs
+
+
+def validate_campaign(doc: Any) -> list[str]:
+    """Structural validation of a whole campaign artifact."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["campaign: not an object"]
+    if doc.get("schema") != CAMPAIGN_SCHEMA:
+        errs.append(f"campaign.schema: {doc.get('schema')!r} != "
+                    f"{CAMPAIGN_SCHEMA!r}")
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        errs.append("campaign.schema_version: missing/mismatched")
+    if not isinstance(doc.get("config"), dict):
+        errs.append("campaign.config: not an object")
+    scenarios = doc.get("scenarios")
+    if not isinstance(scenarios, list) or not scenarios:
+        errs.append("campaign.scenarios: missing/empty list")
+        scenarios = []
+    names = set()
+    for i, rec in enumerate(scenarios):
+        where = (f"scenarios[{i}]({rec.get('name', '?')})"
+                 if isinstance(rec, dict) else f"scenarios[{i}]")
+        errs.extend(validate_record(rec, where))
+        if isinstance(rec, dict):
+            if rec.get("name") in names:
+                errs.append(f"{where}: duplicate scenario name")
+            names.add(rec.get("name"))
+    summary = doc.get("summary")
+    if not isinstance(summary, dict):
+        errs.append("campaign.summary: not an object")
+    else:
+        for key in ("total", "pass", "fail", "ran", "error"):
+            if not isinstance(summary.get(key), int):
+                errs.append(f"campaign.summary.{key}: missing/non-int")
+        if isinstance(doc.get("scenarios"), list) and \
+                summary.get("total") != len(doc["scenarios"]):
+            errs.append("campaign.summary.total != len(scenarios)")
+    return errs
+
+
+def validate_smoke(doc: Any) -> list[str]:
+    """Structural validation of a BENCH_smoke.json artifact."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["smoke: not an object"]
+    if doc.get("schema") != SMOKE_SCHEMA:
+        errs.append(f"smoke.schema: {doc.get('schema')!r} != "
+                    f"{SMOKE_SCHEMA!r}")
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        errs.append("smoke.schema_version: missing/mismatched")
+    errs.extend(validate_record(doc.get("scenario"), "smoke.scenario"))
+    return errs
+
+
+def canonical_bytes(doc: dict) -> bytes:
+    """Deterministic serialization: drop nondeterministic keys, sort keys.
+
+    Two campaigns over the same scenarios with the same seed must agree
+    byte-for-byte here (the acceptance gate for reproducible BENCH
+    artifacts); wall-clock fields are excluded by construction.
+    """
+    def strip_record(rec: dict) -> dict:
+        return {k: v for k, v in rec.items()
+                if k not in NONDETERMINISTIC_RECORD_KEYS}
+
+    out: dict[str, Any] = {k: v for k, v in doc.items()
+                           if k not in NONDETERMINISTIC_DOC_KEYS}
+    if isinstance(out.get("scenarios"), list):
+        out["scenarios"] = [strip_record(r) if isinstance(r, dict) else r
+                            for r in out["scenarios"]]
+    return json.dumps(out, sort_keys=True,
+                      separators=(",", ":")).encode() + b"\n"

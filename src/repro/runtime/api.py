@@ -35,7 +35,16 @@ from repro.runtime import sim as _sim
 
 BACKENDS = ("threads", "processes", "sim")
 
-__all__ = ["BACKENDS", "run_job"]
+__all__ = ["BACKENDS", "default_topology", "run_job"]
+
+
+def default_topology(n_workers: int) -> tuple[int, int]:
+    """Default (nodes, nppn) when no triple is given: NPPN 8 (the paper's
+    best-performing setting), as many nodes as that implies.  Shared by
+    run_job's sim branch and the bench engine's static baselines so both
+    sides of a comparison simulate the same I/O-contention topology.
+    """
+    return max(n_workers // 8, 1), min(n_workers, 8)
 
 
 def run_job(tasks: Sequence[Task],
@@ -98,11 +107,12 @@ def run_job(tasks: Sequence[Task],
         if cost_model is None:
             from repro.core.cost_model import PROCESS_PHASE
             cost_model = PROCESS_PHASE
+        default_nodes, default_nppn = default_topology(n_workers)
         result = _sim.simulate_self_scheduling(
             list(tasks),
             n_workers=n_workers,
-            nodes=nodes if nodes is not None else max(n_workers // 8, 1),
-            nppn=nppn if nppn is not None else min(n_workers, 8),
+            nodes=nodes if nodes is not None else default_nodes,
+            nppn=nppn if nppn is not None else default_nppn,
             model=cost_model,
             poll_interval=poll_interval,
             worker_death=worker_death,

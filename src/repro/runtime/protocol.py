@@ -307,5 +307,6 @@ def drive(core: SchedulerCore, transport, *,
         reassigned_tasks=core.reassigned,
         messages_sent=core.messages_sent,
         backend=backend,
+        failures=dict(core.failures),
         batches=list(core.batches),
         completed_ids=frozenset(core.completed))

@@ -6,14 +6,23 @@ Before this package existed the repo had two divergent result types:
 the live backends fill ``results``/``worker_stats``; the sim backend
 additionally fills ``task_records``.  The old names remain as aliases so
 existing callers keep working.
+
+:meth:`RunResult.to_record` is the serialization boundary for the BENCH
+artifacts (see :mod:`repro.bench.schema`): a flat JSON-able dict of the
+run's measurable outcomes, split so that callers can separate fields that
+are deterministic for a fixed job spec (counts, the dispatch digest, sim
+times) from wall-clock measurements.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Optional
 
 __all__ = ["WorkerStats", "SimTaskRecord", "RunResult"]
+
+BUSY_QUANTILES = (0.0, 0.25, 0.50, 0.75, 0.90, 0.99, 1.0)
 
 
 @dataclasses.dataclass
@@ -55,6 +64,9 @@ class RunResult:
     reassigned_tasks: int = 0
     messages_sent: int = 0
     backend: str = "threads"
+    # Per-task failure ledger (task_id -> error string); empty unless the
+    # job ran with raise_on_failure=False and tasks actually failed.
+    failures: dict[str, str] = dataclasses.field(default_factory=dict)
     # Sim-only extras (empty on live backends).
     task_records: list[SimTaskRecord] = dataclasses.field(
         default_factory=list)
@@ -97,3 +109,62 @@ class RunResult:
     def worker_time_span(self) -> float:
         xs = [b for b in self.worker_busy if b > 0]
         return (max(xs) - min(xs)) if xs else 0.0
+
+    # -- serialization -----------------------------------------------------
+
+    @property
+    def dispatch_digest(self) -> str:
+        """SHA-256 over the ordered ASSIGN batch contents.
+
+        The batch *sequence* is decided by the shared SchedulerCore, so
+        for a fixed fault-free job spec this digest is identical across
+        backends and across repeat runs — it is the cheap equality proof
+        the BENCH artifacts store instead of the full dispatch log.
+        """
+        h = hashlib.sha256()
+        for batch in self.batches:
+            h.update("|".join(batch).encode())
+            h.update(b"\n")
+        return h.hexdigest()
+
+    def busy_quantiles(self, qs=BUSY_QUANTILES) -> dict[str, float]:
+        """Quantiles of per-worker busy seconds (workers that ran >0 s)."""
+        xs = sorted(b for b in self.worker_busy if b > 0)
+        if not xs:
+            return {f"p{int(q * 100)}": 0.0 for q in qs}
+        out = {}
+        for q in qs:
+            # Nearest-rank on the sorted busy times: index-arithmetic only,
+            # so the values are bit-reproducible across platforms.
+            i = min(int(q * (len(xs) - 1) + 0.5), len(xs) - 1)
+            out[f"p{int(q * 100)}"] = xs[i]
+        return out
+
+    def to_record(self) -> dict[str, Any]:
+        """Flat JSON-able summary of the run for BENCH artifacts.
+
+        Everything here is deterministic for a fixed job spec on the sim
+        backend.  On the live backends the counts and ``dispatch_digest``
+        stay deterministic (fault-free), while ``job_seconds``, the busy
+        quantiles, and the per-worker aggregates are wall-clock
+        measurements — :mod:`repro.bench.engine` splits them accordingly.
+        """
+        return {
+            "backend": self.backend,
+            "job_seconds": self.job_seconds,
+            "tasks_completed": len(self.completed_ids),
+            "n_results": len(self.results),
+            "messages_sent": self.messages_sent,
+            "n_batches": len(self.batches),
+            "dispatch_digest": self.dispatch_digest,
+            "reassigned_tasks": self.reassigned_tasks,
+            "failed_workers": [str(w) for w in self.failed_workers],
+            "n_task_failures": len(self.failures),
+            "n_workers": len(self.worker_stats),
+            "workers_used": sum(1 for s in self.worker_stats.values()
+                                if s.tasks_completed > 0),
+            "busy_total_s": sum(self.worker_busy),
+            "median_worker_busy_s": self.median_worker_busy,
+            "worker_time_span_s": self.worker_time_span,
+            "worker_busy_quantiles_s": self.busy_quantiles(),
+        }

@@ -349,7 +349,14 @@ class _Sim:
                     w = data  # type: ignore[assignment]
                     self.core.mark_dead(w)
                     for w2 in range(self.n_workers):
+                        # A worker is only safe to re-kick when BOTH views
+                        # agree it is idle: sim-side inflight empty AND no
+                        # core in-flight ids (a DONE still on the wire
+                        # leaves core.idle False — sending then would
+                        # double-assign, exactly like the live drive loop's
+                        # core.idle guard prevents).
                         if (not self.dead[w2] and not self.inflight[w2]
+                                and self.core.idle(w2)
                                 and self.core.pending):
                             self._mgr_send(w2)
 
@@ -384,11 +391,13 @@ class _Sim:
             reassigned = self.static_reassigned
             completed_ids = frozenset(r.task_id for r in self.records)
             batches = []
+            failures: dict[str, str] = {}
         else:
             messages = self.core.messages_sent + self.extra_messages
             reassigned = self.core.reassigned
             completed_ids = frozenset(self.core.completed)
             batches = list(self.core.batches)
+            failures = dict(self.core.failures)
         return RunResult(
             job_seconds=job_end,
             worker_stats=stats,
@@ -396,6 +405,7 @@ class _Sim:
             reassigned_tasks=reassigned,
             messages_sent=messages,
             backend="sim",
+            failures=failures,
             task_records=self.records,
             batches=batches,
             completed_ids=completed_ids)

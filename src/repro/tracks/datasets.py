@@ -183,6 +183,86 @@ def processing_manifest(n_aircraft: int = 40_000, seed: int = 4) -> list[Task]:
             for i, (f, s, c) in enumerate(zip(fleet, sizes, cpu))]
 
 
+def smoke_manifest(n: int = 200, seed: int = 0) -> list[Task]:
+    """Tiny fixed-seed workload for live-backend smoke scenarios.
+
+    Sizes follow the same deterministic pattern the old ad-hoc smoke jobs
+    used (``(i * 37) % 23 + 1`` bytes), so a smoke task costs microseconds
+    on the threads/processes backends while still exercising batching,
+    ordering, and exactly-once accounting.  ``seed`` offsets the pattern so
+    distinct smoke scenarios don't share task ids.
+    """
+    return [Task(task_id=f"smoke{seed}/t{i:04d}",
+                 size_bytes=((i + seed) * 37) % 23 + 1, timestamp=float(i))
+            for i in range(n)]
+
+
+def tiny_task_manifest(n: int = 131_400, seed: int = 0) -> list[Task]:
+    """Radar-like tiny-uniform tasks at reduced count (beyond-paper).
+
+    The §V regime — so many sub-second tasks that the manager's serial
+    send loop is the constraint — scaled to 131,400 tasks so sweeps over
+    tasks-per-message stay simulable in seconds.
+    """
+    rng = np.random.default_rng(seed)
+    return [Task(task_id=f"tiny/t{i:06d}", size_bytes=400_000,
+                 timestamp=float(i),
+                 cpu_cost_hint=float(rng.gamma(8.0, 0.25 / 8)))
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Manifest registry — the declarative handle the bench subsystem uses.
+# ---------------------------------------------------------------------------
+
+MANIFESTS = {
+    "monday": monday_manifest,
+    "aerodrome": aerodrome_manifest,
+    "radar_messages": radar_message_manifest,
+    "archive": aircraft_archive_manifest,
+    "processing": processing_manifest,
+    "smoke": smoke_manifest,
+    "tiny": tiny_task_manifest,
+}
+
+_manifest_cache: dict[tuple, list[Task]] = {}
+
+
+def get_manifest(name: str, *, limit: Optional[int] = None,
+                 **kwargs) -> list[Task]:
+    """Build (and memoize) a named manifest.
+
+    ``limit`` truncates AFTER generation so a scaled scenario sees a prefix
+    of the exact full-scale task population.  Returns a fresh list each
+    call; the cached copy is never handed out for mutation.
+    """
+    if name not in MANIFESTS:
+        raise KeyError(f"unknown manifest {name!r}; "
+                       f"choose from {sorted(MANIFESTS)}")
+    key = (name, tuple(sorted(kwargs.items())))
+    if key not in _manifest_cache:
+        _manifest_cache[key] = MANIFESTS[name](**kwargs)
+    tasks = _manifest_cache[key]
+    return list(tasks if limit is None else tasks[:limit])
+
+
+def manifest_stats(tasks: list[Task]) -> dict:
+    """Distribution summary used by golden tests and BENCH artifacts."""
+    sizes = np.array([t.size_bytes for t in tasks], dtype=float)
+    total = float(sizes.sum())
+    srt = np.sort(sizes)
+    top1 = max(len(tasks) // 100, 1)
+    return {
+        "count": len(tasks),
+        "total_bytes": int(total),
+        "mean_bytes": float(sizes.mean()) if len(tasks) else 0.0,
+        "median_over_mean": (float(np.median(sizes) / sizes.mean())
+                             if total else 0.0),
+        "cv": float(sizes.std() / sizes.mean()) if total else 0.0,
+        "top1pct_share": float(srt[-top1:].sum() / total) if total else 0.0,
+    }
+
+
 # ---------------------------------------------------------------------------
 # Real scaled-down observation files (for the actual workflow).
 # ---------------------------------------------------------------------------

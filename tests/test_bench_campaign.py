@@ -1,0 +1,238 @@
+"""The scenario-matrix campaign engine: schema validity, reproducibility,
+reference checks, and the regression-compare tool.
+
+Heavy paper scenarios are covered by tests/test_simulator_paper.py; here
+the engine runs cheap smoke-dataset scenarios so the whole module stays
+in the seconds range.
+"""
+
+import copy
+import json
+import subprocess
+import sys
+import os
+
+import pytest
+
+from repro.bench import (
+    Check, RunSpec, Scenario, canonical_bytes, csv_rows, expand,
+    paper_scenarios, run_campaign, run_scenario, smoke_scenarios,
+    validate_campaign, validate_record)
+from repro.bench.campaign import all_scenarios
+from repro.bench.paper import PAPER_TABLE1, PAPER_TABLE2, TABLE_TOLERANCE
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _sim_scenario(name="mini_sim", checks=(), **over):
+    kw = dict(dataset="smoke", phase="organize", backend="sim",
+              n_workers=4, nodes=1, nppn=4, tasks_per_message=5)
+    kw.update(over)
+    return Scenario(name=name, group="mini", tier="quick",
+                    run=RunSpec(**kw), checks=tuple(checks))
+
+
+MINI = [
+    _sim_scenario(),
+    _sim_scenario(name="mini_threads", backend="threads",
+                  checks=[Check("tasks_completed", "within_abs", 200, 0)]),
+    _sim_scenario(name="mini_static", mode="static", policy="cyclic"),
+]
+
+
+@pytest.fixture(scope="module")
+def campaign():
+    return run_campaign(MINI)
+
+
+def test_campaign_is_schema_valid(campaign):
+    assert validate_campaign(campaign) == []
+
+
+def test_campaign_statuses_and_summary(campaign):
+    by_name = {r["name"]: r for r in campaign["scenarios"]}
+    assert by_name["mini_sim"]["status"] == "ran"       # no checks
+    assert by_name["mini_threads"]["status"] == "pass"
+    assert campaign["summary"]["total"] == 3
+    assert campaign["summary"]["pass"] == 1
+    assert campaign["summary"]["fail"] == 0
+
+
+def test_campaign_byte_identical_on_rerun(campaign):
+    again = run_campaign(MINI)
+    assert canonical_bytes(campaign) == canonical_bytes(again)
+
+
+def test_canonical_excludes_wall_clock(campaign):
+    doctored = copy.deepcopy(campaign)
+    doctored["created_at"] = "1970-01-01T00:00:00+0000"
+    doctored["timing"]["wall_s"] = 999.0
+    for rec in doctored["scenarios"]:
+        rec["timing"]["wall_s"] = 123.0
+        rec["measured"]["job_seconds"] = 42.0 if rec["measured"] else None
+    assert canonical_bytes(doctored) == canonical_bytes(campaign)
+
+
+def test_live_record_splits_wall_clock_out_of_metrics(campaign):
+    rec = {r["name"]: r for r in campaign["scenarios"]}["mini_threads"]
+    # Deterministic protocol decisions stay in metrics...
+    assert rec["metrics"]["messages_sent"] == 40
+    assert rec["metrics"]["dispatch_digest"]
+    # ...wall-clock measurements do not.
+    assert "job_seconds" not in rec["metrics"]
+    assert rec["measured"]["job_seconds"] > 0
+
+
+def test_sim_and_live_share_dispatch_digest(campaign):
+    by_name = {r["name"]: r for r in campaign["scenarios"]}
+    assert (by_name["mini_sim"]["metrics"]["dispatch_digest"]
+            == by_name["mini_threads"]["metrics"]["dispatch_digest"])
+
+
+def test_failing_check_fails_scenario():
+    sc = _sim_scenario(checks=[Check("job_seconds", "max", 0.0,
+                                     source="impossible")])
+    rec = run_scenario(sc)
+    assert rec["status"] == "fail"
+    assert rec["checks"][0]["passed"] is False
+    assert validate_record(rec) == []
+
+
+def test_error_scenario_recorded_not_raised():
+    sc = Scenario(name="boom", group="mini",
+                  run=RunSpec(dataset="does_not_exist"))
+    rec = run_scenario(sc)
+    assert rec["status"] == "error"
+    assert "does_not_exist" in rec["error"]
+    assert validate_record(rec) == []
+
+
+def test_check_kinds():
+    m = {"x": 110.0}
+    assert Check("x", "within_rel", 100.0, 0.15).evaluate(m)["passed"]
+    assert not Check("x", "within_rel", 100.0, 0.05).evaluate(m)["passed"]
+    assert Check("x", "within_abs", 100.0, 10.0).evaluate(m)["passed"]
+    assert Check("x", "min", 100.0).evaluate(m)["passed"]
+    assert not Check("x", "max", 100.0).evaluate(m)["passed"]
+    assert not Check("missing", "min", 0.0).evaluate(m)["passed"]
+    with pytest.raises(ValueError):
+        Check("x", "approximately", 1.0)
+
+
+def test_baseline_scenario_derives_comparison_metrics():
+    sc = Scenario(
+        name="mini_vs_static", group="mini",
+        run=RunSpec(dataset="smoke", backend="sim", n_workers=4,
+                    nodes=1, nppn=4),
+        baseline=RunSpec(dataset="smoke", backend="sim", mode="static",
+                         policy="block", n_workers=4, nodes=1, nppn=4,
+                         organization="filename"))
+    rec = run_scenario(sc)
+    assert rec["status"] == "ran"
+    assert "job_seconds_reduction_pct" in rec["metrics"]
+    assert rec["metrics"]["baseline_job_seconds"] > 0
+
+
+def test_expand_matrix_product_and_names():
+    scens = expand("g", dataset="smoke", n_workers=4,
+                   tasks_per_message=[1, 2], organization=["random",
+                                                           "largest_first"])
+    assert len(scens) == 4
+    names = {sc.name for sc in scens}
+    assert "g_k1_orgrandom" in names
+    assert len(names) == 4
+    assert all(sc.group == "g" for sc in scens)
+
+
+def test_declared_matrix_is_well_formed():
+    scens = all_scenarios()
+    names = [sc.name for sc in scens]
+    assert len(names) == len(set(names)), "duplicate scenario names"
+    quick = [sc for sc in scens if sc.tier == "quick"]
+    # The quick tier carries every Table I/II reference cell.
+    table_cells = [sc for sc in quick if sc.group in ("table1", "table2")]
+    assert len(table_cells) == len(PAPER_TABLE1) + len(PAPER_TABLE2) == 18
+    for sc in table_cells:
+        assert sc.checks[0].tol == TABLE_TOLERANCE
+        assert sc.checks[0].metric == "job_seconds"
+    # Live smokes exist on both backends.
+    assert {sc.run.backend for sc in smoke_scenarios()} >= {"threads",
+                                                            "processes"}
+
+
+def test_fault_profile_backend_mismatch_rejected():
+    """A profile whose knobs the backend can't honor must fail loudly,
+    not run fault-free while claiming to measure fault recovery."""
+    with pytest.raises(ValueError, match="sim backend"):
+        RunSpec(dataset="smoke", backend="threads",
+                fault_profile="deaths_5pct")
+    with pytest.raises(ValueError, match="live backend"):
+        RunSpec(dataset="smoke", backend="sim",
+                fault_profile="live_one_death")
+
+
+def test_fault_profile_axis_materializes():
+    from repro.bench.scenarios import FAULT_PROFILES
+    deaths, speed, fail_after = FAULT_PROFILES["deaths_5pct"].materialize(
+        100, seed=0)
+    assert len(deaths) == 5 and speed is None and fail_after is None
+    d2, s2, f2 = FAULT_PROFILES["stragglers_10pct"].materialize(100, seed=0)
+    assert d2 is None and len(s2) == 100 and s2.count(0.25) == 10
+    # Seeded: same straggler choice every time.
+    assert s2 == FAULT_PROFILES["stragglers_10pct"].materialize(100, 0)[1]
+
+
+def test_csv_rows_have_no_stray_commas(campaign):
+    for row in csv_rows(campaign["scenarios"]):
+        assert row.count(",") == 2, row
+
+
+def test_compare_docs_flags_regressions(campaign):
+    from repro.bench.compare import compare_docs
+    slower = copy.deepcopy(campaign)
+    for rec in slower["scenarios"]:
+        if "job_seconds" in rec["metrics"]:
+            rec["metrics"]["job_seconds"] *= 1.5
+    rows, regs = compare_docs(campaign, slower, threshold=0.10)
+    assert regs and all(r["delta_pct"] > 10 for r in regs)
+    rows2, regs2 = compare_docs(campaign, campaign, threshold=0.10)
+    assert not regs2
+    # Live wall-clock job times must NOT be regression-gated.
+    gated = {r["name"] for r in rows}
+    assert "mini_threads" not in gated
+
+
+@pytest.mark.slow
+def test_campaign_cli_writes_valid_artifact(tmp_path):
+    """End-to-end: the ``python -m repro.bench.campaign`` entry point."""
+    out = tmp_path / "BENCH_campaign.json"
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.bench.campaign",
+         "--filter", "smoke_threads", "--filter", "fig4",
+         "--out", str(out)],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    doc = json.loads(out.read_text())
+    assert validate_campaign(doc) == []
+    assert {r["name"] for r in doc["scenarios"]} >= {
+        "smoke_threads", "fig4_1024c16_size_beats_2048c32_chrono"}
+
+
+@pytest.mark.slow
+def test_benchmarks_smoke_writes_bench_smoke_json(tmp_path):
+    from repro.bench.schema import validate_smoke
+    out = tmp_path / "BENCH_smoke.json"
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+         "--backend", "sim", "--smoke-out", str(out)],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    doc = json.loads(out.read_text())
+    assert validate_smoke(doc) == []
+    assert doc["scenario"]["status"] == "pass"

@@ -1,0 +1,129 @@
+"""Golden statistics for the synthetic dataset manifests.
+
+The paper's Tables I/II and §IV/§V results are functions of the dataset
+*statistics* (file counts, byte totals, size-distribution shape); these
+tests pin the synthetic manifests to the published constants so a seed or
+generator change can't silently move every downstream benchmark.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.tracks import datasets as ds
+from repro.tracks.datasets import get_manifest, manifest_stats
+
+GB = 1_000_000_000
+
+
+@pytest.fixture(scope="module")
+def monday():
+    return get_manifest("monday")
+
+
+@pytest.fixture(scope="module")
+def aerodrome():
+    return get_manifest("aerodrome")
+
+
+@pytest.fixture(scope="module")
+def radar():
+    return get_manifest("radar_messages")
+
+
+# -- exact paper constants ------------------------------------------------
+
+
+def test_monday_paper_constants(monday):
+    """§III.B: 104 Mondays => 2425 hourly files, 714 GB."""
+    s = manifest_stats(monday)
+    assert s["count"] == ds.MONDAY_FILE_COUNT == 2425
+    assert abs(s["total_bytes"] / (714 * GB) - 1) < 1e-4
+    assert len({t.task_id for t in monday}) == 2425
+
+
+def test_aerodrome_paper_constants(aerodrome):
+    """§III.C: 695 bounding boxes x 196 days => 136,884 files, 847 GB."""
+    s = manifest_stats(aerodrome)
+    assert s["count"] == ds.AERODROME_FILE_COUNT == 136_884
+    assert abs(s["total_bytes"] / (847 * GB) - 1) < 1e-4
+
+
+def test_radar_paper_constants(radar):
+    """§V: 13,190,700 ids / 300 per message => 43,969 messages."""
+    assert len(radar) == ds.RADAR_MESSAGE_COUNT == 43_969
+    assert ds.RADAR_MESSAGE_COUNT == math.ceil(
+        ds.RADAR_ID_COUNT / ds.RADAR_TASKS_PER_MESSAGE)
+
+
+# -- distribution shape (Fig 3) -------------------------------------------
+
+
+def test_monday_sizes_are_diurnal_not_heavy_tailed(monday):
+    """Fig 3 dataset #1: 'roughly Gaussian' per-hour mix with a diurnal
+    cycle (files are per-UTC-hour; volume peaks ~14:00 UTC)."""
+    s = manifest_stats(monday)
+    assert s["cv"] < 1.0                       # no heavy tail
+    assert s["median_over_mean"] > 0.85        # symmetric-ish
+    assert s["top1pct_share"] < 0.05
+    sizes = np.array([t.size_bytes for t in monday], float)
+    hours = np.array([int(t.task_id.split("/h")[1][:2]) for t in monday])
+    mean_by_hour = np.array([sizes[hours == h].mean() for h in range(24)])
+    peak, trough = mean_by_hour.argmax(), mean_by_hour.argmin()
+    assert 11 <= peak <= 17                    # peaks around 14:00 UTC
+    assert mean_by_hour[peak] > 2.0 * mean_by_hour[trough]
+
+
+def test_aerodrome_sizes_are_heavy_tailed(aerodrome):
+    """Fig 3 dataset #2: 'sloping' — activity is not uniform across
+    locations; many small files, a few huge ones."""
+    s = manifest_stats(aerodrome)
+    assert s["cv"] > 2.0
+    assert s["median_over_mean"] < 0.4         # mass lives in the tail
+    assert s["top1pct_share"] > 0.20
+
+
+def test_radar_messages_are_tiny_and_uniform(radar):
+    """§V: per-message cost spread ~2 % — the precondition for the
+    paper's 1.12 h worker span over a 24.34 h median."""
+    cpu = np.array([t.cpu_cost_hint for t in radar], float)
+    assert (cpu > 0).all()
+    assert cpu.std() / cpu.mean() < 0.05
+
+
+def test_processing_has_ferry_flight_outliers():
+    """§IV.C/§V: a handful of continental ferry flights stretch the max
+    worker toward 29.6 h without moving the 99.1 % quantile."""
+    proc = get_manifest("processing")
+    cpu = np.array([t.cpu_cost_hint for t in proc], float)
+    assert cpu.max() > 5 * np.percentile(cpu, 99.1)
+
+
+# -- registry plumbing ----------------------------------------------------
+
+
+def test_registry_covers_all_manifests():
+    assert set(ds.MANIFESTS) >= {"monday", "aerodrome", "radar_messages",
+                                 "archive", "processing", "smoke", "tiny"}
+
+
+def test_get_manifest_limit_and_isolation(monday):
+    head = get_manifest("monday", limit=10)
+    assert [t.task_id for t in head] == [t.task_id for t in monday[:10]]
+    # Mutating a returned list must not poison the cache.
+    head.clear()
+    assert len(get_manifest("monday", limit=10)) == 10
+
+
+def test_get_manifest_unknown_name():
+    with pytest.raises(KeyError, match="unknown manifest"):
+        get_manifest("nope")
+
+
+def test_smoke_manifest_is_seed_stable():
+    a = get_manifest("smoke")
+    b = get_manifest("smoke")
+    assert [t.task_id for t in a] == [t.task_id for t in b]
+    assert [t.size_bytes for t in a] == [t.size_bytes for t in b]
+    assert len(a) == 200

@@ -1,0 +1,126 @@
+"""run_job failure paths: partial results, dead fleets, re-queue accounting.
+
+The campaign engine runs every scenario with ``raise_on_failure=False``
+so one bad cell can't abort a whole campaign — these tests pin the
+contract that makes that safe: failures are *recorded* (RunResult.failures)
+rather than silently dropped, and re-queue accounting stays exact.
+"""
+
+import time
+
+import pytest
+
+from repro.core.cost_model import PhaseCostModel
+from repro.core.messages import Task
+from repro.runtime import run_job
+
+FAST = dict(poll_interval=0.002)
+
+SIM_MODEL = PhaseCostModel(
+    name="t", r_process=1e6, b_node=8e6, b_global=64e6,
+    cpu_rate=50e6, contention_alpha=0.001, task_overhead_s=0.01,
+    msg_overhead_s=0.001)
+
+
+def _tasks(n, size=10_000_000):
+    return [Task(task_id=f"t{i:04d}", size_bytes=size, timestamp=i)
+            for i in range(n)]
+
+
+def _fail_odd(task):
+    i = int(task.task_id[1:])
+    if i % 2:
+        raise ValueError(f"bad task {task.task_id}")
+    return i
+
+
+def _slow20(task):
+    time.sleep(0.02)
+    return 1
+
+
+# -- task failures: recorded, not raised ----------------------------------
+
+
+def test_threads_partial_results_when_not_raising():
+    tasks = _tasks(20)
+    r = run_job(tasks, _fail_odd, backend="threads", n_workers=3,
+                raise_on_failure=False, **FAST)
+    evens = {f"t{i:04d}" for i in range(0, 20, 2)}
+    odds = {f"t{i:04d}" for i in range(1, 20, 2)}
+    assert r.completed_ids == evens
+    assert set(r.failures) == odds
+    assert all("ValueError" in e for e in r.failures.values())
+    assert set(r.results) == evens          # partial results delivered
+    assert r.failed_workers == []           # workers stayed alive
+
+
+def test_threads_task_failure_raises_by_default():
+    with pytest.raises(RuntimeError, match="failed"):
+        run_job(_tasks(10), _fail_odd, backend="threads", n_workers=2,
+                **FAST)
+
+
+def test_failures_surface_in_bench_record():
+    r = run_job(_tasks(20), _fail_odd, backend="threads", n_workers=3,
+                raise_on_failure=False, **FAST)
+    rec = r.to_record()
+    assert rec["n_task_failures"] == 10
+    assert rec["tasks_completed"] == 10
+
+
+# -- sim: all workers dead ------------------------------------------------
+
+
+def test_sim_all_workers_dead_partial_when_not_raising():
+    tasks = _tasks(40)
+    r = run_job(tasks, backend="sim", n_workers=4, nodes=1, nppn=4,
+                cost_model=SIM_MODEL,
+                worker_death={i: 1.0 for i in range(4)},
+                failure_timeout=2.0, raise_on_failure=False)
+    assert r.dead_workers == [0, 1, 2, 3]
+    assert len(r.completed_ids) < len(tasks)    # genuinely partial
+    # Whatever completed before the die-off is still exactly-once.
+    assert len(r.completed_ids) == len({rec.task_id
+                                        for rec in r.task_records})
+
+
+def test_sim_all_workers_dead_raises_by_default():
+    with pytest.raises(RuntimeError, match="incomplete"):
+        run_job(_tasks(40), backend="sim", n_workers=4, nodes=1, nppn=4,
+                cost_model=SIM_MODEL,
+                worker_death={i: 1.0 for i in range(4)},
+                failure_timeout=2.0)
+
+
+def test_sim_mass_death_still_completes_with_survivors():
+    """20 % of the fleet dies mid-job: every task still completes
+    exactly once (regression test for the double-assign re-dispatch bug
+    the campaign engine exposed)."""
+    tasks = _tasks(120, size=5_000_000)
+    deaths = {i: 2.0 + 0.25 * i for i in range(10)}   # 10 of 16 over time
+    r = run_job(tasks, backend="sim", n_workers=16, nodes=2, nppn=8,
+                cost_model=SIM_MODEL, worker_death=deaths,
+                failure_timeout=1.0)
+    assert r.completed_ids == {t.task_id for t in tasks}
+    assert len({rec.task_id for rec in r.task_records}) == 120
+    assert r.reassigned_tasks >= 1
+    assert r.dead_workers == sorted(deaths)
+
+
+# -- process backend: re-queue accounting ---------------------------------
+
+
+def test_process_worker_fail_after_requeue_accounting():
+    tasks = _tasks(30)
+    r = run_job(tasks, _slow20, backend="processes", n_workers=3,
+                tasks_per_message=4, failure_timeout=1.0,
+                worker_fail_after={"w0": 2}, **FAST)
+    assert r.completed_ids == {t.task_id for t in tasks}
+    assert r.failed_workers == ["w0"]
+    # w0 died mid-ASSIGN: everything in flight to it (at most one
+    # 4-task message here) was re-queued, and nothing else was.
+    assert 1 <= r.reassigned_tasks <= 4
+    assert r.failures == {}           # a dead worker is not a failed task
+    # Exactly-once across the re-queue: one result per task.
+    assert len(r.results) == 30

@@ -1,0 +1,168 @@
+"""Property-based SchedulerCore invariants (hypothesis / tests/_compat shim).
+
+The protocol core is the single decision-maker behind all three execution
+backends, so its invariants are the system's invariants:
+
+  * exactly-once completion under arbitrary interleavings of dispatch,
+    (duplicate) DONE reports, and worker deaths;
+  * no lost and no duplicated tasks across checkpoint save -> restore;
+  * dispatch-order determinism for a fixed seed, bit-identical across the
+    threads, processes, and sim backends.
+"""
+
+import random
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.messages import Task
+from repro.runtime import ManagerCheckpoint, SchedulerCore, run_job
+
+BACKENDS = ("threads", "processes", "sim")
+
+
+def _tasks(sizes):
+    return [Task(task_id=f"t{i:04d}", size_bytes=s, timestamp=i)
+            for i, s in enumerate(sizes)]
+
+
+def _pickle_safe_fn(task):          # module-level: picklable for processes
+    return task.size_bytes
+
+
+@st.composite
+def job_shapes(draw):
+    n = draw(st.integers(1, 40))
+    sizes = draw(st.lists(st.integers(1, 10_000_000),
+                          min_size=n, max_size=n))
+    k = draw(st.integers(1, 6))
+    org = draw(st.sampled_from(["largest_first", "chronological",
+                                "random"]))
+    seed = draw(st.integers(0, 5))
+    return sizes, k, org, seed
+
+
+# ---------------------------------------------------------------------------
+# Exactly-once under adversarial interleavings.
+# ---------------------------------------------------------------------------
+
+@given(job_shapes(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_core_exactly_once_under_random_interleaving(shape, opseed):
+    sizes, k, org, seed = shape
+    tasks = _tasks(sizes)
+    core = SchedulerCore(tasks, organization=org, tasks_per_message=k,
+                         organize_seed=seed)
+    rng = random.Random(opseed)
+    workers = ["w0", "w1", "w2"]
+    inflight = {w: [] for w in workers}
+    fresh_total = []
+    for _ in range(400):
+        if core.done:
+            break
+        op = rng.random()
+        w = rng.choice(workers)
+        if op < 0.45:                          # dispatch
+            if w not in core.dead:
+                inflight[w].extend(
+                    t.task_id for t in core.next_batch(w))
+        elif op < 0.85 and inflight[w]:        # (possibly duplicate) DONE
+            ids = rng.sample(inflight[w],
+                             rng.randint(1, len(inflight[w])))
+            if rng.random() < 0.3:
+                ids = ids + ids                # duplicate within one message
+            fresh_total.extend(core.on_done(w, ids))
+            for tid in set(ids):
+                inflight[w].remove(tid)
+        elif op < 0.95 and len(core.dead) < 2:  # kill (keep one alive)
+            core.mark_dead(w)
+            inflight[w] = []
+        elif inflight[w]:                      # late DONE replay
+            fresh_total.extend(
+                core.on_done(w, [rng.choice(inflight[w])]))
+    # Drain deterministically through the surviving workers.
+    alive = [w for w in workers if w not in core.dead]
+    while not core.done:
+        progressed = False
+        for w in alive:
+            batch = core.next_batch(w)
+            if batch:
+                progressed = True
+                fresh_total.extend(
+                    core.on_done(w, [t.task_id for t in batch]))
+        for w in alive:
+            if inflight[w]:
+                progressed = True
+                fresh_total.extend(core.on_done(w, list(inflight[w])))
+                inflight[w] = []
+        assert progressed, "scheduler stuck with work outstanding"
+    all_ids = {t.task_id for t in tasks}
+    assert core.completed == all_ids                    # nothing lost
+    assert len(fresh_total) == len(all_ids)             # nothing doubled
+    assert sorted(fresh_total) == sorted(all_ids)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint save -> restore: no lost, no duplicated tasks.
+# ---------------------------------------------------------------------------
+
+@given(job_shapes(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_cycle_loses_and_duplicates_nothing(shape, opseed):
+    sizes, k, org, seed = shape
+    tasks = _tasks(sizes)
+    core = SchedulerCore(tasks, organization=org, tasks_per_message=k,
+                         organize_seed=seed)
+    rng = random.Random(opseed)
+    fresh_before = []
+    # Partially run: some dispatches completed, some left in flight (those
+    # must be re-run after restore — the checkpoint only trusts DONEs).
+    for _ in range(rng.randint(0, len(tasks))):
+        batch = core.next_batch("w0")
+        if not batch:
+            break
+        if rng.random() < 0.6:
+            fresh_before.extend(
+                core.on_done("w0", [t.task_id for t in batch]))
+    ck = ManagerCheckpoint.loads(core.checkpoint().dumps())   # round-trip
+    assert ck.completed == core.completed
+
+    restored = SchedulerCore(tasks, organization=org, tasks_per_message=k,
+                             organize_seed=seed, checkpoint=ck)
+    fresh_after = []
+    while not restored.done:
+        batch = restored.next_batch("w1")
+        assert batch, "restored scheduler stuck"
+        fresh_after.extend(
+            restored.on_done("w1", [t.task_id for t in batch]))
+    all_ids = {t.task_id for t in tasks}
+    assert restored.completed == all_ids                     # nothing lost
+    # Exactly-once ACROSS the restart: completed-before tasks never
+    # re-complete fresh, and nothing completes fresh twice.
+    assert sorted(fresh_before + fresh_after) == sorted(all_ids)
+    # The restored queue never re-dispatched an already-completed task.
+    assert not (set(fresh_after) & set(fresh_before))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-order determinism across all three backends.
+# ---------------------------------------------------------------------------
+
+@given(job_shapes())
+@settings(max_examples=5, deadline=None)
+def test_dispatch_order_deterministic_across_backends(shape):
+    sizes, k, org, seed = shape
+    tasks = _tasks(sizes)
+    batches = {}
+    for backend in BACKENDS:
+        r = run_job(tasks, _pickle_safe_fn, backend=backend, n_workers=3,
+                    organization=org, tasks_per_message=k,
+                    organize_seed=seed, poll_interval=0.002)
+        batches[backend] = r.batches
+        assert r.completed_ids == {t.task_id for t in tasks}
+    assert batches["threads"] == batches["processes"] == batches["sim"]
+    # And a repeat run reproduces the log bit-identically.
+    again = run_job(tasks, _pickle_safe_fn, backend="sim", n_workers=3,
+                    organization=org, tasks_per_message=k,
+                    organize_seed=seed, poll_interval=0.002)
+    assert again.batches == batches["sim"]
