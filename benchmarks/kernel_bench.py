@@ -1,0 +1,25 @@
+"""Kernel-level BENCH artifact CLI (thin adapter).
+
+Runs the fused segment pipeline against the unfused three-launch
+baseline over synthetic segment-length workloads and writes a
+schema-validated ``BENCH_kernels.json`` (``repro.bench.kernels/v1``)
+with throughput, padded-element fraction, intermediate host<->device
+transfer counts, and per-bucket compile cache hits.  Exits non-zero if
+any scenario misses its check (CI gates on the quick tier).
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py --quick
+    PYTHONPATH=src python benchmarks/kernel_bench.py --out BENCH_kernels.json
+
+The scenario declarations and record layout live in
+:mod:`repro.bench.kernels` (``python -m repro.bench.kernels`` is the
+same entry point).
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.bench.kernels import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -89,5 +89,48 @@ def bench_flash_attention() -> list[str]:
     ]
 
 
+def bench_fused_segment_pipeline() -> list[str]:
+    """One fused ops.process_segments bucket vs the three separate ops
+    (the full fused-vs-unfused comparison lives in kernel_bench.py)."""
+    rng = np.random.default_rng(4)
+    B, N, K = 16, 128, 256
+    H, W = 209, 473
+    dem = rng.uniform(0, 2500, (H, W)).astype(np.float32)
+    grid = (24.0, 50.0, -125.0, -66.0, 8.0)
+    t_in = np.sort(rng.uniform(0, 250, (B, N)), axis=1).astype(np.float32)
+    v_in = np.stack([40 + rng.normal(0, .01, (B, N)),
+                     -100 + rng.normal(0, .01, (B, N)),
+                     1500 + rng.normal(0, 5, (B, N))],
+                    axis=1).astype(np.float32)
+    count_in = np.full((B,), N, np.int32)
+    t_out = np.tile(np.arange(K, dtype=np.float32), (B, 1))
+    count_out = np.full((B,), K, np.int32)
+
+    def unfused():
+        interp = np.asarray(ops.track_interp(t_in, v_in, count_in, t_out))
+        lat, lon, alt = interp[..., 0], interp[..., 1], interp[..., 2]
+        fi = (np.clip(lat, grid[0], grid[1]) - grid[0]) * grid[4]
+        fj = (np.clip(lon, grid[2], grid[3]) - grid[2]) * grid[4]
+        agl = np.asarray(ops.agl_lookup(dem, fi, fj, alt))
+        v_grid = np.stack([lat, lon, alt], axis=1).astype(np.float32)
+        return agl, np.asarray(ops.dynamic_rates(v_grid, count_out, 1.0))
+
+    def fused():
+        out = ops.process_segments(dem, t_in, v_in, count_in, t_out,
+                                   count_out, grid=grid)
+        # fetch once so the timing covers the device work (the unfused
+        # closure blocks on its np.asarray hops)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    us_unf, _ = _time_call(lambda: unfused())
+    us_fus, out = _time_call(lambda: fused())
+    return [
+        f"segment_pipeline_unfused_B{B}xK{K},{us_unf:.0f},"
+        f"{B / (us_unf/1e6):.0f}segs_per_s",
+        f"segment_pipeline_fused_B{B}xK{K},{us_fus:.0f},"
+        f"speedup={us_unf/us_fus:.2f}x",
+    ]
+
+
 ALL = [bench_track_interp, bench_dynamic_rates, bench_agl_lookup,
-       bench_flash_attention]
+       bench_flash_attention, bench_fused_segment_pipeline]

@@ -15,6 +15,9 @@ regression-gated:
     canonical serialization;
   * :mod:`repro.bench.campaign` — the ``python -m repro.bench.campaign``
     CLI (``--quick`` is the CI tier);
+  * :mod:`repro.bench.kernels` — kernel-level matrix: the fused segment
+    pipeline vs its unfused baseline (``BENCH_kernels.json``; also
+    ``python -m repro.bench.kernels`` / ``campaign --kernels``);
   * :mod:`repro.bench.compare` — regression-diff two artifacts.
 """
 
@@ -24,11 +27,14 @@ from repro.bench.engine import (
 from repro.bench.paper import (
     PAPER_TABLE1, PAPER_TABLE2, TABLE_TOLERANCE, paper_scenarios,
     smoke_scenarios)
+from repro.bench.kernels import (
+    KernelScenario, KernelSpec, kernel_scenarios, run_kernel_campaign,
+    run_kernel_scenario)
 from repro.bench.scenarios import (
     Check, FAULT_PROFILES, FaultProfile, RunSpec, Scenario, expand)
 from repro.bench.schema import (
-    CAMPAIGN_SCHEMA, SMOKE_SCHEMA, canonical_bytes, validate_campaign,
-    validate_record)
+    CAMPAIGN_SCHEMA, KERNELS_SCHEMA, SMOKE_SCHEMA, canonical_bytes,
+    validate_campaign, validate_kernels, validate_record)
 
 __all__ = [
     "Check", "FAULT_PROFILES", "FaultProfile", "RunSpec", "Scenario",
@@ -37,8 +43,11 @@ __all__ = [
     "paper_scenarios", "smoke_scenarios", "beyond_scenarios",
     "csv_rows", "execute_spec", "run_campaign", "run_scenario",
     "summary_lines",
-    "CAMPAIGN_SCHEMA", "SMOKE_SCHEMA", "canonical_bytes",
-    "validate_campaign", "validate_record",
+    "KernelScenario", "KernelSpec", "kernel_scenarios",
+    "run_kernel_campaign", "run_kernel_scenario",
+    "CAMPAIGN_SCHEMA", "KERNELS_SCHEMA", "SMOKE_SCHEMA",
+    "canonical_bytes", "validate_campaign", "validate_kernels",
+    "validate_record",
 ]
 
 

@@ -1,11 +1,18 @@
 """The BENCH artifact schema: validation + canonical serialization.
 
-Two artifact kinds share the scenario-record shape:
+Three artifact kinds share the scenario-record shape:
 
   * ``BENCH_campaign.json`` (``repro.bench.campaign/v1``) — one record per
     scenario plus a campaign summary;
   * ``BENCH_smoke.json`` (``repro.bench.smoke/v1``) — a single record
-    emitted by ``benchmarks/run.py --backend ...``.
+    emitted by ``benchmarks/run.py --backend ...``;
+  * ``BENCH_kernels.json`` (``repro.bench.kernels/v1``) — kernel-level
+    records from ``benchmarks/kernel_bench.py``: fused vs unfused
+    segment-pipeline throughput, padded-element fraction, intermediate
+    host<->device transfer counts, and per-bucket compile cache hits.
+    Kernel records use a different ``spec.run`` shape (workload x
+    pipeline x backend instead of dataset x triple x backend) and their
+    own required metrics.
 
 Scenario record layout::
 
@@ -32,14 +39,16 @@ from __future__ import annotations
 import json
 from typing import Any
 
-__all__ = ["CAMPAIGN_SCHEMA", "SMOKE_SCHEMA", "SCHEMA_VERSION",
+__all__ = ["CAMPAIGN_SCHEMA", "SMOKE_SCHEMA", "KERNELS_SCHEMA",
+           "SCHEMA_VERSION",
            "NONDETERMINISTIC_RECORD_KEYS", "NONDETERMINISTIC_DOC_KEYS",
            "validate_record", "validate_campaign", "validate_smoke",
-           "canonical_bytes"]
+           "validate_kernels", "canonical_bytes"]
 
 SCHEMA_VERSION = 1
 CAMPAIGN_SCHEMA = "repro.bench.campaign/v1"
 SMOKE_SCHEMA = "repro.bench.smoke/v1"
+KERNELS_SCHEMA = "repro.bench.kernels/v1"
 
 NONDETERMINISTIC_RECORD_KEYS = ("measured", "timing")
 NONDETERMINISTIC_DOC_KEYS = ("created_at", "environment", "timing")
@@ -52,13 +61,22 @@ _RECORD_KEYS = ("name", "group", "tier", "status", "spec", "metrics",
 _SPEC_REQUIRED = ("dataset", "phase", "backend", "mode", "n_workers",
                   "organization", "tasks_per_message", "fault_profile",
                   "seed")
+_METRICS_REQUIRED = ("tasks_completed", "messages_sent")
+# Kernel-bench records describe a synthetic workload, not a run_job spec.
+_KERNEL_SPEC_REQUIRED = ("workload", "pipeline", "backend", "n_archives",
+                         "seed")
+_KERNEL_METRICS_REQUIRED = ("n_segments", "padded_fraction",
+                            "intermediate_transfers")
 
 
 def _num(x: Any) -> bool:
     return isinstance(x, (int, float)) and not isinstance(x, bool)
 
 
-def validate_record(rec: Any, where: str = "record") -> list[str]:
+def validate_record(rec: Any, where: str = "record",
+                    spec_required: tuple = _SPEC_REQUIRED,
+                    required_metrics: tuple = _METRICS_REQUIRED
+                    ) -> list[str]:
     """Structural validation of one scenario record; returns problems."""
     errs: list[str] = []
     if not isinstance(rec, dict):
@@ -80,7 +98,7 @@ def validate_record(rec: Any, where: str = "record") -> list[str]:
         if not isinstance(run, dict):
             errs.append(f"{where}.spec.run: not an object")
         else:
-            for key in _SPEC_REQUIRED:
+            for key in spec_required:
                 if key not in run:
                     errs.append(f"{where}.spec.run: missing key {key!r}")
         base = spec.get("baseline")
@@ -94,7 +112,7 @@ def validate_record(rec: Any, where: str = "record") -> list[str]:
         for key in ("metrics", "measured"):
             if isinstance(rec.get(key), dict):
                 merged.update(rec[key])
-        for key in ("tasks_completed", "messages_sent"):
+        for key in required_metrics:
             if not _num(merged.get(key)):
                 errs.append(f"{where}: metric {key!r} missing/non-numeric")
     checks = rec.get("checks")
@@ -153,6 +171,43 @@ def validate_campaign(doc: Any) -> list[str]:
         if isinstance(doc.get("scenarios"), list) and \
                 summary.get("total") != len(doc["scenarios"]):
             errs.append("campaign.summary.total != len(scenarios)")
+    return errs
+
+
+def validate_kernels(doc: Any) -> list[str]:
+    """Structural validation of a BENCH_kernels.json artifact."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["kernels: not an object"]
+    if doc.get("schema") != KERNELS_SCHEMA:
+        errs.append(f"kernels.schema: {doc.get('schema')!r} != "
+                    f"{KERNELS_SCHEMA!r}")
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        errs.append("kernels.schema_version: missing/mismatched")
+    if not isinstance(doc.get("config"), dict):
+        errs.append("kernels.config: not an object")
+    scenarios = doc.get("scenarios")
+    if not isinstance(scenarios, list) or not scenarios:
+        errs.append("kernels.scenarios: missing/empty list")
+        scenarios = []
+    names = set()
+    for i, rec in enumerate(scenarios):
+        where = (f"scenarios[{i}]({rec.get('name', '?')})"
+                 if isinstance(rec, dict) else f"scenarios[{i}]")
+        errs.extend(validate_record(
+            rec, where, spec_required=_KERNEL_SPEC_REQUIRED,
+            required_metrics=_KERNEL_METRICS_REQUIRED))
+        if isinstance(rec, dict):
+            if rec.get("name") in names:
+                errs.append(f"{where}: duplicate scenario name")
+            names.add(rec.get("name"))
+    summary = doc.get("summary")
+    if not isinstance(summary, dict):
+        errs.append("kernels.summary: not an object")
+    else:
+        for key in ("total", "pass", "fail", "ran", "error"):
+            if not isinstance(summary.get(key), int):
+                errs.append(f"kernels.summary.{key}: missing/non-int")
     return errs
 
 

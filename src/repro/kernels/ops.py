@@ -9,13 +9,14 @@ benchmarks call these, never the kernels directly.
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
+from repro.kernels import ref, segment_pipeline
 from repro.kernels.agl_lookup import TILE_H, TILE_W, agl_lookup_pallas
 from repro.kernels.dynamic_rates import dynamic_rates_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -26,6 +27,38 @@ Backend = Literal["pallas", "ref"]
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Pipeline instrumentation (read by benchmarks/kernel_bench.py).
+# ---------------------------------------------------------------------------
+
+_STATS_LOCK = threading.Lock()
+_STATS = {"intermediate_transfers": 0, "compile_hits": 0,
+          "compile_misses": 0}
+_SEEN_FUSED_SHAPES: set = set()
+
+
+def reset_pipeline_stats(forget_shapes: bool = True) -> None:
+    """Zero the transfer/compile counters.  ``forget_shapes=False``
+    keeps the seen-shape set so already-compiled bucket shapes keep
+    counting as cache hits (steady-state measurement)."""
+    with _STATS_LOCK:
+        for k in _STATS:
+            _STATS[k] = 0
+        if forget_shapes:
+            _SEEN_FUSED_SHAPES.clear()
+
+
+def get_pipeline_stats() -> dict:
+    with _STATS_LOCK:
+        return dict(_STATS)
+
+
+def note_intermediate_transfer(n: int = 1) -> None:
+    """Record a mid-pipeline host<->device hop (unfused path only)."""
+    with _STATS_LOCK:
+        _STATS["intermediate_transfers"] += n
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int,
@@ -66,41 +99,115 @@ def dynamic_rates(v, count, dt, *, backend: Backend = "pallas"):
     return out[:, :, :M]
 
 
-def agl_lookup(dem, fi, fj, alt_msl, *, backend: Backend = "pallas"):
+# The spanning-row oracle fallback runs jitted so its f32 rounding
+# matches the fused pipeline (which evaluates the same oracle under
+# jit); eager op-by-op evaluation can drift an ulp and the golden
+# fused-vs-unfused equivalence would inherit the noise.
+_agl_lookup_ref_jit = jax.jit(ref.agl_lookup_ref)
+
+
+def agl_lookup(dem, fi, fj, alt_msl, *, backend: Backend = "pallas",
+               oracle_rows=None):
     """(H,W),(B,M),(B,M),(B,M) -> (B,M) AGL. See ref.agl_lookup_ref.
 
     Computes per-track tile origins on the host side; tracks that span
-    more than one DEM tile fall back to the oracle (rare wide-area
-    tracks — the paper's §V 'hundreds of nautical miles' case).
+    more than one DEM tile (rare wide-area tracks — the paper's §V
+    'hundreds of nautical miles' case) are routed — row by row, not
+    whole-batch — to the oracle, while every other row stays on the
+    Pallas tile path.  ``oracle_rows`` (a (B,) bool mask) forces extra
+    rows onto the oracle — the unfused segments pipeline passes its
+    conservative knot-extent mask so both pipelines route identically.
+    The origin math runs in numpy on the caller's arrays, so host
+    inputs (the common case) cost no device->host sync; the fully
+    device-resident variant of this op is :func:`process_segments`.
     """
     if backend == "ref":
         return ref.agl_lookup_ref(dem, fi, fj, alt_msl)
-    dem = jnp.asarray(dem, jnp.float32)
-    fi = jnp.asarray(fi, jnp.float32)
-    fj = jnp.asarray(fj, jnp.float32)
     H, W = dem.shape
-    fi_c = jnp.clip(fi, 0.0, H - 1.001)
-    fj_c = jnp.clip(fj, 0.0, W - 1.001)
-    # Host-side (concrete) origin/extent check.
-    fi_np, fj_np = np.asarray(fi_c), np.asarray(fj_c)
-    oi = (fi_np.min(axis=1) // TILE_H).astype(np.int32)
-    oj = (fj_np.min(axis=1) // TILE_W).astype(np.int32)
-    spans_i = (fi_np.max(axis=1) - oi * TILE_H) >= TILE_H - 1
-    spans_j = (fj_np.max(axis=1) - oj * TILE_W) >= TILE_W - 1
-    if bool(spans_i.any() or spans_j.any()):
-        return ref.agl_lookup_ref(dem, fi, fj, alt_msl)
+    # Host-side (concrete) clip + origin/extent math — numpy throughout,
+    # so already-host inputs never bounce off the device first.
+    fi_c = np.clip(np.asarray(fi, np.float32), 0.0,
+                   np.float32(H - 1.001))
+    fj_c = np.clip(np.asarray(fj, np.float32), 0.0,
+                   np.float32(W - 1.001))
+    alt_np = np.asarray(alt_msl, np.float32)
+    oi = (fi_c.min(axis=1) // TILE_H).astype(np.int32)
+    oj = (fj_c.min(axis=1) // TILE_W).astype(np.int32)
+    spans = (((fi_c.max(axis=1) - oi * TILE_H) >= TILE_H - 1)
+             | ((fj_c.max(axis=1) - oj * TILE_W) >= TILE_W - 1))
+    if oracle_rows is not None:
+        spans |= np.asarray(oracle_rows, bool)
+    B, M = fi_c.shape
+    dem = jnp.asarray(dem, jnp.float32)
+    if bool(spans.all()):
+        return _agl_lookup_ref_jit(dem, fi_c, fj_c, alt_np)
+
+    fit = ~spans
     dem_p = _pad_to(_pad_to(dem, 0, TILE_H), 1, TILE_W)
     # Keep origins inside the padded grid.
-    oi = np.minimum(oi, dem_p.shape[0] // TILE_H - 1)
-    oj = np.minimum(oj, dem_p.shape[1] // TILE_W - 1)
-    M = fi.shape[1]
-    fi_p = _pad_to(fi_c, 1, 128)
-    fj_p = _pad_to(fj_c, 1, 128)
-    alt_p = _pad_to(jnp.asarray(alt_msl, jnp.float32), 1, 128)
-    out = agl_lookup_pallas(dem_p, fi_p, fj_p, alt_p,
-                            jnp.asarray(oi), jnp.asarray(oj),
-                            interpret=not _on_tpu())
-    return out[:, :M]
+    oi = np.minimum(oi[fit], dem_p.shape[0] // TILE_H - 1)
+    oj = np.minimum(oj[fit], dem_p.shape[1] // TILE_W - 1)
+    fi_p = _pad_to(jnp.asarray(fi_c[fit]), 1, 128)
+    fj_p = _pad_to(jnp.asarray(fj_c[fit]), 1, 128)
+    alt_p = _pad_to(jnp.asarray(alt_np[fit]), 1, 128)
+    out_fit = agl_lookup_pallas(dem_p, fi_p, fj_p, alt_p,
+                                jnp.asarray(oi), jnp.asarray(oj),
+                                interpret=not _on_tpu())[:, :M]
+    if not spans.any():
+        return out_fit
+    out_spanning = _agl_lookup_ref_jit(dem, fi_c[spans], fj_c[spans],
+                                       alt_np[spans])
+    out = jnp.zeros((B, M), jnp.float32)
+    out = out.at[np.flatnonzero(fit)].set(out_fit)
+    return out.at[np.flatnonzero(spans)].set(out_spanning)
+
+
+def process_segments(dem, t_in, v_in, count_in, t_out, count_out, *,
+                     grid, dt: float = 1.0, backend: Backend = "pallas",
+                     agl_oracle: bool = False):
+    """Fused on-device segment pipeline: interp + AGL + rates, one jit.
+
+    Replaces the ``track_interp -> host numpy -> agl_lookup ->
+    dynamic_rates`` sequence with a single compiled call: DEM
+    fractional-index math, bilinear AGL lookup (with a per-row oracle
+    fallback for tile-spanning tracks), rate estimation and the padding
+    masks all execute on device; no intermediate ever crosses the
+    host<->device boundary.  See :mod:`repro.kernels.segment_pipeline`.
+
+    Args:
+      dem: (H, W) elevation grid.
+      t_in, v_in, count_in: (B, N) knot times, (B, 3, N) lat/lon/alt
+        knots, (B,) valid knot counts.
+      t_out, count_out: (B, K) query grid, (B,) valid output lengths.
+      grid: (lat_min, lat_max, lon_min, lon_max, cells_per_deg) DEM
+        affine transform.
+      dt: uniform grid spacing in seconds.
+      backend: 'pallas' fuses the Pallas kernels; 'ref' composes the
+        pure-jnp oracles (the correctness reference).
+      agl_oracle: True computes AGL with the oracle gather for every
+        row (the always-correct variant for tracks that may cross a
+        DEM tile border); False (default) uses the single-tile Pallas
+        kernel — the caller must prove the tracks fit one tile
+        (segments.py proves it from the raw knot extents).
+
+    Returns:
+      dict of (B, K) f32 device arrays keyed by
+      :data:`segment_pipeline.FIELDS`, masked to ``count_out``.
+    """
+    use_pallas = backend != "ref"
+    key = (np.shape(dem), np.shape(t_in), np.shape(t_out),
+           tuple(float(g) for g in grid), float(dt), use_pallas,
+           bool(agl_oracle))
+    with _STATS_LOCK:
+        if key in _SEEN_FUSED_SHAPES:
+            _STATS["compile_hits"] += 1
+        else:
+            _SEEN_FUSED_SHAPES.add(key)
+            _STATS["compile_misses"] += 1
+    return segment_pipeline.process_segments(
+        dem, t_in, v_in, count_in, t_out, count_out, grid=grid, dt=dt,
+        use_pallas=use_pallas, agl_oracle=agl_oracle,
+        interpret=not _on_tpu(), donate=_on_tpu())
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -8,14 +8,21 @@ Per aircraft archive:
   5. dynamic rates (vrate/speed/heading/turn)   -> kernels.dynamic_rates;
   6. airspace class tag (nearest aerodrome within the terminal cylinder).
 
-Segments are batched to fixed (B, M) tiles so one jit/pallas compilation
-serves every archive (count arrays mask the padding).
+Steps 3-5 run through the fused device-resident pipeline
+(:func:`repro.kernels.ops.process_segments`): one jit'd call per length
+bucket, no intermediate host<->device transfers.  Segments are binned
+into power-of-two width buckets (:data:`BUCKET_SIZES`) instead of one
+global (B, 1024) tile, bounding padding waste to <2x for any segment at
+least half a bucket long (the old fixed tile wasted ~100x on a
+10-observation segment); one compilation is cached per bucket shape.
+``pipeline='unfused'`` keeps the historical three-launch host-hop path
+as the benchmark baseline (``benchmarks/kernel_bench.py`` measures one
+against the other).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import io
 import os
 import zipfile
 from typing import Optional, Sequence
@@ -25,32 +32,60 @@ import numpy as np
 from repro.core.messages import Task
 from repro.geometry.aerodromes import Aerodrome
 from repro.geometry.dem import SyntheticGlobeDEM
+from repro.geometry.queries import RADIUS_DEG
 from repro.kernels import ops
 
 MIN_OBS_PER_SEGMENT = 10       # paper: remove segments with <10 observations
 SEGMENT_GAP_S = 120.0          # new segment after a 2-minute gap
 RESAMPLE_DT_S = 1.0            # uniform 1 Hz grid
-MAX_SEG_POINTS = 1024          # fixed tile width (pad/truncate)
+MAX_SEG_POINTS = 1024          # widest tile (pad/truncate ceiling)
+BUCKET_SIZES = (128, 256, 512, 1024)   # ragged-batch width buckets
+
+
+def bucket_width(n: int) -> int:
+    """Smallest bucket that holds an ``n``-point segment (capped)."""
+    for k in BUCKET_SIZES:
+        if n <= k:
+            return k
+    return BUCKET_SIZES[-1]
+
+
+def _round_rows(b: int) -> int:
+    """Round a bucket's row count up: powers of two below 8, multiples
+    of 8 after — at most 7 padded rows, and far fewer compiled batch
+    shapes per bucket width than one per distinct segment count."""
+    p = 1
+    while p < b and p < 8:
+        p *= 2
+    return p if b <= 8 else -(-b // 8) * 8
 
 
 @dataclasses.dataclass
 class ProcessedSegments:
-    """Fixed-shape batch of processed segments for one archive."""
+    """One archive's processed segments as (B, W) planes; ``W`` is the
+    archive's widest bucket (<= MAX_SEG_POINTS), ``count`` masks rows."""
     icao24: list[str]
-    times: np.ndarray       # (B, M) uniform grid times
-    lat: np.ndarray         # (B, M)
-    lon: np.ndarray         # (B, M)
-    alt_msl_m: np.ndarray   # (B, M)
-    alt_agl_m: np.ndarray   # (B, M)
-    vrate_ms: np.ndarray    # (B, M)
-    gspeed_ms: np.ndarray   # (B, M)
-    heading_rad: np.ndarray  # (B, M)
-    turn_rad_s: np.ndarray  # (B, M)
+    times: np.ndarray       # (B, W) uniform grid times
+    lat: np.ndarray         # (B, W)
+    lon: np.ndarray         # (B, W)
+    alt_msl_m: np.ndarray   # (B, W)
+    alt_agl_m: np.ndarray   # (B, W)
+    vrate_ms: np.ndarray    # (B, W)
+    gspeed_ms: np.ndarray   # (B, W)
+    heading_rad: np.ndarray  # (B, W)
+    turn_rad_s: np.ndarray  # (B, W)
     count: np.ndarray       # (B,)
     airspace: list[str]
 
     def __len__(self) -> int:
         return len(self.count)
+
+
+# Field name mapping: fused-pipeline plane -> ProcessedSegments attribute.
+_PLANE_ATTRS = (("times", "times"), ("lat", "lat"), ("lon", "lon"),
+                ("alt_msl", "alt_msl_m"), ("alt_agl", "alt_agl_m"),
+                ("vrate", "vrate_ms"), ("gspeed", "gspeed_ms"),
+                ("heading", "heading_rad"), ("turn", "turn_rad_s"))
 
 
 def split_segments(times: np.ndarray, gap_s: float = SEGMENT_GAP_S,
@@ -67,15 +102,38 @@ def split_segments(times: np.ndarray, gap_s: float = SEGMENT_GAP_S,
     return out
 
 
+@dataclasses.dataclass
+class _SegRecord:
+    """One segment, flattened out of its archive for bucketed batching."""
+    arch: int               # archive index in the _process_many items
+    name: str
+    t: np.ndarray           # raw times, truncated to MAX_SEG_POINTS
+    lat: np.ndarray
+    lon: np.ndarray
+    alt: np.ndarray
+    n: int                  # valid knots
+    m: int                  # valid output grid points
+    width: int              # bucket width (>= max(n, m))
+    may_span: bool          # track may cross a DEM tile border
+
+
 class SegmentProcessor:
     """Processes one organized/archived aircraft file into segments."""
 
     def __init__(self, dem: Optional[SyntheticGlobeDEM] = None,
                  aerodromes: Optional[Sequence[Aerodrome]] = None,
-                 backend: str = "pallas"):
+                 backend: str = "pallas", pipeline: str = "fused"):
+        if pipeline not in ("fused", "unfused"):
+            raise ValueError(f"unknown pipeline {pipeline!r}")
         self.dem = dem or SyntheticGlobeDEM()
         self.aerodromes = list(aerodromes or [])
         self.backend = backend
+        self.pipeline = pipeline
+        self._dem_f32 = self.dem.elevation_m.astype(np.float32)
+        self._dem_grid = (self.dem.lat_min, self.dem.lat_max,
+                          self.dem.lon_min, self.dem.lon_max,
+                          float(self.dem.cells_per_deg))
+        self.last_stats: dict = {}
         if self.aerodromes:
             self._aero_lat = np.array([a.lat for a in self.aerodromes])
             self._aero_lon = np.array([a.lon for a in self.aerodromes])
@@ -87,35 +145,35 @@ class SegmentProcessor:
         return self.process_file(task.payload or task.task_id)
 
     def read_observations(self, path: str) -> dict[str, np.ndarray]:
-        """Read a per-aircraft CSV (possibly inside a .zip archive)."""
+        """Read a per-aircraft CSV (possibly inside a .zip archive).
+
+        The parse is vectorized: one ``np.loadtxt`` over the decoded
+        payload per column group instead of a Python ``split(',')``
+        loop per line (the loop dominated small-archive task cost)."""
         if path.endswith(".zip"):
             with zipfile.ZipFile(path) as zf:
-                name = zf.namelist()[0]
-                raw = io.StringIO(zf.read(name).decode())
+                text = zf.read(zf.namelist()[0]).decode()
         else:
-            raw = open(path)
-        try:
-            header = raw.readline().strip().split(",")
-            cols = {c: i for i, c in enumerate(header)}
-            rows = [ln.strip().split(",") for ln in raw if ln.strip()]
-        finally:
-            if hasattr(raw, "close"):
-                raw.close()
-        if not rows:
+            with open(path) as f:
+                text = f.read()
+        nl = text.find("\n")
+        if nl < 0 or not text[nl:].strip():
             return {}
-        arr = np.array(rows, dtype=object)
-
-        def col(name, dtype=np.float64):
-            return arr[:, cols[name]].astype(dtype)
-
-        t = col("time")
+        cols = {c: i for i, c in enumerate(text[:nl].strip().split(","))}
+        lines = [ln for ln in text[nl + 1:].split("\n") if ln.strip()]
+        num = np.loadtxt(lines, delimiter=",", ndmin=2,
+                         usecols=[cols[c] for c in
+                                  ("time", "lat", "lon", "geoaltitude")])
+        icao = np.loadtxt(lines, delimiter=",", dtype=str,
+                          usecols=cols["icao24"], ndmin=1)
+        t = num[:, 0]
         order = np.argsort(t, kind="stable")
         return {
             "time": t[order],
-            "lat": col("lat")[order],
-            "lon": col("lon")[order],
-            "alt": col("geoaltitude")[order],
-            "icao24": arr[order, cols["icao24"]],
+            "lat": num[order, 1],
+            "lon": num[order, 2],
+            "alt": num[order, 3],
+            "icao24": icao[order],
         }
 
     # -- processing -------------------------------------------------------
@@ -134,8 +192,8 @@ class SegmentProcessor:
         return self._process_many([(obs, segs)])[0]
 
     def process_batch(self, tasks: Sequence[Task]) -> dict:
-        """Runtime batch hook: one multi-task ASSIGN message -> ONE
-        vectorized pallas call over every segment of every archive in the
+        """Runtime batch hook: one multi-task ASSIGN message -> bucketed
+        fused pipeline calls over every segment of every archive in the
         batch, instead of per-task Python dispatch.  Returns
         ``{task_id: ProcessedSegments}`` (what the worker reports DONE)."""
         out: dict[str, ProcessedSegments] = {}
@@ -157,9 +215,157 @@ class SegmentProcessor:
 
     def _process_many(self, items: list[tuple[dict, list[slice]]]
                       ) -> list[ProcessedSegments]:
-        """Process the segments of several archives in one fixed-shape
-        tile batch: a single track_interp / agl_lookup / dynamic_rates
-        invocation covers all of them; rows are sliced back per archive."""
+        if self.pipeline == "unfused":
+            return self._process_many_unfused(items)
+        return self._process_many_fused(items)
+
+    # -- fused, length-bucketed path --------------------------------------
+
+    # Conservative guard band (in DEM cells) added to the host-side
+    # tile-span check: the device predicate works on f32 interp output,
+    # the host bound on f64 raw knots — the margin absorbs the rounding.
+    _SPAN_MARGIN = 0.5
+
+    def _may_span(self, lat: np.ndarray, lon: np.ndarray) -> bool:
+        """Can this track's DEM window cross a tile border?  Interp
+        output is a convex combination of the knots, so knot extents
+        bound it; False proves the fused op needs no oracle fallback."""
+        lat_min, lat_max, lon_min, lon_max, cpd = self._dem_grid
+        H, W = self._dem_f32.shape
+
+        def axis_spans(v, lo, hi, cells, tile):
+            f0 = (min(max(float(v.min()), lo), hi) - lo) * cpd
+            f1 = (min(max(float(v.max()), lo), hi) - lo) * cpd
+            f0 = min(max(f0, 0.0), cells - 1.001)
+            f1 = min(max(f1, 0.0), cells - 1.001)
+            origin = (f0 // tile) * tile
+            return (f1 - origin) >= tile - 1 - self._SPAN_MARGIN
+
+        return (axis_spans(lat, lat_min, lat_max, H, ops.TILE_H)
+                or axis_spans(lon, lon_min, lon_max, W, ops.TILE_W))
+
+    def _records(self, items: list[tuple[dict, list[slice]]]
+                 ) -> list[_SegRecord]:
+        records: list[_SegRecord] = []
+        for ai, (obs, segs) in enumerate(items):
+            for s in segs:
+                n = min(s.stop - s.start, MAX_SEG_POINTS)
+                sl = slice(s.start, s.start + n)
+                t = obs["time"][sl]
+                dur = t[-1] - t[0]
+                m = min(int(dur / RESAMPLE_DT_S) + 1, MAX_SEG_POINTS)
+                lat, lon = obs["lat"][sl], obs["lon"][sl]
+                records.append(_SegRecord(
+                    arch=ai, name=str(obs["icao24"][s.start]), t=t,
+                    lat=lat, lon=lon, alt=obs["alt"][sl], n=n, m=m,
+                    width=bucket_width(max(n, m)),
+                    may_span=self._may_span(lat, lon)))
+        return records
+
+    def _process_many_fused(self, items: list[tuple[dict, list[slice]]]
+                            ) -> list[ProcessedSegments]:
+        """Bucketed ragged batching: flatten every archive's segments,
+        bin them by power-of-two width, run ONE fused device call per
+        bucket (cached compilation per shape), then reassemble rows into
+        per-archive planes."""
+        records = self._records(items)
+        # Bucket key includes the fallback flag: a segment's compiled
+        # graph variant must be a function of the segment alone, or
+        # per-archive outputs could drift an ulp depending on which
+        # other segments share its batch (XLA fuses the fallback and
+        # no-fallback graphs differently).
+        buckets: dict[tuple[int, bool], list[int]] = {}
+        for gi, rec in enumerate(records):
+            buckets.setdefault((rec.width, rec.may_span), []).append(gi)
+
+        planes: dict[int, dict[str, np.ndarray]] = {}   # gi -> field rows
+        allocated = 0
+        for width, may_span in sorted(buckets):
+            idxs = buckets[(width, may_span)]
+            bk = len(idxs)
+            bp = _round_rows(bk)
+            allocated += bp * width
+            # The knot axis gets its own (smaller) 128-multiple width:
+            # raw observations are ~5-8x sparser than the 1 Hz output
+            # grid, so tying knots to the output bucket would waste most
+            # of the interp kernel's mask matmul.
+            kn = -(-max(records[gi].n for gi in idxs) // 128) * 128
+            t_in = np.zeros((bp, kn), np.float32)
+            v_in = np.zeros((bp, 3, kn), np.float32)
+            count_in = np.full((bp,), 2, np.int32)
+            t_out = np.zeros((bp, width), np.float32)
+            count_out = np.ones((bp,), np.int32)
+            # Benign padding rows: strictly increasing knots, zero values.
+            t_in[bk:] = np.arange(kn, dtype=np.float32)[None, :]
+            for r, gi in enumerate(idxs):
+                rec = records[gi]
+                n, m = rec.n, rec.m
+                t0 = rec.t[0]
+                t_in[r, :n] = rec.t - t0
+                t_in[r, n:] = (rec.t[-1] - t0) + np.arange(1, kn - n + 1)
+                v_in[r, 0, :n] = rec.lat
+                v_in[r, 1, :n] = rec.lon
+                v_in[r, 2, :n] = rec.alt
+                # hold last value through padding (keeps interp defined)
+                v_in[r, :, n:] = v_in[r, :, n - 1:n]
+                count_in[r] = n
+                t_out[r, :m] = np.arange(m) * RESAMPLE_DT_S
+                t_out[r, m:] = t_out[r, m - 1]
+                count_out[r] = m
+            out = ops.process_segments(
+                self._dem_f32, t_in, v_in, count_in, t_out, count_out,
+                grid=self._dem_grid, dt=RESAMPLE_DT_S,
+                backend=self.backend, agl_oracle=may_span)
+            # ONE device->host fetch per bucket — the pipeline's only
+            # downward transfer.
+            host = {k: np.asarray(v) for k, v in out.items()}
+            for r, gi in enumerate(idxs):
+                planes[gi] = {k: v[r] for k, v in host.items()}
+
+        # Airspace class for every segment in one vectorized query.
+        lat0 = np.array([planes[gi]["lat"][0] for gi in range(len(records))])
+        lon0 = np.array([planes[gi]["lon"][0] for gi in range(len(records))])
+        airspace = self._airspace_classes(lat0, lon0)
+
+        valid = sum(rec.m for rec in records)
+        bucket_rows: dict[int, int] = {}
+        for (width, _), ix in buckets.items():
+            bucket_rows[int(width)] = bucket_rows.get(int(width), 0) \
+                + len(ix)
+        self.last_stats = _pipeline_stats(
+            "fused", self.backend, len(records), int(valid),
+            int(allocated), bucket_rows, len(buckets))
+
+        out_list: list[ProcessedSegments] = []
+        gi = 0
+        for ai, (_, segs) in enumerate(items):
+            rows = list(range(gi, gi + len(segs)))
+            gi += len(segs)
+            if not rows:
+                out_list.append(_empty())
+                continue
+            wmax = max(records[r].width for r in rows)
+            fields = {attr: np.zeros((len(rows), wmax), np.float32)
+                      for _, attr in _PLANE_ATTRS}
+            for b, r in enumerate(rows):
+                w = records[r].width
+                for plane, attr in _PLANE_ATTRS:
+                    fields[attr][b, :w] = planes[r][plane]
+            out_list.append(ProcessedSegments(
+                icao24=[records[r].name for r in rows],
+                count=np.array([records[r].m for r in rows], np.int32),
+                airspace=[airspace[r] for r in rows],
+                **fields))
+        return out_list
+
+    # -- unfused baseline (three launches + host hops) --------------------
+
+    def _process_many_unfused(self, items: list[tuple[dict, list[slice]]]
+                              ) -> list[ProcessedSegments]:
+        """The historical path: one fixed (B, 1024) tile padded to the
+        global max length, three separate kernel launches with host
+        numpy in between.  Kept as the measured baseline for
+        ``benchmarks/kernel_bench.py``."""
         B = sum(len(segs) for _, segs in items)
         N = max(s.stop - s.start for _, segs in items for s in segs)
         N = min(max(N, MIN_OBS_PER_SEGMENT), MAX_SEG_POINTS)
@@ -170,6 +376,7 @@ class SegmentProcessor:
         t_out = np.zeros((B, M), np.float32)
         count_out = np.zeros((B,), np.int32)
         names = []
+        oracle_rows = np.zeros((B,), bool)
         b = 0
         for obs, segs in items:
             for s in segs:
@@ -190,10 +397,13 @@ class SegmentProcessor:
                 t_out[b, m:] = t_out[b, m - 1]
                 count_out[b] = m
                 names.append(str(obs["icao24"][s.start]))
+                oracle_rows[b] = self._may_span(obs["lat"][s][:N],
+                                                obs["lon"][s][:N])
                 b += 1
 
         interp = np.asarray(ops.track_interp(
             t_in, v_in, count_in, t_out, backend=self.backend))
+        ops.note_intermediate_transfer()          # device->host: interp
         lat, lon, alt = interp[:, :, 0], interp[:, :, 1], interp[:, :, 2]
 
         # AGL via DEM (fractional indices from the DEM's affine grid).
@@ -201,22 +411,28 @@ class SegmentProcessor:
               - self.dem.lat_min) * self.dem.cells_per_deg
         fj = (np.clip(lon, self.dem.lon_min, self.dem.lon_max)
               - self.dem.lon_min) * self.dem.cells_per_deg
+        ops.note_intermediate_transfer()          # host->device: fi/fj/alt
         agl = np.asarray(ops.agl_lookup(
-            self.dem.elevation_m.astype(np.float32), fi, fj, alt,
-            backend=self.backend))
+            self._dem_f32, fi, fj, alt, backend=self.backend,
+            oracle_rows=oracle_rows))
+        ops.note_intermediate_transfer()          # device->host: agl
 
         v_grid = np.stack([lat, lon, alt], axis=1).astype(np.float32)
         rates = np.asarray(ops.dynamic_rates(
             v_grid, count_out, RESAMPLE_DT_S, backend=self.backend))
+        ops.note_intermediate_transfer()          # device->host: rates
 
-        airspace = [self._airspace_class(lat[b, 0], lon[b, 0])
-                    for b in range(B)]
+        airspace = self._airspace_classes(lat[:, 0], lon[:, 0])
         mask = (np.arange(M)[None, :] < count_out[:, None])
         times = t_out * mask
         lat_m, lon_m, alt_m, agl_m = (lat * mask, lon * mask, alt * mask,
                                       agl * mask)
         vr, gs, hd, tr = (rates[:, 0] * mask, rates[:, 1] * mask,
                           rates[:, 2] * mask, rates[:, 3] * mask)
+
+        self.last_stats = _pipeline_stats(
+            "unfused", self.backend, B, int(count_out.sum()), int(B * M),
+            {M: B}, 3)
 
         out: list[ProcessedSegments] = []
         off = 0
@@ -233,20 +449,52 @@ class SegmentProcessor:
             off += len(segs)
         return out
 
-    def _airspace_class(self, lat: float, lon: float) -> str:
-        """Class of the nearest aerodrome within the terminal radius, else
-        'G' (uncontrolled, below Class E floors — good enough a proxy)."""
+    # -- airspace ---------------------------------------------------------
+
+    def _airspace_classes(self, lat0: np.ndarray,
+                          lon0: np.ndarray) -> list[str]:
+        """Class of the nearest aerodrome within the terminal radius for
+        every segment at once (one (B, A) argmin), else 'G' (uncontrolled,
+        below Class E floors — good enough a proxy)."""
+        lat0 = np.atleast_1d(np.asarray(lat0, np.float64))
+        lon0 = np.atleast_1d(np.asarray(lon0, np.float64))
         if not self.aerodromes:
-            return "G"
-        d2 = ((self._aero_lat - lat) ** 2
-              + ((self._aero_lon - lon) * np.cos(np.deg2rad(lat))) ** 2)
-        i = int(np.argmin(d2))
-        from repro.geometry.queries import RADIUS_DEG
-        return self._aero_cls[i] if d2[i] <= RADIUS_DEG ** 2 else "G"
+            return ["G"] * len(lat0)
+        d2 = ((self._aero_lat[None, :] - lat0[:, None]) ** 2
+              + ((self._aero_lon[None, :] - lon0[:, None])
+                 * np.cos(np.deg2rad(lat0))[:, None]) ** 2)
+        nearest = np.argmin(d2, axis=1)
+        best = d2[np.arange(len(lat0)), nearest]
+        return [self._aero_cls[i] if b <= RADIUS_DEG ** 2 else "G"
+                for i, b in zip(nearest, best)]
+
+    def _airspace_class(self, lat: float, lon: float) -> str:
+        return self._airspace_classes(np.array([lat]), np.array([lon]))[0]
+
+
+def _pipeline_stats(pipeline: str, backend: str, n_segments: int,
+                    valid: int, allocated: int, bucket_rows: dict,
+                    pipeline_calls: int) -> dict:
+    """Padding accounting for one ``_process_many`` batch.
+
+    ``padded_fraction`` is the padding-to-payload ratio — padded output
+    elements per *valid* output element (0 = no padding; this is the
+    quantity that multiplies wasted kernel compute).  ``padded_share``
+    is the share of the allocated tile that is padding (in [0, 1))."""
+    padded = allocated - valid
+    return {
+        "pipeline": pipeline, "backend": backend,
+        "n_segments": n_segments, "valid_points": valid,
+        "allocated_points": allocated,
+        "padded_fraction": padded / valid if valid else 0.0,
+        "padded_share": padded / allocated if allocated else 0.0,
+        "bucket_rows": bucket_rows,
+        "pipeline_calls": pipeline_calls,
+    }
 
 
 def _empty() -> ProcessedSegments:
-    z = np.zeros((0, MAX_SEG_POINTS), np.float32)
+    z = np.zeros((0, BUCKET_SIZES[0]), np.float32)
     return ProcessedSegments(
         icao24=[], times=z, lat=z, lon=z, alt_msl_m=z, alt_agl_m=z,
         vrate_ms=z, gspeed_ms=z, heading_rad=z, turn_rad_s=z,

@@ -54,6 +54,7 @@ class TrackWorkflow:
                  organization: str = "largest_first",
                  poll_interval: float = 0.01,
                  backend: str = "pallas",
+                 pipeline: str = "fused",
                  exec_backend: str = "threads",
                  tasks_per_message: int = 1,
                  checkpoint_interval_s: float = 0.5,
@@ -74,6 +75,7 @@ class TrackWorkflow:
         self.organization = organization
         self.poll_interval = poll_interval
         self.backend = backend
+        self.pipeline = pipeline
         self.exec_backend = exec_backend
         self.tasks_per_message = tasks_per_message
         self.checkpoint_interval_s = checkpoint_interval_s
@@ -157,10 +159,10 @@ class TrackWorkflow:
             proc = SegmentProcessor(
                 dem=SyntheticGlobeDEM(),
                 aerodromes=synthetic_aerodromes(n=64),
-                backend=self.backend)
+                backend=self.backend, pipeline=self.pipeline)
             tasks = segment_tasks_from_archive_tree(self.archive_dir)
             # §IV.C: random organization for processing.  A multi-task
-            # ASSIGN executes as ONE vectorized pallas call via
+            # ASSIGN executes as bucketed fused pipeline calls via
             # SegmentProcessor.process_batch.
             self._run_phase("process", tasks, proc, organization="random")
         return self.reports
@@ -182,6 +184,11 @@ def main() -> None:
     ap.add_argument("--files", type=int, default=8)
     ap.add_argument("--scale", type=float, default=2e4)
     ap.add_argument("--tasks-per-message", type=int, default=4)
+    ap.add_argument("--pipeline", default="fused",
+                    choices=["fused", "unfused"],
+                    help="segment hot path: fused device-resident "
+                         "bucketed pipeline, or the legacy three-launch "
+                         "baseline")
     args = ap.parse_args()
 
     triple = None
@@ -189,6 +196,7 @@ def main() -> None:
         triple = TriplesConfig(nodes=args.nodes, nppn=args.nppn or 8)
     wf = TrackWorkflow(args.root, n_workers=args.workers,
                        exec_backend=args.backend,
+                       pipeline=args.pipeline,
                        tasks_per_message=args.tasks_per_message,
                        poll_interval=0.005, triple=triple)
     if not os.path.isdir(wf.raw_dir):

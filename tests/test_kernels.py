@@ -117,6 +117,58 @@ def test_agl_lookup_wide_track_fallback():
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
 
 
+def test_agl_lookup_routes_only_spanning_rows(monkeypatch):
+    """A mixed batch sends JUST the tile-spanning rows to the oracle;
+    the rest stay on the Pallas tile path (whole-batch fallback would
+    forfeit the kernel for every narrow track in the batch)."""
+    rng = np.random.default_rng(9)
+    dem = rng.uniform(0, 3000, (512, 512)).astype(np.float32)
+    B, M = 5, 64
+    fi = rng.uniform(10, 100, (B, M)).astype(np.float32)   # one tile
+    fj = rng.uniform(10, 200, (B, M)).astype(np.float32)
+    fi[1] = rng.uniform(0, 500, M)                          # spans
+    fj[3] = rng.uniform(0, 500, M)                          # spans
+    alt = rng.uniform(0, 4000, (B, M)).astype(np.float32)
+
+    oracle_rows = []
+    orig = ops._agl_lookup_ref_jit
+    monkeypatch.setattr(
+        ops, "_agl_lookup_ref_jit",
+        lambda d, a, b, c: oracle_rows.append(a.shape[0]) or orig(d, a, b, c))
+    got = np.asarray(ops.agl_lookup(dem, fi, fj, alt))
+    assert oracle_rows == [2]       # exactly the two spanning rows
+    want = np.asarray(ref.agl_lookup_ref(dem, fi, fj, alt))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_agl_lookup_host_inputs_no_device_roundtrip(monkeypatch):
+    """Host (numpy) inputs must not be bounced to the device for the
+    origin/routing math."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(10)
+    dem = rng.uniform(0, 3000, (256, 512)).astype(np.float32)
+    fi = rng.uniform(10, 100, (2, 64)).astype(np.float32)
+    fj = rng.uniform(10, 200, (2, 64)).astype(np.float32)
+    alt = rng.uniform(0, 4000, (2, 64)).astype(np.float32)
+
+    # The routing math happens first; jnp conversion of fi/fj/alt comes
+    # only when handing the already-routed rows to the kernel — assert
+    # nothing upstream converted the full arrays by running the op with
+    # conversion intercepted for the exact original objects.
+    orig_asarray = jnp.asarray
+    seen = []
+
+    def spy(x, *a, **k):
+        if x is fi or x is fj or x is alt:
+            seen.append(x)
+        return orig_asarray(x, *a, **k)
+    monkeypatch.setattr(jnp, "asarray", spy)
+    out = np.asarray(ops.agl_lookup(dem, fi, fj, alt))
+    assert not seen                 # only routed row-subsets go up
+    want = np.asarray(ref.agl_lookup_ref(dem, fi, fj, alt))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-2)
+
+
 def test_agl_on_grid_points_is_exact():
     rng = np.random.default_rng(6)
     dem = rng.uniform(0, 3000, (128, 256)).astype(np.float32)

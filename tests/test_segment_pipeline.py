@@ -1,0 +1,335 @@
+"""Fused on-device segment pipeline: pallas-vs-ref, fused-vs-unfused,
+bucketing/reassembly invariance, and the satellite vectorizations.
+
+Tolerancing notes: the fused-vs-unfused comparison is gated at 1e-5 —
+the two paths run the same kernels on the same values (padding columns
+contribute exact zeros; stage boundaries are pinned with optimization
+barriers), so in practice they agree bitwise.  The pallas-vs-ref
+comparison tolerates ulp-level association differences (the AGL matmul
+formulation vs the 4-term oracle), amplified by the terrain gradient;
+tracks drift east so dynamic-rate headings stay clear of the arctan2
+branch cut at +-pi.
+"""
+
+import zipfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.geometry.aerodromes import synthetic_aerodromes
+from repro.kernels import ops
+from repro.kernels.segment_pipeline import FIELDS
+from repro.tracks.segments import (
+    BUCKET_SIZES, MAX_SEG_POINTS, SegmentProcessor, _round_rows,
+    bucket_width, split_segments)
+
+# Equatorial test grid: f32 lat/lon ulp is ~60x smaller near 0 than at
+# CONUS latitudes, so central-difference rates don't amplify the
+# pallas-vs-ref interp ulp into m/s-scale noise.
+GRID = (0.0, 26.0, 0.0, 59.0, 8.0)
+ATTRS = ("times", "lat", "lon", "alt_msl_m", "alt_agl_m", "vrate_ms",
+         "gspeed_ms", "heading_rad", "turn_rad_s")
+
+
+def _dem(seed=7, H=209, W=473):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0, 2500, (H, W)).astype(np.float32)
+
+
+def _ragged_inputs(B, K, seed=0):
+    """One bucket batch: B tracks of <=K knots drifting east (headings
+    stay off the arctan2 branch cut)."""
+    rng = np.random.default_rng(seed)
+    t_in = np.zeros((B, K), np.float32)
+    v_in = np.zeros((B, 3, K), np.float32)
+    count_in = np.zeros((B,), np.int32)
+    t_out = np.zeros((B, K), np.float32)
+    count_out = np.zeros((B,), np.int32)
+    for b in range(B):
+        n = int(rng.integers(10, K + 1))
+        m = int(rng.integers(2, K + 1))
+        t = np.cumsum(rng.uniform(1.0, 6.0, n))
+        t -= t[0]
+        t_in[b, :n] = t
+        t_in[b, n:] = t[-1] + np.arange(1, K - n + 1)
+        v_in[b, 0, :n] = rng.uniform(1, 3) \
+            + np.cumsum(rng.normal(0, 2e-4, n))
+        v_in[b, 1, :n] = rng.uniform(2, 20) \
+            + np.cumsum(rng.uniform(5e-4, 2e-3, n))        # eastward
+        v_in[b, 2, :n] = 1500 + np.cumsum(rng.normal(0, 2, n))
+        v_in[b, :, n:] = v_in[b, :, n - 1:n]
+        count_in[b] = n
+        t_out[b, :m] = np.arange(m)
+        t_out[b, m:] = t_out[b, m - 1]
+        count_out[b] = m
+    return t_in, v_in, count_in, t_out, count_out
+
+
+@pytest.mark.parametrize("K", BUCKET_SIZES)
+def test_process_segments_pallas_matches_ref_across_buckets(K):
+    dem = _dem()
+    args = _ragged_inputs(3, K, seed=K)
+    got = {k: np.asarray(v) for k, v in ops.process_segments(
+        dem, *args, grid=GRID, backend="pallas").items()}
+    want = {k: np.asarray(v) for k, v in ops.process_segments(
+        dem, *args, grid=GRID, backend="ref").items()}
+    assert set(got) == set(FIELDS)
+    # Rate fields amplify interp ulp by ~m_per_deg/(2 dt), and a query
+    # landing on a knot boundary may bracket the adjacent interval —
+    # both are sub-m/s effects; structural kernel bugs are orders of
+    # magnitude larger.
+    atol = {"vrate": 0.5, "gspeed": 0.5, "heading": 0.1, "turn": 0.5}
+    for f in FIELDS:
+        np.testing.assert_allclose(got[f], want[f], rtol=1e-3,
+                                   atol=atol.get(f, 1e-2), err_msg=f)
+
+
+def test_process_segments_masks_padding():
+    dem = _dem()
+    args = _ragged_inputs(4, 128, seed=1)
+    count_out = args[4]
+    out = ops.process_segments(dem, *args, grid=GRID)
+    idx = np.arange(128)[None, :]
+    for f in FIELDS:
+        plane = np.asarray(out[f])
+        assert (plane[idx >= count_out[:, None]] == 0).all(), f
+
+
+def test_process_segments_counts_compile_cache():
+    dem = _dem()
+    ops.reset_pipeline_stats()
+    args = _ragged_inputs(2, 128, seed=3)
+    ops.process_segments(dem, *args, grid=GRID)
+    ops.process_segments(dem, *args, grid=GRID)
+    stats = ops.get_pipeline_stats()
+    assert stats["compile_misses"] == 1
+    assert stats["compile_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Fused vs unfused on golden (real workflow) archives.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def golden_archives(tmp_path_factory):
+    from repro.tracks.segments import segment_tasks_from_archive_tree
+    from repro.tracks.workflow import TrackWorkflow
+    root = str(tmp_path_factory.mktemp("golden"))
+    wf = TrackWorkflow(root, n_workers=2, poll_interval=0.003)
+    wf.generate_raw(n_files=4, scale=2e4)
+    wf.run()
+    tasks = segment_tasks_from_archive_tree(wf.archive_dir)
+    assert tasks
+    return tasks
+
+
+def _processors():
+    aero = synthetic_aerodromes(n=64)
+    return (SegmentProcessor(aerodromes=aero, pipeline="fused"),
+            SegmentProcessor(aerodromes=aero, pipeline="unfused"))
+
+
+def test_fused_matches_unfused_on_golden_archives(golden_archives):
+    """ISSUE 3 acceptance: fused == unfused within 1e-5 on golden
+    archives (the fused planes are narrower; the unfused tail beyond
+    the archive's bucket width must be pure padding)."""
+    fused, unfused = _processors()
+    fb = fused.process_batch(golden_archives)
+    ub = unfused.process_batch(golden_archives)
+    assert set(fb) == set(ub)
+    compared = 0
+    for tid in fb:
+        f, u = fb[tid], ub[tid]
+        assert f.icao24 == u.icao24
+        assert f.airspace == u.airspace
+        np.testing.assert_array_equal(f.count, u.count)
+        w = f.times.shape[1]
+        for attr in ATTRS:
+            a, b = getattr(f, attr), getattr(u, attr)
+            if a.size:
+                np.testing.assert_allclose(a, b[:, :w], atol=1e-5,
+                                           rtol=1e-5, err_msg=attr)
+                assert not b[:, w:].any()
+                compared += 1
+    assert compared > 0
+    assert fused.last_stats["padded_fraction"] < \
+        unfused.last_stats["padded_fraction"]
+
+
+def test_fused_zero_intermediate_transfers(golden_archives):
+    fused, unfused = _processors()
+    ops.reset_pipeline_stats()
+    fused.process_batch(golden_archives)
+    assert ops.get_pipeline_stats()["intermediate_transfers"] == 0
+    ops.reset_pipeline_stats()
+    unfused.process_batch(golden_archives[:2])
+    # interp down, fi/fj up, agl down, rates down — per batch
+    assert ops.get_pipeline_stats()["intermediate_transfers"] == 4
+
+
+def test_read_observations_golden_zip_roundtrip(golden_archives):
+    """The vectorized zip/CSV parse yields sorted, finite columns."""
+    proc, _ = _processors()
+    obs = proc.read_observations(golden_archives[0].payload)
+    if not obs:
+        pytest.skip("first archive empty")
+    assert (np.diff(obs["time"]) >= 0).all()
+    for key in ("time", "lat", "lon", "alt"):
+        assert np.isfinite(obs[key]).all()
+    assert len(obs["icao24"]) == len(obs["time"])
+
+
+# ---------------------------------------------------------------------------
+# Bucketing / reassembly.
+# ---------------------------------------------------------------------------
+
+def test_bucket_width_boundaries():
+    assert bucket_width(1) == 128
+    assert bucket_width(128) == 128
+    assert bucket_width(129) == 256
+    assert bucket_width(256) == 256
+    assert bucket_width(1024) == 1024
+    assert bucket_width(5000) == 1024      # capped at MAX_SEG_POINTS
+    assert bucket_width(MAX_SEG_POINTS) == MAX_SEG_POINTS
+
+
+def test_round_rows():
+    assert [_round_rows(b) for b in (1, 2, 3, 5, 8, 9, 17)] == \
+        [1, 2, 4, 8, 8, 16, 24]
+
+
+def _synth_archive(rng, n_segs):
+    """One archive of eastward-drifting segments (10-400 obs each)."""
+    ts, lats, lons, alts = [], [], [], []
+    t = 0.0
+    for _ in range(n_segs):
+        n = int(rng.integers(10, 400))
+        seg_t = t + np.cumsum(rng.uniform(1.0, 7.0, n))
+        ts.append(seg_t)
+        lats.append(rng.uniform(30, 45) + np.cumsum(rng.normal(0, 2e-4, n)))
+        lons.append(rng.uniform(-115, -80)
+                    + np.cumsum(rng.uniform(5e-4, 2e-3, n)))
+        alts.append(1000 + np.cumsum(rng.normal(0, 2, n)))
+        t = seg_t[-1] + 400.0
+    obs = {"time": np.concatenate(ts), "lat": np.concatenate(lats),
+           "lon": np.concatenate(lons), "alt": np.concatenate(alts),
+           "icao24": np.array(["deadbe"] * sum(len(x) for x in ts))}
+    return obs, split_segments(obs["time"])
+
+
+def test_fused_handles_zero_segment_archives():
+    """An items entry with no segments yields an empty ProcessedSegments
+    from both pipelines (the fused path must not choke on empty rows)."""
+    rng = np.random.default_rng(3)
+    full = _synth_archive(rng, 2)
+    empty = ({"time": np.array([0.0, 1.0]), "lat": np.zeros(2),
+              "lon": np.zeros(2), "alt": np.zeros(2),
+              "icao24": np.array(["x", "x"])}, [])
+    for pipeline in ("fused", "unfused"):
+        proc = SegmentProcessor(pipeline=pipeline)
+        out = proc._process_many([full, empty])
+        assert len(out) == 2
+        assert len(out[0]) == 2
+        assert len(out[1]) == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 4))
+def test_bucketing_reassembly_is_batch_composition_invariant(seed, n_arch):
+    """Per-archive outputs must not depend on what else shares the
+    batch: processing archives together == processing them alone."""
+    rng = np.random.default_rng(seed)
+    items = [_synth_archive(rng, int(rng.integers(1, 4)))
+             for _ in range(n_arch)]
+    proc = SegmentProcessor(aerodromes=synthetic_aerodromes(n=16))
+    together = proc._process_many(items)
+    for item, batched in zip(items, together):
+        alone = proc._process_many([item])[0]
+        assert alone.icao24 == batched.icao24
+        assert alone.airspace == batched.airspace
+        np.testing.assert_array_equal(alone.count, batched.count)
+        for attr in ATTRS:
+            np.testing.assert_array_equal(
+                getattr(alone, attr), getattr(batched, attr), err_msg=attr)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: vectorized CSV parse.
+# ---------------------------------------------------------------------------
+
+CSV = ("time,icao24,lat,lon,geoaltitude\n"
+       "30.0,abc123,40.5,-100.25,1200.0\n"
+       "\n"
+       "10.0,abc123,40.1,-100.10,1100.0\n"
+       "10.0,abc123,40.2,-100.15,1150.0\n"
+       "20.5,abc123,40.3,-100.20,1180.0\n")
+
+
+def test_read_observations_vectorized_parse(tmp_path):
+    p = tmp_path / "abc123.csv"
+    p.write_text(CSV)
+    proc = SegmentProcessor()
+    obs = proc.read_observations(str(p))
+    np.testing.assert_array_equal(obs["time"], [10.0, 10.0, 20.5, 30.0])
+    # stable sort: the two t=10 rows keep file order
+    np.testing.assert_array_equal(obs["lat"], [40.1, 40.2, 40.3, 40.5])
+    np.testing.assert_array_equal(obs["lon"],
+                                  [-100.10, -100.15, -100.20, -100.25])
+    np.testing.assert_array_equal(obs["alt"],
+                                  [1100.0, 1150.0, 1180.0, 1200.0])
+    assert list(obs["icao24"]) == ["abc123"] * 4
+
+
+def test_read_observations_zip_and_column_order(tmp_path):
+    # shuffled header order must not matter
+    csv = ("lat,geoaltitude,time,icao24,lon\n"
+           "40.0,1000.0,5.0,ff0011,-99.5\n"
+           "40.1,1001.0,4.0,ff0011,-99.6\n")
+    z = tmp_path / "ff0011.zip"
+    with zipfile.ZipFile(z, "w") as zf:
+        zf.writestr("ff0011.csv", csv)
+    obs = SegmentProcessor().read_observations(str(z))
+    np.testing.assert_array_equal(obs["time"], [4.0, 5.0])
+    np.testing.assert_array_equal(obs["lat"], [40.1, 40.0])
+    np.testing.assert_array_equal(obs["alt"], [1001.0, 1000.0])
+    assert list(obs["icao24"]) == ["ff0011"] * 2
+
+
+def test_read_observations_header_only(tmp_path):
+    p = tmp_path / "empty.csv"
+    p.write_text("time,icao24,lat,lon,geoaltitude\n")
+    assert SegmentProcessor().read_observations(str(p)) == {}
+
+
+# ---------------------------------------------------------------------------
+# Satellite: vectorized airspace classification.
+# ---------------------------------------------------------------------------
+
+def test_airspace_classes_match_scalar_reference():
+    from repro.geometry.queries import RADIUS_DEG
+    aero = synthetic_aerodromes(n=40)
+    proc = SegmentProcessor(aerodromes=aero)
+    rng = np.random.default_rng(11)
+    # half random points, half exactly on aerodromes (inside the radius)
+    lat = np.r_[rng.uniform(25, 49, 20), [a.lat for a in aero[:20]]]
+    lon = np.r_[rng.uniform(-124, -67, 20), [a.lon for a in aero[:20]]]
+    got = proc._airspace_classes(lat, lon)
+
+    def scalar(la, lo):
+        d2 = ((np.array([a.lat for a in aero]) - la) ** 2
+              + ((np.array([a.lon for a in aero]) - lo)
+                 * np.cos(np.deg2rad(la))) ** 2)
+        i = int(np.argmin(d2))
+        return aero[i].airspace_class if d2[i] <= RADIUS_DEG ** 2 else "G"
+
+    assert got == [scalar(la, lo) for la, lo in zip(lat, lon)]
+    assert any(g != "G" for g in got)       # on-aerodrome points classified
+    assert proc._airspace_class(lat[0], lon[0]) == got[0]
+
+
+def test_airspace_classes_no_aerodromes():
+    proc = SegmentProcessor()
+    assert proc._airspace_classes(np.array([40.0]),
+                                  np.array([-100.0])) == ["G"]
