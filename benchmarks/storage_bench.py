@@ -1,0 +1,26 @@
+"""Storage-layer BENCH artifact CLI (thin adapter).
+
+Benchmarks the columnar track store (:mod:`repro.store`) against the
+paper's CSV-zip stopgap — batch-feed throughput into the fused segment
+pipeline across cold/warm x sync/prefetch cells — and writes a
+schema-validated ``BENCH_storage.json`` (``repro.bench.storage/v1``)
+with bytes-per-point, prefetch wait fraction, bitwise feed-equality and
+rebuild-determinism metrics.  Exits non-zero if any scenario misses its
+check (CI gates on the quick tier: store+prefetch >= 2x the zip path).
+
+    PYTHONPATH=src python benchmarks/storage_bench.py --quick
+    PYTHONPATH=src python benchmarks/storage_bench.py --out BENCH_storage.json
+
+The scenario declarations and record layout live in
+:mod:`repro.bench.storage` (``python -m repro.bench.storage`` is the
+same entry point).
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.bench.storage import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,11 @@ regression-gated:
   * :mod:`repro.bench.kernels` — kernel-level matrix: the fused segment
     pipeline vs its unfused baseline (``BENCH_kernels.json``; also
     ``python -m repro.bench.kernels`` / ``campaign --kernels``);
-  * :mod:`repro.bench.compare` — regression-diff two artifacts.
+  * :mod:`repro.bench.storage` — storage-layer matrix: the columnar
+    track store vs the CSV-zip path (``BENCH_storage.json``; also
+    ``python -m repro.bench.storage`` / ``campaign --storage``);
+  * :mod:`repro.bench.compare` — regression-diff two artifacts
+    (dispatches on the ``schema`` field).
 """
 
 from repro.bench.beyond import beyond_scenarios
@@ -33,8 +37,12 @@ from repro.bench.kernels import (
 from repro.bench.scenarios import (
     Check, FAULT_PROFILES, FaultProfile, RunSpec, Scenario, expand)
 from repro.bench.schema import (
-    CAMPAIGN_SCHEMA, KERNELS_SCHEMA, SMOKE_SCHEMA, canonical_bytes,
-    validate_campaign, validate_kernels, validate_record)
+    CAMPAIGN_SCHEMA, KERNELS_SCHEMA, SMOKE_SCHEMA, STORAGE_SCHEMA,
+    canonical_bytes, validate_campaign, validate_kernels,
+    validate_record, validate_storage)
+from repro.bench.storage import (
+    StorageScenario, StorageSpec, run_storage_campaign,
+    run_storage_scenario, storage_scenarios)
 
 __all__ = [
     "Check", "FAULT_PROFILES", "FaultProfile", "RunSpec", "Scenario",
@@ -45,9 +53,12 @@ __all__ = [
     "summary_lines",
     "KernelScenario", "KernelSpec", "kernel_scenarios",
     "run_kernel_campaign", "run_kernel_scenario",
+    "StorageScenario", "StorageSpec", "storage_scenarios",
+    "run_storage_campaign", "run_storage_scenario",
     "CAMPAIGN_SCHEMA", "KERNELS_SCHEMA", "SMOKE_SCHEMA",
+    "STORAGE_SCHEMA",
     "canonical_bytes", "validate_campaign", "validate_kernels",
-    "validate_record",
+    "validate_record", "validate_storage",
 ]
 
 

@@ -68,6 +68,14 @@ def main(argv=None) -> int:
                     metavar="JSON",
                     help="artifact path for --kernels "
                          "(default BENCH_kernels.json)")
+    ap.add_argument("--storage", action="store_true",
+                    help="also run the storage-layer matrix "
+                         "(repro.bench.storage: columnar store vs "
+                         "CSV-zip) and write a third artifact")
+    ap.add_argument("--storage-out", default="BENCH_storage.json",
+                    metavar="JSON",
+                    help="artifact path for --storage "
+                         "(default BENCH_storage.json)")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="max allowed relative job_seconds regression vs "
                          "--baseline (default 0.10)")
@@ -125,6 +133,29 @@ def main(argv=None) -> int:
             for line in kernel_summary_lines(kdoc):
                 print(line)
             if kdoc["summary"]["fail"] or kdoc["summary"]["error"]:
+                rc = 1
+    if args.storage:
+        from repro.bench.storage import (
+            run_storage_campaign, storage_scenarios,
+            storage_summary_lines)
+        if not any(sc.matches(args.filter)
+                   and (not args.quick or sc.tier == "quick")
+                   for sc in storage_scenarios()):
+            print("no storage scenarios match --filter; skipping "
+                  "--storage artifact")
+        else:
+            sdoc = run_storage_campaign(quick=args.quick,
+                                        filters=args.filter,
+                                        seed=args.seed,
+                                        progress=progress)
+            if args.storage_out != "-":
+                with open(args.storage_out, "w") as f:
+                    json.dump(sdoc, f, indent=1, sort_keys=True)
+                    f.write("\n")
+                print(f"wrote {args.storage_out}")
+            for line in storage_summary_lines(sdoc):
+                print(line)
+            if sdoc["summary"]["fail"] or sdoc["summary"]["error"]:
                 rc = 1
     if args.baseline:
         from repro.bench.compare import compare_docs, render_rows

@@ -1,9 +1,21 @@
-"""Diff two BENCH campaign artifacts: ``python -m repro.bench.compare``.
+"""Diff two BENCH artifacts: ``python -m repro.bench.compare``.
 
-Matches scenarios by name and compares the deterministic headline metric
-(sim ``job_seconds``) between an old and a new artifact.  A scenario
-*regresses* when its job time grows by more than ``--threshold``
-(relative).  Exit codes: 0 — no regressions; 1 — regressions found.
+Dispatches on the artifacts' ``schema`` field, so one CLI diffs every
+BENCH kind the repo emits:
+
+  * ``repro.bench.campaign/v1`` / ``repro.bench.smoke/v1`` — headline
+    deterministic metric ``job_seconds`` (simulated job time);
+  * ``repro.bench.kernels/v1`` — ``padded_fraction`` (padding-to-payload
+    ratio of the fused pipeline; multiplies wasted kernel compute);
+  * ``repro.bench.storage/v1`` — ``bytes_per_point`` (columnar-store
+    encoding efficiency).
+
+All default metrics are lower-is-better and deterministic for a fixed
+seed; live wall-clock numbers live under ``measured`` and are
+deliberately NOT regression-gated — they measure the CI machine, not
+the code.  A scenario *regresses* when its metric grows by more than
+``--threshold`` (relative).  Exit codes: 0 — no regressions; 1 —
+regressions found (or the two artifacts' schemas do not match).
 
 Typical PR workflow::
 
@@ -18,23 +30,58 @@ import argparse
 import json
 import sys
 
-__all__ = ["compare_docs", "render_rows", "main"]
+__all__ = ["DEFAULT_METRICS", "default_metric", "compare_docs",
+           "render_rows", "main"]
 
-METRIC = "job_seconds"
+METRIC = "job_seconds"          # historical default (campaign artifacts)
+
+#: schema -> the deterministic, lower-is-better headline metric.
+DEFAULT_METRICS = {
+    "repro.bench.campaign/v1": "job_seconds",
+    "repro.bench.smoke/v1": "job_seconds",
+    "repro.bench.kernels/v1": "padded_fraction",
+    "repro.bench.storage/v1": "bytes_per_point",
+}
+
+
+def default_metric(doc: dict) -> str:
+    """The regression metric for a BENCH document's schema."""
+    schema = doc.get("schema")
+    try:
+        return DEFAULT_METRICS[schema]
+    except KeyError:
+        raise ValueError(
+            f"unknown BENCH schema {schema!r}; known: "
+            f"{sorted(DEFAULT_METRICS)}") from None
+
+
+def _records(doc: dict) -> list[dict]:
+    """Scenario records regardless of kind (smoke docs hold just one)."""
+    if isinstance(doc.get("scenarios"), list):
+        return [r for r in doc["scenarios"] if isinstance(r, dict)]
+    if isinstance(doc.get("scenario"), dict):
+        return [doc["scenario"]]
+    return []
 
 
 def compare_docs(old: dict, new: dict, *, threshold: float = 0.10,
-                 metric: str = METRIC):
+                 metric: str | None = None):
     """-> (rows, regressions): per-scenario metric deltas old -> new.
 
-    Only scenarios present in both artifacts with a numeric deterministic
-    ``metric`` are compared (live-backend wall-clock times live under
-    ``measured`` and are deliberately NOT regression-gated — they measure
-    the CI machine, not the code).
+    ``metric=None`` resolves the metric from the artifacts' ``schema``
+    field (the two must agree).  Only scenarios present in both
+    artifacts with a positive numeric deterministic metric are compared.
     """
+    if old.get("schema") != new.get("schema"):
+        raise ValueError(
+            f"cannot compare artifacts of different schemas: "
+            f"{old.get('schema')!r} vs {new.get('schema')!r}")
+    if metric is None:
+        metric = default_metric(old)
+
     def metric_map(doc):
         out = {}
-        for rec in doc.get("scenarios", []):
+        for rec in _records(doc):
             v = rec.get("metrics", {}).get(metric)
             if isinstance(v, (int, float)) and v > 0:
                 out[rec["name"]] = v
@@ -62,8 +109,8 @@ def compare_docs(old: dict, new: dict, *, threshold: float = 0.10,
 def render_rows(rows) -> list[str]:
     lines = [f"{'scenario':44s} {'old':>12s} {'new':>12s} {'delta':>8s}"]
     for r in rows:
-        old = f"{r['old']:.1f}" if r["old"] is not None else "-"
-        new = f"{r['new']:.1f}" if r["new"] is not None else "-"
+        old = f"{r['old']:.4g}" if r["old"] is not None else "-"
+        new = f"{r['new']:.4g}" if r["new"] is not None else "-"
         delta = (f"{r['delta_pct']:+.1f}%" if r["delta_pct"] is not None
                  else "n/a")
         flag = "  << REGRESSED" if r["regressed"] else ""
@@ -75,20 +122,33 @@ def render_rows(rows) -> list[str]:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.bench.compare",
-        description="Compare two BENCH_campaign.json artifacts and fail "
-                    "on job-time regressions.")
+        description="Compare two BENCH artifacts (campaign, smoke, "
+                    "kernels, or storage — dispatched on their schema "
+                    "field) and fail on metric regressions.")
     ap.add_argument("old")
     ap.add_argument("new")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="max allowed relative regression (default 0.10)")
-    ap.add_argument("--metric", default=METRIC)
+    defaults = ", ".join(
+        "{}: {}".format(k.split("/")[0].rsplit(".", 1)[-1], v)
+        for k, v in sorted(DEFAULT_METRICS.items()))
+    ap.add_argument("--metric", default=None,
+                    help=f"override the schema's default metric "
+                         f"(defaults: {defaults})")
     args = ap.parse_args(argv)
     with open(args.old) as f:
         old = json.load(f)
     with open(args.new) as f:
         new = json.load(f)
-    rows, regressions = compare_docs(old, new, threshold=args.threshold,
-                                     metric=args.metric)
+    try:
+        rows, regressions = compare_docs(old, new,
+                                         threshold=args.threshold,
+                                         metric=args.metric)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    print(f"metric: {args.metric or default_metric(old)} "
+          f"[{old.get('schema')}]")
     for line in render_rows(rows):
         print(line)
     if regressions:

@@ -13,6 +13,12 @@ Three artifact kinds share the scenario-record shape:
     Kernel records use a different ``spec.run`` shape (workload x
     pipeline x backend instead of dataset x triple x backend) and their
     own required metrics.
+  * ``BENCH_storage.json`` (``repro.bench.storage/v1``) — storage-layer
+    records from ``benchmarks/storage_bench.py``: columnar-store vs
+    CSV-zip batch-feed throughput, bytes per point, prefetch wait
+    fraction, bitwise feed equality and rebuild determinism.  Storage
+    records use a source x phase x prefetch x consume ``spec.run``
+    shape.
 
 Scenario record layout::
 
@@ -40,15 +46,16 @@ import json
 from typing import Any
 
 __all__ = ["CAMPAIGN_SCHEMA", "SMOKE_SCHEMA", "KERNELS_SCHEMA",
-           "SCHEMA_VERSION",
+           "STORAGE_SCHEMA", "SCHEMA_VERSION",
            "NONDETERMINISTIC_RECORD_KEYS", "NONDETERMINISTIC_DOC_KEYS",
            "validate_record", "validate_campaign", "validate_smoke",
-           "validate_kernels", "canonical_bytes"]
+           "validate_kernels", "validate_storage", "canonical_bytes"]
 
 SCHEMA_VERSION = 1
 CAMPAIGN_SCHEMA = "repro.bench.campaign/v1"
 SMOKE_SCHEMA = "repro.bench.smoke/v1"
 KERNELS_SCHEMA = "repro.bench.kernels/v1"
+STORAGE_SCHEMA = "repro.bench.storage/v1"
 
 NONDETERMINISTIC_RECORD_KEYS = ("measured", "timing")
 NONDETERMINISTIC_DOC_KEYS = ("created_at", "environment", "timing")
@@ -67,6 +74,10 @@ _KERNEL_SPEC_REQUIRED = ("workload", "pipeline", "backend", "n_archives",
                          "seed")
 _KERNEL_METRICS_REQUIRED = ("n_segments", "padded_fraction",
                             "intermediate_transfers")
+# Storage-bench records describe a feed path, not a run_job spec.
+_STORAGE_SPEC_REQUIRED = ("source", "phase", "prefetch", "consume",
+                          "workload", "n_archives", "seed")
+_STORAGE_METRICS_REQUIRED = ("n_tracks", "n_points", "bytes_on_disk")
 
 
 def _num(x: Any) -> bool:
@@ -174,41 +185,61 @@ def validate_campaign(doc: Any) -> list[str]:
     return errs
 
 
-def validate_kernels(doc: Any) -> list[str]:
-    """Structural validation of a BENCH_kernels.json artifact."""
+def _validate_matrix_doc(doc: Any, *, label: str, schema: str,
+                         spec_required: tuple,
+                         required_metrics: tuple) -> list[str]:
+    """Shared shape check for the scenario-matrix artifacts (kernels,
+    storage): schema/version stamp, config, uniquely-named records with
+    the matrix's own spec/metric requirements, and a summary."""
     errs: list[str] = []
     if not isinstance(doc, dict):
-        return ["kernels: not an object"]
-    if doc.get("schema") != KERNELS_SCHEMA:
-        errs.append(f"kernels.schema: {doc.get('schema')!r} != "
-                    f"{KERNELS_SCHEMA!r}")
+        return [f"{label}: not an object"]
+    if doc.get("schema") != schema:
+        errs.append(f"{label}.schema: {doc.get('schema')!r} != "
+                    f"{schema!r}")
     if doc.get("schema_version") != SCHEMA_VERSION:
-        errs.append("kernels.schema_version: missing/mismatched")
+        errs.append(f"{label}.schema_version: missing/mismatched")
     if not isinstance(doc.get("config"), dict):
-        errs.append("kernels.config: not an object")
+        errs.append(f"{label}.config: not an object")
     scenarios = doc.get("scenarios")
     if not isinstance(scenarios, list) or not scenarios:
-        errs.append("kernels.scenarios: missing/empty list")
+        errs.append(f"{label}.scenarios: missing/empty list")
         scenarios = []
     names = set()
     for i, rec in enumerate(scenarios):
         where = (f"scenarios[{i}]({rec.get('name', '?')})"
                  if isinstance(rec, dict) else f"scenarios[{i}]")
         errs.extend(validate_record(
-            rec, where, spec_required=_KERNEL_SPEC_REQUIRED,
-            required_metrics=_KERNEL_METRICS_REQUIRED))
+            rec, where, spec_required=spec_required,
+            required_metrics=required_metrics))
         if isinstance(rec, dict):
             if rec.get("name") in names:
                 errs.append(f"{where}: duplicate scenario name")
             names.add(rec.get("name"))
     summary = doc.get("summary")
     if not isinstance(summary, dict):
-        errs.append("kernels.summary: not an object")
+        errs.append(f"{label}.summary: not an object")
     else:
         for key in ("total", "pass", "fail", "ran", "error"):
             if not isinstance(summary.get(key), int):
-                errs.append(f"kernels.summary.{key}: missing/non-int")
+                errs.append(f"{label}.summary.{key}: missing/non-int")
     return errs
+
+
+def validate_kernels(doc: Any) -> list[str]:
+    """Structural validation of a BENCH_kernels.json artifact."""
+    return _validate_matrix_doc(
+        doc, label="kernels", schema=KERNELS_SCHEMA,
+        spec_required=_KERNEL_SPEC_REQUIRED,
+        required_metrics=_KERNEL_METRICS_REQUIRED)
+
+
+def validate_storage(doc: Any) -> list[str]:
+    """Structural validation of a BENCH_storage.json artifact."""
+    return _validate_matrix_doc(
+        doc, label="storage", schema=STORAGE_SCHEMA,
+        spec_required=_STORAGE_SPEC_REQUIRED,
+        required_metrics=_STORAGE_METRICS_REQUIRED)
 
 
 def validate_smoke(doc: Any) -> list[str]:

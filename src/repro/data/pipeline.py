@@ -13,11 +13,18 @@ manager inside the DONE message, which is what makes the process backend
 (and a real fleet's control plane) work unchanged.  The loader exposes a
 per-step iterator of fixed-shape (tokens, labels) batches, which the
 trainer device_puts against the mesh.
+
+Shard files and the on-disk manifest come from :mod:`repro.store` — the
+same checksummed columnar codec and :class:`~repro.store.StoreManifest`
+index the track store uses — so there is exactly one shard-manifest
+implementation in the repo; :class:`ShardManifest` here is just the
+loader-facing view of a store :class:`~repro.store.ShardRecord`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
 from collections import deque
 from typing import Iterator
@@ -26,34 +33,68 @@ import numpy as np
 
 from repro.core.messages import Task
 from repro.runtime import run_job
+from repro.store import codec
+from repro.store.format import ShardRecord, StoreManifest
+
+TOKEN_SHARD_SUFFIX = ".shard"
 
 
 @dataclasses.dataclass(frozen=True)
 class ShardManifest:
+    """Loader view of one token shard (see module docstring)."""
+
     shard_id: str
     path: str
     n_tokens: int
     size_bytes: int
+
+    @classmethod
+    def from_record(cls, root: str, rec: ShardRecord) -> "ShardManifest":
+        return cls(shard_id=rec.shard_id,
+                   path=os.path.join(root, rec.filename),
+                   n_tokens=rec.n_points, size_bytes=rec.size_bytes)
+
+
+def token_shard_manifests(root: str) -> list[ShardManifest]:
+    """Loader views for every shard in a token store directory."""
+    manifest = StoreManifest.load(root)
+    return [ShardManifest.from_record(root, rec)
+            for rec in manifest.shards]
 
 
 def synthetic_token_shards(root: str, *, n_shards: int = 16,
                            vocab_size: int = 512,
                            tokens_per_shard_mean: int = 65536,
                            seed: int = 0) -> list[ShardManifest]:
-    """Heavy-tailed shard sizes (like the aerodrome dataset's Fig 3)."""
+    """Heavy-tailed shard sizes (like the aerodrome dataset's Fig 3).
+
+    Written as a :mod:`repro.store` store: checksummed codec shards plus
+    a ``store_manifest.json`` index (re-openable later with
+    :func:`token_shard_manifests`)."""
     rng = np.random.default_rng(seed)
-    os.makedirs(root, exist_ok=True)
-    out = []
+    records = []
     w = rng.pareto(1.5, size=n_shards) + 0.2
     w = w / w.mean()
     for i in range(n_shards):
+        shard_id = f"shard_{i:05d}"
         n = max(int(tokens_per_shard_mean * w[i]), 2048)
         toks = rng.integers(0, vocab_size, size=n, dtype=np.int32)
-        path = os.path.join(root, f"shard_{i:05d}.npy")
-        np.save(path, toks)
-        out.append(ShardManifest(f"shard_{i:05d}", path, n,
-                                 int(toks.nbytes)))
-    return out
+        data = codec.encode_shard({"tokens": toks},
+                                  meta={"shard_id": shard_id,
+                                        "vocab_size": vocab_size})
+        filename = f"{shard_id}{TOKEN_SHARD_SUFFIX}"
+        path = os.path.join(root, filename)
+        os.makedirs(root, exist_ok=True)
+        with open(path, "wb") as f:
+            f.write(data)
+        records.append(ShardRecord(
+            shard_id=shard_id, filename=filename, n_tracks=1,
+            n_points=n, size_bytes=len(data),
+            sha256=hashlib.sha256(data).hexdigest()))
+    StoreManifest(compression="zlib", shards=records,
+                  meta={"kind": "token-shards",
+                        "vocab_size": vocab_size}).save(root)
+    return [ShardManifest.from_record(root, rec) for rec in records]
 
 
 class SelfScheduledLoader:
@@ -82,8 +123,16 @@ class SelfScheduledLoader:
 
     def _ingest_shard(self, task: Task) -> np.ndarray:
         """Worker fn: shard file -> (n_seq, seq_len+1) sequence array,
-        returned to the manager in the DONE message."""
-        toks = np.load(task.payload)
+        returned to the manager in the DONE message.  Store-codec shards
+        decode through the checksummed reader, so a corrupted shard
+        fails the task loudly instead of training on garbage; bare
+        ``.npy`` paths keep working for hand-rolled fixtures."""
+        if task.payload.endswith(".npy"):
+            toks = np.load(task.payload)
+        else:
+            cols, _meta = codec.read_shard(task.payload,
+                                           columns=["tokens"])
+            toks = cols["tokens"]
         L = self.seq_len + 1
         n_seq = len(toks) // L
         if n_seq == 0:

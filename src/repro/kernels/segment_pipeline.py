@@ -27,6 +27,14 @@ Ragged batching: callers bin segments into power-of-two width buckets
 (:data:`repro.tracks.segments.BUCKET_SIZES`) and invoke this pipeline
 once per bucket shape; jit caches one compilation per shape.  Widths
 must be multiples of 128 (TPU lane width) — the wrapper pads if not.
+The bucket shapes need not come from payload data at all: the columnar
+track store (:mod:`repro.store`) records every segment's
+(``seg_knots``, ``seg_grid``) pair in its manifest at ingest, via the
+same :func:`repro.tracks.segments.segment_shape` helper the live
+batcher uses, so ``StoreManifest.bucket_histogram`` /
+``TrackStore.plan`` hand this pipeline its bucket plan from the index
+while the shard payloads are still compressed on disk (and the store's
+prefetcher decodes shard N+1 while this pipeline runs shard N).
 
 On TPU the input buffers are donated (they are packing scratch, never
 reused), letting XLA reuse them for intermediates; donation is skipped

@@ -78,7 +78,12 @@ def run_job(tasks: Sequence[Task],
     ignored by ``sim``).  If ``fn`` exposes a ``process_batch`` method —
     or ``batch_fn`` is passed — a multi-task ASSIGN executes as ONE call
     (e.g. a single vectorized pallas invocation) instead of per-task
-    Python dispatch.  ``worker_fail_after`` / ``worker_death`` are
+    Python dispatch.  Task payloads should be plain strings so they
+    survive every backend's message path (pickled process messages,
+    JSON checkpoints) — e.g. the track workflow's store-backed tasks
+    name shard ranges as ``store://<root>#shard=<id>&rows=<a>:<b>``
+    URIs (:mod:`repro.store.reader`) and its store-build tasks carry
+    ``ShardPlan.dumps()`` JSON.  ``worker_fail_after`` / ``worker_death`` are
     fault-injection hooks (live / sim respectively).  ``on_checkpoint``
     fires on wall-clock intervals and therefore applies to the live
     backends only; the sim backend ignores it (simulated jobs rebuild

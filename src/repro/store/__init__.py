@@ -1,0 +1,38 @@
+"""``repro.store`` — sharded, chunked columnar track storage.
+
+The fourth subsystem layer: the PR-0 zip workaround made billions of
+small files tractable, but still re-parsed CSV text every run; this
+package stores *decoded* track columns (time/lat/lon/alt + per-track
+offsets) in checksummed, compressed shards with a manifest index that
+records per-track segment shapes — so the PR-3 fused pipeline's bucket
+planning happens from the index and batches stream in at device speed
+through a double-buffered async prefetcher.
+
+    codec.py   — canonical (byte-identical) shard encode/decode + CRCs
+    format.py  — shard/track index records, the store manifest
+    writer.py  — CSV/zip-tree -> shards ingest (standalone or run_job)
+    reader.py  — TrackStore: planner, store:// URIs, async prefetch
+"""
+
+from repro.store.codec import (                       # noqa: F401
+    ShardChecksumError, ShardFormatError, decode_shard, encode_shard,
+    read_shard)
+from repro.store.format import (                      # noqa: F401
+    MANIFEST_NAME, STORE_FORMAT, ShardRecord, StoreManifest, TrackRecord)
+from repro.store.reader import (                      # noqa: F401
+    ReadPlan, ShardBatch, TrackStore, is_store_uri, make_store_uri,
+    parse_store_uri)
+from repro.store.writer import (                      # noqa: F401
+    ShardBuilder, ShardPlan, build_shard, build_store, discover_sources,
+    finalize_store, plan_shards)
+
+__all__ = [
+    "ShardChecksumError", "ShardFormatError", "decode_shard",
+    "encode_shard", "read_shard",
+    "MANIFEST_NAME", "STORE_FORMAT", "ShardRecord", "StoreManifest",
+    "TrackRecord",
+    "ReadPlan", "ShardBatch", "TrackStore", "is_store_uri",
+    "make_store_uri", "parse_store_uri",
+    "ShardBuilder", "ShardPlan", "build_shard", "build_store",
+    "discover_sources", "finalize_store", "plan_shards",
+]

@@ -1,0 +1,8 @@
+"""``python -m repro.store`` — the store ingest CLI (writer.main)."""
+
+import sys
+
+from repro.store.writer import main
+
+if __name__ == "__main__":
+    sys.exit(main())

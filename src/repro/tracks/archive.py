@@ -17,6 +17,9 @@ import os
 import zipfile
 
 from repro.core.messages import Task
+# One crash-safe-commit implementation repo-wide; the zip is written
+# incrementally so only the rename-durability half is shared here.
+from repro.store.format import fsync_dir as _fsync_dir
 
 LUSTRE_BLOCK_BYTES = 1_000_000   # every file occupies >= 1 MB on Lustre
 
@@ -33,6 +36,22 @@ class ArchiveResult:
 
 class Archiver:
     """Zips one aircraft directory into the mirrored archive tree."""
+
+    @staticmethod
+    def _clean_orphans(zip_path: str) -> None:
+        """Remove stale ``<zip>.tmp*`` files left by killed workers."""
+        parent = os.path.dirname(zip_path)
+        prefix = os.path.basename(zip_path) + ".tmp"
+        try:
+            names = os.listdir(parent)
+        except OSError:
+            return
+        for name in names:
+            if name.startswith(prefix):
+                try:
+                    os.remove(os.path.join(parent, name))
+                except OSError:
+                    pass        # another cleaner won the race
 
     def __init__(self, organized_root: str, archive_root: str,
                  compression: int = zipfile.ZIP_STORED):
@@ -51,9 +70,17 @@ class Archiver:
         parent = os.path.join(self.archive_root, *parts[:-1])
         os.makedirs(parent, exist_ok=True)
         zip_path = os.path.join(parent, parts[-1] + ".zip")
+        # Crash safety (the paper's worker-death experiments reach this
+        # path): tmp names carry the writer's pid so a re-dispatched
+        # task never collides with a dead worker's leftovers, and any
+        # orphaned .tmp for this archive is removed up front.  If the
+        # presumed-dead worker is actually alive, deleting its tmp makes
+        # its final rename fail — the correct outcome, since its DONE
+        # would be a duplicate of ours.
+        self._clean_orphans(zip_path)
         files = 0
         bytes_in = 0
-        tmp = zip_path + ".tmp"
+        tmp = f"{zip_path}.tmp.{os.getpid()}"
         with zipfile.ZipFile(tmp, "w", self.compression) as zf:
             for name in sorted(os.listdir(src)):
                 p = os.path.join(src, name)
@@ -61,7 +88,16 @@ class Archiver:
                     zf.write(p, arcname=name)
                     files += 1
                     bytes_in += os.path.getsize(p)
+        # fsync BEFORE the rename: os.replace is atomic in the namespace
+        # but says nothing about data blocks; a crash right after an
+        # unsynced rename can leave a committed name with torn contents.
+        fd = os.open(tmp, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
         os.replace(tmp, zip_path)   # atomic commit
+        _fsync_dir(parent)          # persist the rename itself
         bytes_out = os.path.getsize(zip_path)
         saved = max(files - 1, 0) * LUSTRE_BLOCK_BYTES
         return ArchiveResult(

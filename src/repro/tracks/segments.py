@@ -18,6 +18,12 @@ least half a bucket long (the old fixed tile wasted ~100x on a
 ``pipeline='unfused'`` keeps the historical three-launch host-hop path
 as the benchmark baseline (``benchmarks/kernel_bench.py`` measures one
 against the other).
+
+Input is either the PR-0 zip/CSV path (text re-parsed per run) or the
+columnar track store (:mod:`repro.store`): ``store://`` task payloads
+select tracks, shards, or row ranges, and
+:meth:`SegmentProcessor.process_store` streams whole shards through the
+fused pipeline behind the store's async prefetcher.
 """
 
 from __future__ import annotations
@@ -48,6 +54,55 @@ def bucket_width(n: int) -> int:
         if n <= k:
             return k
     return BUCKET_SIZES[-1]
+
+
+def segment_shape(times: np.ndarray, s: slice) -> tuple[int, int]:
+    """One segment's fused-pipeline shape: (raw knots n, grid points m).
+
+    The single source of truth for shard ingest (``repro.store.writer``
+    records these in the manifest index) and for live batching
+    (:meth:`SegmentProcessor._records`), so index-driven bucket plans
+    agree exactly with what the pipeline would compute from payloads.
+    """
+    n = min(s.stop - s.start, MAX_SEG_POINTS)
+    t = times[s.start:s.start + n]
+    m = min(int((t[-1] - t[0]) / RESAMPLE_DT_S) + 1, MAX_SEG_POINTS)
+    return n, m
+
+
+def read_observations(path: str) -> dict[str, np.ndarray]:
+    """Read a per-aircraft CSV (possibly inside a .zip archive).
+
+    The parse is vectorized: one ``np.loadtxt`` over the decoded payload
+    per column group instead of a Python ``split(',')`` loop per line
+    (the loop dominated small-archive task cost).  This text decode is
+    what the columnar store (:mod:`repro.store`) pays exactly once, at
+    ingest."""
+    if path.endswith(".zip"):
+        with zipfile.ZipFile(path) as zf:
+            text = zf.read(zf.namelist()[0]).decode()
+    else:
+        with open(path) as f:
+            text = f.read()
+    nl = text.find("\n")
+    if nl < 0 or not text[nl:].strip():
+        return {}
+    cols = {c: i for i, c in enumerate(text[:nl].strip().split(","))}
+    lines = [ln for ln in text[nl + 1:].split("\n") if ln.strip()]
+    num = np.loadtxt(lines, delimiter=",", ndmin=2,
+                     usecols=[cols[c] for c in
+                              ("time", "lat", "lon", "geoaltitude")])
+    icao = np.loadtxt(lines, delimiter=",", dtype=str,
+                      usecols=cols["icao24"], ndmin=1)
+    t = num[:, 0]
+    order = np.argsort(t, kind="stable")
+    return {
+        "time": t[order],
+        "lat": num[order, 1],
+        "lon": num[order, 2],
+        "alt": num[order, 3],
+        "icao24": icao[order],
+    }
 
 
 def _round_rows(b: int) -> int:
@@ -102,6 +157,17 @@ def split_segments(times: np.ndarray, gap_s: float = SEGMENT_GAP_S,
     return out
 
 
+def _is_store_uri(path) -> bool:
+    """Lazy delegate to :mod:`repro.store.reader` (one URI definition)."""
+    from repro.store.reader import is_store_uri
+    return is_store_uri(path)
+
+
+def _parse_store_uri(uri: str):
+    from repro.store.reader import parse_store_uri
+    return parse_store_uri(uri)
+
+
 @dataclasses.dataclass
 class _SegRecord:
     """One segment, flattened out of its archive for bucketed batching."""
@@ -129,6 +195,7 @@ class SegmentProcessor:
         self.aerodromes = list(aerodromes or [])
         self.backend = backend
         self.pipeline = pipeline
+        self._stores: dict = {}          # store root -> TrackStore
         self._dem_f32 = self.dem.elevation_m.astype(np.float32)
         self._dem_grid = (self.dem.lat_min, self.dem.lat_max,
                           self.dem.lon_min, self.dem.lon_max,
@@ -145,40 +212,57 @@ class SegmentProcessor:
         return self.process_file(task.payload or task.task_id)
 
     def read_observations(self, path: str) -> dict[str, np.ndarray]:
-        """Read a per-aircraft CSV (possibly inside a .zip archive).
+        """One source -> observation dict.  Accepts a CSV path, a PR-0
+        zip archive, or a single-track ``store://`` URI (columnar-store
+        reads skip the text parse entirely)."""
+        if _is_store_uri(path):
+            root, sel = _parse_store_uri(path)
+            if "track" not in sel:
+                raise ValueError(
+                    f"read_observations needs a single track; {path!r} "
+                    f"selects a shard (use process_file/process_batch)")
+            return self._store(root).read_track(sel["track"])
+        return read_observations(path)
 
-        The parse is vectorized: one ``np.loadtxt`` over the decoded
-        payload per column group instead of a Python ``split(',')``
-        loop per line (the loop dominated small-archive task cost)."""
-        if path.endswith(".zip"):
-            with zipfile.ZipFile(path) as zf:
-                text = zf.read(zf.namelist()[0]).decode()
-        else:
-            with open(path) as f:
-                text = f.read()
-        nl = text.find("\n")
-        if nl < 0 or not text[nl:].strip():
-            return {}
-        cols = {c: i for i, c in enumerate(text[:nl].strip().split(","))}
-        lines = [ln for ln in text[nl + 1:].split("\n") if ln.strip()]
-        num = np.loadtxt(lines, delimiter=",", ndmin=2,
-                         usecols=[cols[c] for c in
-                                  ("time", "lat", "lon", "geoaltitude")])
-        icao = np.loadtxt(lines, delimiter=",", dtype=str,
-                          usecols=cols["icao24"], ndmin=1)
-        t = num[:, 0]
-        order = np.argsort(t, kind="stable")
-        return {
-            "time": t[order],
-            "lat": num[order, 1],
-            "lon": num[order, 2],
-            "alt": num[order, 3],
-            "icao24": icao[order],
-        }
+    # -- store-backed input ----------------------------------------------
+
+    def _store(self, root: str):
+        """One cached TrackStore per store root (index parsed once)."""
+        store = self._stores.get(root)
+        if store is None:
+            from repro.store.reader import TrackStore
+            store = self._stores[root] = TrackStore(root)
+        return store
+
+    def _store_items(self, uri: str) -> list[tuple[str, dict, list[slice]]]:
+        """store:// URI -> [(track_id, obs, segs)] for its selection."""
+        root, sel = _parse_store_uri(uri)
+        return self._store(root).read_selection(sel)
+
+    def process_store(self, root: str, *, prefetch: int = 1,
+                      plans=None) -> dict[str, "ProcessedSegments"]:
+        """Stream the whole store (or ``plans``) through the fused
+        pipeline: the async prefetcher decodes shard N+1 while the
+        device processes shard N.  Returns {track_id: ProcessedSegments}.
+        """
+        store = self._store(root)
+        out: dict[str, ProcessedSegments] = {}
+        for batch in store.iter_batches(plans, prefetch=prefetch):
+            out.update(self._process_triples(
+                [(tid, obs, segs) for tid, (obs, segs)
+                 in zip(batch.track_ids, batch.items)]))
+        return out
 
     # -- processing -------------------------------------------------------
 
-    def process_file(self, path: str) -> ProcessedSegments:
+    def process_file(self, path: str):
+        """One source -> ProcessedSegments; a multi-track ``store://``
+        selection (shard / row range / whole store) -> a dict keyed by
+        track_id."""
+        if _is_store_uri(path):
+            _root, sel = _parse_store_uri(path)
+            if "track" not in sel:
+                return self._process_selection(path)
         obs = self.read_observations(path)
         if not obs:
             return _empty()
@@ -187,30 +271,71 @@ class SegmentProcessor:
             return _empty()
         return self.process_arrays(obs, segs)
 
+    def _process_selection(self, uri: str) -> dict:
+        return self._process_triples(self._store_items(uri))
+
+    def _process_triples(self, triples: list) -> dict:
+        """[(track_id, obs, segs)] -> {track_id: ProcessedSegments},
+        ONE fused pass over the non-empty items — the single merge
+        helper behind store selections AND store streaming."""
+        out = {tid: _empty() for tid, _obs, segs in triples if not segs}
+        work = [(tid, (obs, segs)) for tid, obs, segs in triples if segs]
+        if work:
+            for (tid, _), ps in zip(
+                    work, self._process_many([it for _, it in work])):
+                out[tid] = ps
+        return out
+
     def process_arrays(self, obs: dict[str, np.ndarray],
                        segs: list[slice]) -> ProcessedSegments:
         return self._process_many([(obs, segs)])[0]
 
     def process_batch(self, tasks: Sequence[Task]) -> dict:
         """Runtime batch hook: one multi-task ASSIGN message -> bucketed
-        fused pipeline calls over every segment of every archive in the
+        fused pipeline calls over every segment of every source in the
         batch, instead of per-task Python dispatch.  Returns
-        ``{task_id: ProcessedSegments}`` (what the worker reports DONE)."""
-        out: dict[str, ProcessedSegments] = {}
-        work: list[tuple[str, dict, list[slice]]] = []
+        ``{task_id: result}`` (what the worker reports DONE): a
+        ProcessedSegments per zip/CSV/single-track task, a
+        ``{track_id: ProcessedSegments}`` dict per multi-track
+        ``store://`` task — with ONE fused pipeline pass over all of it.
+        """
+        out: dict[str, object] = {}
+        items: list[tuple[dict, list[slice]]] = []
+        # (task_id, track_key or None, item index); key None = the
+        # task's result IS the ProcessedSegments, else it lands in the
+        # task's per-track dict under that key.
+        slots: list[tuple[str, Optional[str], int]] = []
         for task in tasks:
             path = task.payload or task.task_id
+            if _is_store_uri(path):
+                _root, sel = _parse_store_uri(path)
+                single = "track" in sel
+                if not single:
+                    out[task.task_id] = {}
+                for tid, obs, segs in self._store_items(path):
+                    key = None if single else tid
+                    if segs:
+                        slots.append((task.task_id, key, len(items)))
+                        items.append((obs, segs))
+                    elif single:
+                        out[task.task_id] = _empty()
+                    else:
+                        out[task.task_id][tid] = _empty()
+                continue
             obs = self.read_observations(path)
             segs = split_segments(obs["time"]) if obs else []
             if segs:
-                work.append((task.task_id, obs, segs))
+                slots.append((task.task_id, None, len(items)))
+                items.append((obs, segs))
             else:
                 out[task.task_id] = _empty()
-        if work:
-            processed = self._process_many(
-                [(obs, segs) for _, obs, segs in work])
-            for (tid, _, _), ps in zip(work, processed):
-                out[tid] = ps
+        if items:
+            processed = self._process_many(items)
+            for task_id, key, idx in slots:
+                if key is None:
+                    out[task_id] = processed[idx]
+                else:
+                    out[task_id][key] = processed[idx]
         return out
 
     def _process_many(self, items: list[tuple[dict, list[slice]]]
@@ -249,11 +374,9 @@ class SegmentProcessor:
         records: list[_SegRecord] = []
         for ai, (obs, segs) in enumerate(items):
             for s in segs:
-                n = min(s.stop - s.start, MAX_SEG_POINTS)
+                n, m = segment_shape(obs["time"], s)
                 sl = slice(s.start, s.start + n)
                 t = obs["time"][sl]
-                dur = t[-1] - t[0]
-                m = min(int(dur / RESAMPLE_DT_S) + 1, MAX_SEG_POINTS)
                 lat, lon = obs["lat"][sl], obs["lon"][sl]
                 records.append(_SegRecord(
                     arch=ai, name=str(obs["icao24"][s.start]), t=t,
@@ -512,5 +635,44 @@ def segment_tasks_from_archive_tree(archive_root: str) -> list[Task]:
                     task_id=os.path.relpath(p, archive_root),
                     size_bytes=os.path.getsize(p),
                     payload=p))
+    tasks.sort(key=lambda t: t.task_id)
+    return tasks
+
+
+#: Index bytes per stored observation point (4 f64 columns + codes);
+#: sizes store-backed tasks for largest-first organization.
+_STORE_BYTES_PER_POINT = 36
+
+
+def segment_tasks_from_store(store_root: str,
+                             granularity: str = "shard") -> list[Task]:
+    """Store-backed processing tasks, sized from the index alone.
+
+    ``granularity='shard'``: one Task per shard — a worker's ASSIGN
+    batch maps 1:1 onto shard reads, so the prefetching reader streams
+    whole shards to the fused pipeline.  ``granularity='track'``: one
+    Task per track — drop-in parity with
+    :func:`segment_tasks_from_archive_tree` task ids (the golden
+    store-vs-zip equivalence tests rely on that).
+    """
+    from repro.store.format import StoreManifest
+    from repro.store.reader import make_store_uri
+
+    if granularity not in ("shard", "track"):
+        raise ValueError(f"unknown granularity {granularity!r}")
+    manifest = StoreManifest.load(store_root)
+    tasks = []
+    if granularity == "shard":
+        for s in manifest.shards:
+            tasks.append(Task(
+                task_id=f"store/{s.shard_id}",
+                size_bytes=s.n_points * _STORE_BYTES_PER_POINT,
+                payload=make_store_uri(store_root, shard=s.shard_id)))
+    else:
+        for t in manifest.tracks:
+            tasks.append(Task(
+                task_id=t.track_id,
+                size_bytes=t.n_obs * _STORE_BYTES_PER_POINT,
+                payload=make_store_uri(store_root, track=t.track_id)))
     tasks.sort(key=lambda t: t.task_id)
     return tasks

@@ -1,15 +1,24 @@
 """End-to-end track-processing workflow driver (paper §III.A).
 
-Glues the three phases — organize -> archive -> process — behind the
-unified self-scheduling runtime (:func:`repro.runtime.run_job`), with a
-JSON phase checkpoint so a killed job resumes where it left off.  The
-execution backend is pluggable: ``threads`` (default) or ``processes``
-(real NPPN-style process isolation); periodic *mid-phase* manager
-checkpoints mean a kill-and-restart resumes inside a phase, not just at
-phase boundaries.  This is the real (scaled-down) counterpart of the
-simulated full-scale benchmarks.
+Glues the phases — organize -> archive [-> store-build] -> process —
+behind the unified self-scheduling runtime
+(:func:`repro.runtime.run_job`), with a JSON phase checkpoint so a
+killed job resumes where it left off.  The execution backend is
+pluggable: ``threads`` (default) or ``processes`` (real NPPN-style
+process isolation); periodic *mid-phase* manager checkpoints mean a
+kill-and-restart resumes inside a phase, not just at phase boundaries.
+This is the real (scaled-down) counterpart of the simulated full-scale
+benchmarks.
+
+With ``--input store`` the workflow inserts a ``store-build`` phase
+(one self-scheduled task per shard, :class:`repro.store.ShardBuilder`
+as the worker fn) that ingests the zip archives into the columnar track
+store, and the process phase then reads ``store://`` shard tasks
+through the prefetching :class:`repro.store.TrackStore` instead of
+re-parsing CSV text out of zip members.
 
 CLI:  PYTHONPATH=src python -m repro.tracks.workflow --backend processes
+      PYTHONPATH=src python -m repro.tracks.workflow --input store
 """
 
 from __future__ import annotations
@@ -24,12 +33,14 @@ from repro.core.triples import TriplesConfig
 from repro.geometry.aerodromes import synthetic_aerodromes
 from repro.geometry.dem import SyntheticGlobeDEM
 from repro.runtime import ManagerCheckpoint, RunResult, run_job
+from repro.store.format import MANIFEST_NAME
 from repro.tracks.archive import Archiver, archive_tasks_from_tree
 from repro.tracks.datasets import ScaledDatasetSpec, write_scaled_dataset
 from repro.tracks.organize import Organizer, organize_tasks_from_dir
 from repro.tracks.registry import synthetic_registry
 from repro.tracks.segments import (
-    SegmentProcessor, segment_tasks_from_archive_tree)
+    SegmentProcessor, segment_tasks_from_archive_tree,
+    segment_tasks_from_store)
 
 
 @dataclasses.dataclass
@@ -59,16 +70,25 @@ class TrackWorkflow:
                  tasks_per_message: int = 1,
                  checkpoint_interval_s: float = 0.5,
                  triple: Optional[TriplesConfig] = None,
+                 input: str = "zip",
+                 store_target_points: Optional[int] = None,
                  seed: int = 0):
         if exec_backend not in ("threads", "processes"):
             raise ValueError(
                 "workflow phases do real work; exec_backend must be "
                 "'threads' or 'processes' (use benchmarks/run.py "
                 "--backend sim for simulated timing)")
+        if input not in ("zip", "store"):
+            raise ValueError(f"unknown input {input!r}; 'zip' processes "
+                             f"archives directly, 'store' inserts a "
+                             f"store-build phase")
         self.root = root
         self.raw_dir = os.path.join(root, "raw")
         self.organized_dir = os.path.join(root, "organized")
         self.archive_dir = os.path.join(root, "archived")
+        self.store_dir = os.path.join(root, "store")
+        self.input = input
+        self.store_target_points = store_target_points
         self.ckpt_path = os.path.join(root, "workflow_ckpt.json")
         self.n_workers = (max(triple.worker_processes, 1)
                           if triple is not None else n_workers)
@@ -142,9 +162,45 @@ class TrackWorkflow:
             phase, result, len(tasks), self.n_workers))
         return result
 
+    def _run_store_build(self) -> None:
+        """Self-scheduled shard ingest: archives -> columnar store."""
+        from repro.store import writer as store_writer
+        from repro.core.messages import Task
+
+        sources = store_writer.discover_sources(self.archive_dir)
+        sizes = {track_id: size for track_id, _p, size in sources}
+        target = (self.store_target_points
+                  or store_writer.DEFAULT_TARGET_POINTS)
+        plans = store_writer.plan_shards(sources, target_points=target)
+        tasks = [Task(task_id=f"store/{p.shard_id}",
+                      size_bytes=sum(sizes[t] for t, _ in p.sources),
+                      payload=p.dumps())
+                 for p in plans]
+        builder = store_writer.ShardBuilder(self.store_dir)
+        result = self._run_phase("store-build", tasks, builder)
+        results = []
+        for task in tasks:
+            doc = result.results.get(task.task_id)
+            if doc is None:
+                # Completed before a mid-phase checkpoint kill: the
+                # restored manager never re-dispatches the task, so its
+                # records died with the worker.  Shard builds are
+                # deterministic and atomically committed — just redo it.
+                doc = builder(task)
+            results.append(doc)
+        store_writer.finalize_store(
+            self.store_dir, results, target_points=target,
+            meta={"source_root": os.path.abspath(self.archive_dir)})
+
     def run(self) -> list[PhaseReport]:
         state = self._load_ckpt()
         done = set(state["phases_done"])
+        if self.input == "store" and "store-build" in done and \
+                not os.path.exists(os.path.join(self.store_dir,
+                                                MANIFEST_NAME)):
+            # Killed between phase completion and the manifest commit:
+            # shard builds are idempotent, so just redo the phase.
+            done.discard("store-build")
         if "organize" not in done:
             org = Organizer(self.organized_dir, self.registry)
             tasks = organize_tasks_from_dir(self.raw_dir)
@@ -155,15 +211,22 @@ class TrackWorkflow:
             # §IV.B: cyclic beats block for this phase; self-scheduling
             # subsumes both — keep largest_first.
             self._run_phase("archive", tasks, arch)
+        if self.input == "store" and "store-build" not in done:
+            self._run_store_build()
         if "process" not in done:
             proc = SegmentProcessor(
                 dem=SyntheticGlobeDEM(),
                 aerodromes=synthetic_aerodromes(n=64),
                 backend=self.backend, pipeline=self.pipeline)
-            tasks = segment_tasks_from_archive_tree(self.archive_dir)
+            if self.input == "store":
+                tasks = segment_tasks_from_store(self.store_dir,
+                                                 granularity="shard")
+            else:
+                tasks = segment_tasks_from_archive_tree(self.archive_dir)
             # §IV.C: random organization for processing.  A multi-task
             # ASSIGN executes as bucketed fused pipeline calls via
-            # SegmentProcessor.process_batch.
+            # SegmentProcessor.process_batch (store:// shard payloads
+            # stream through the TrackStore reader).
             self._run_phase("process", tasks, proc, organization="random")
         return self.reports
 
@@ -189,6 +252,13 @@ def main() -> None:
                     help="segment hot path: fused device-resident "
                          "bucketed pipeline, or the legacy three-launch "
                          "baseline")
+    ap.add_argument("--input", default="zip", choices=["zip", "store"],
+                    help="process-phase input: re-parse CSV text from "
+                         "zip archives, or insert a store-build phase "
+                         "and stream shards from the columnar store")
+    ap.add_argument("--store-target-points", type=int, default=None,
+                    help="observation points per store shard (store "
+                         "input only)")
     args = ap.parse_args()
 
     triple = None
@@ -198,7 +268,9 @@ def main() -> None:
                        exec_backend=args.backend,
                        pipeline=args.pipeline,
                        tasks_per_message=args.tasks_per_message,
-                       poll_interval=0.005, triple=triple)
+                       poll_interval=0.005, triple=triple,
+                       input=args.input,
+                       store_target_points=args.store_target_points)
     if not os.path.isdir(wf.raw_dir):
         n = wf.generate_raw(n_files=args.files, scale=args.scale)
         print(f"generated {n} raw files under {wf.raw_dir}")

@@ -1,0 +1,435 @@
+"""Columnar track store: codec round-trips, writer determinism, reader
+prefetch, store-vs-zip golden equivalence, workflow integration."""
+
+import json
+import os
+import zipfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.messages import Task
+from repro.store import (
+    ShardChecksumError, ShardFormatError, StoreManifest, TrackStore,
+    build_store, codec, make_store_uri, parse_store_uri)
+from repro.store.writer import discover_sources, plan_shards
+from repro.tracks.archive import Archiver, archive_tasks_from_tree
+from repro.tracks.datasets import ScaledDatasetSpec, write_scaled_dataset
+from repro.tracks.organize import Organizer, organize_tasks_from_dir
+from repro.tracks.registry import synthetic_registry
+from repro.tracks.segments import (
+    SegmentProcessor, read_observations, segment_tasks_from_archive_tree,
+    segment_tasks_from_store, split_segments)
+
+PLANE_FIELDS = ("times", "lat", "lon", "alt_msl_m", "alt_agl_m",
+                "vrate_ms", "gspeed_ms", "heading_rad", "turn_rad_s")
+
+_DTYPES = ("<f8", "<f4", "<i8", "<i4", "<i2", "<u4", "<u2", "<u1")
+
+
+# ---------------------------------------------------------------------------
+# Codec: property tests.
+# ---------------------------------------------------------------------------
+
+def _column(dtype: str, seed: int, n: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if dtype.startswith("<f"):
+        return (rng.standard_normal(n) * 1e4).astype(dtype)
+    info = np.iinfo(np.dtype(dtype))
+    return rng.integers(info.min, info.max, size=n,
+                        endpoint=True).astype(dtype)
+
+
+@settings(max_examples=10)
+@given(st.lists(st.tuples(st.sampled_from(_DTYPES),
+                          st.integers(min_value=0, max_value=2000),
+                          st.integers(min_value=0, max_value=10 ** 6)),
+                min_size=1, max_size=5),
+       st.sampled_from(["zlib", "none"]))
+def test_codec_roundtrip_bitwise(cols_spec, compression):
+    """Arbitrary lengths/dtypes -> encode -> decode bitwise-equal."""
+    columns = {f"c{i}": _column(dt, seed, n)
+               for i, (dt, n, seed) in enumerate(cols_spec)}
+    meta = {"n": len(columns)}
+    data = codec.encode_shard(columns, meta=meta,
+                              compression=compression)
+    # canonical encoding: same inputs -> same bytes
+    assert data == codec.encode_shard(columns, meta=meta,
+                                      compression=compression)
+    decoded, meta2 = codec.decode_shard(data)
+    assert meta2 == meta
+    assert set(decoded) == set(columns)
+    for name, arr in columns.items():
+        out = decoded[name]
+        assert out.dtype == arr.dtype
+        assert out.shape == arr.shape
+        assert out.tobytes() == arr.tobytes()      # bitwise
+
+
+@settings(max_examples=10)
+@given(st.integers(min_value=0, max_value=10 ** 6))
+def test_codec_corruption_rejected(seed):
+    """Any single flipped payload byte must be detected."""
+    rng = np.random.default_rng(seed)
+    data = bytearray(codec.encode_shard(
+        {"x": rng.standard_normal(64), "y": rng.integers(0, 99, 32)}))
+    pos = int(rng.integers(0, len(data)))
+    data[pos] ^= 0xFF
+    with pytest.raises(ShardFormatError):
+        codec.decode_shard(bytes(data))
+
+
+def test_codec_truncation_and_magic_rejected():
+    data = codec.encode_shard({"x": np.arange(10.0)})
+    with pytest.raises(ShardFormatError):
+        codec.decode_shard(data[:-3])
+    with pytest.raises(ShardFormatError):
+        codec.decode_shard(b"NOTASTORE" + data[9:])
+    with pytest.raises(ShardChecksumError):
+        codec.decode_shard(data[:40] + b"\x00" + data[41:])
+
+
+def test_codec_column_subset_skips_payload():
+    cols = {"big": np.arange(5000.0), "small": np.arange(4)}
+    data = codec.encode_shard(cols)
+    out, _ = codec.decode_shard(data, columns=["small"])
+    assert list(out) == ["small"]
+    np.testing.assert_array_equal(out["small"], cols["small"])
+    with pytest.raises(KeyError):
+        codec.decode_shard(data, columns=["absent"])
+
+
+# ---------------------------------------------------------------------------
+# Store URIs.
+# ---------------------------------------------------------------------------
+
+def test_store_uri_roundtrip():
+    uri = make_store_uri("/tmp/st", shard="s00001", rows="0:8")
+    root, sel = parse_store_uri(uri)
+    assert root == "/tmp/st"
+    assert sel == {"shard": "s00001", "rows": "0:8"}
+    root2, sel2 = parse_store_uri(make_store_uri("/tmp/st"))
+    assert (root2, sel2) == ("/tmp/st", {})
+    with pytest.raises(ValueError):
+        parse_store_uri("file:///tmp/st")
+    with pytest.raises(ValueError):
+        parse_store_uri("store:///tmp/st#bogus=1")
+    with pytest.raises(ValueError):
+        parse_store_uri("store:///tmp/st#rows=0:4")   # rows needs shard
+
+
+# ---------------------------------------------------------------------------
+# Golden end-to-end fixture: raw -> organize -> archive -> store.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def golden(tmp_path_factory):
+    root = tmp_path_factory.mktemp("store_golden")
+    raw, org, arc = (str(root / d) for d in ("raw", "org", "arc"))
+    write_scaled_dataset(raw, ScaledDatasetSpec(name="g", n_files=4,
+                                                scale=1e4))
+    reg = synthetic_registry(n=2000, seed=13)
+    organizer = Organizer(org, reg)
+    for t in organize_tasks_from_dir(raw):
+        organizer(t)
+    archiver = Archiver(org, arc)
+    for t in archive_tasks_from_tree(org):
+        archiver(t)
+    store_root = str(root / "store")
+    manifest = build_store(arc, store_root, target_points=2048)
+    return {"arc": arc, "store": store_root, "manifest": manifest,
+            "root": str(root)}
+
+
+def test_store_build_deterministic(golden):
+    """Same-seed builds are byte-identical: manifest AND shard files."""
+    rebuild = os.path.join(golden["root"], "store_rebuild")
+    m2 = build_store(golden["arc"], rebuild, target_points=2048)
+    assert golden["manifest"].canonical_bytes() == m2.canonical_bytes()
+    for s in golden["manifest"].shards:
+        with open(os.path.join(golden["store"], s.filename), "rb") as a, \
+                open(os.path.join(rebuild, s.filename), "rb") as b:
+            assert a.read() == b.read()
+
+
+def test_manifest_index_matches_payload(golden):
+    """seg_knots/seg_grid in the index == what a live parse computes."""
+    from repro.tracks.segments import segment_shape
+    store = TrackStore(golden["store"])
+    for rec in golden["manifest"].tracks:
+        obs = read_observations(
+            os.path.join(golden["arc"], rec.track_id))
+        assert rec.n_obs == len(obs["time"])
+        shapes = [segment_shape(obs["time"], s)
+                  for s in split_segments(obs["time"])]
+        assert rec.seg_knots == tuple(n for n, _ in shapes)
+        assert rec.seg_grid == tuple(m for _, m in shapes)
+    # and the store-read payload is bitwise what the zip parse yields
+    for rec in golden["manifest"].tracks[:3]:
+        zip_obs = read_observations(
+            os.path.join(golden["arc"], rec.track_id))
+        st_obs = store.read_track(rec.track_id)
+        for col in ("time", "lat", "lon", "alt"):
+            assert np.array_equal(zip_obs[col], st_obs[col])
+        assert [str(x) for x in zip_obs["icao24"]] == \
+            [str(x) for x in st_obs["icao24"]]
+
+
+def test_bucket_histogram_from_index(golden):
+    """Index-driven bucket binning == the fused batcher's own binning."""
+    from repro.tracks.segments import bucket_width
+    proc = SegmentProcessor()
+    widths: dict[int, int] = {}
+    for rec in golden["manifest"].tracks:
+        obs = read_observations(
+            os.path.join(golden["arc"], rec.track_id))
+        for r in proc._records([(obs, split_segments(obs["time"]))]):
+            widths[r.width] = widths.get(r.width, 0) + 1
+    assert golden["manifest"].bucket_histogram() == widths
+    # plan() exposes the same histogram per shard, no payload touched
+    plans = TrackStore(golden["store"]).plan()
+    merged: dict[int, int] = {}
+    for p in plans:
+        for w, c in p.bucket_histogram.items():
+            merged[w] = merged.get(w, 0) + c
+    assert merged == widths
+    assert all(w == bucket_width(w) for w in merged)
+
+
+def test_store_vs_zip_process_batch_bitwise(golden):
+    """THE golden gate: store-backed process_batch == zip-backed,
+    bitwise, on every output plane."""
+    ztasks = segment_tasks_from_archive_tree(golden["arc"])
+    ttasks = segment_tasks_from_store(golden["store"],
+                                      granularity="track")
+    assert [t.task_id.replace(os.sep, "/") for t in ztasks] == \
+        [t.task_id for t in ttasks]
+    proc = SegmentProcessor()
+    bz = proc.process_batch(ztasks)
+    bs = proc.process_batch(ttasks)
+    assert len(bz) == len(bs) == len(ztasks)
+    for t in ztasks:
+        rz, rs = bz[t.task_id], bs[t.task_id.replace(os.sep, "/")]
+        assert rz.icao24 == rs.icao24
+        assert rz.airspace == rs.airspace
+        np.testing.assert_array_equal(rz.count, rs.count)
+        for f in PLANE_FIELDS:
+            np.testing.assert_array_equal(getattr(rz, f),
+                                          getattr(rs, f), err_msg=f)
+
+
+def test_shard_tasks_and_process_store_agree(golden):
+    """Shard-granularity tasks and the prefetching process_store loop
+    produce the same per-track results as track-granularity tasks."""
+    proc = SegmentProcessor()
+    per_track = proc.process_batch(
+        segment_tasks_from_store(golden["store"], granularity="track"))
+    via_shards: dict = {}
+    for res in proc.process_batch(
+            segment_tasks_from_store(golden["store"],
+                                     granularity="shard")).values():
+        via_shards.update(res)
+    via_stream = proc.process_store(golden["store"], prefetch=2)
+    assert set(per_track) == set(via_shards) == set(via_stream)
+    for tid in per_track:
+        for other in (via_shards[tid], via_stream[tid]):
+            np.testing.assert_array_equal(per_track[tid].count,
+                                          other.count)
+            for f in PLANE_FIELDS:
+                np.testing.assert_array_equal(
+                    getattr(per_track[tid], f), getattr(other, f),
+                    err_msg=f)
+
+
+def test_iter_batches_prefetch_equivalence(golden):
+    """prefetch=0 and prefetch=2 stream identical content/order."""
+    store = TrackStore(golden["store"])
+    sync = list(store.iter_batches(prefetch=0))
+    pre = list(store.iter_batches(prefetch=2))
+    assert [b.shard_id for b in sync] == [b.shard_id for b in pre]
+    for a, b in zip(sync, pre):
+        assert a.track_ids == b.track_ids
+        for (obs_a, segs_a), (obs_b, segs_b) in zip(a.items, b.items):
+            assert segs_a == segs_b
+            for col in ("time", "lat", "lon", "alt"):
+                assert np.array_equal(obs_a[col], obs_b[col])
+
+
+def test_row_range_selection(golden):
+    store = TrackStore(golden["store"])
+    sid = golden["manifest"].shards[0].shard_id
+    all_rows = store.read_selection({"shard": sid})
+    part = store.read_selection({"shard": sid, "rows": "1:3"})
+    assert [tid for tid, _, _ in part] == \
+        [tid for tid, _, _ in all_rows][1:3]
+    with pytest.raises(ValueError):
+        store.read_selection({"shard": sid, "rows": "0:9999"})
+    with pytest.raises(KeyError):
+        store.read_selection({"shard": "nope"})
+
+
+def test_prefetch_error_reaches_slow_consumer(golden):
+    """A decode error in the prefetch thread must surface even when the
+    consumer holds the (size-1) queue full for a while — the producer
+    retries the terminal event instead of dropping it (deadlock bug)."""
+    import time
+    root = os.path.join(golden["root"], "store_pershard")
+    build_store(golden["arc"], root, target_points=1)
+    manifest = StoreManifest.load(root)
+    assert len(manifest.shards) >= 2
+    path = os.path.join(root, manifest.shards[-1].filename)
+    blob = bytearray(open(path, "rb").read())
+    blob[-1] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    store = TrackStore(root)
+    with pytest.raises(ShardFormatError):
+        for _batch in store.iter_batches(prefetch=1):
+            time.sleep(0.15)        # slower than the producer's put poll
+
+
+def test_corrupted_shard_detected_through_reader(golden):
+    """Bit rot in a shard file surfaces as ShardChecksumError, also
+    through the prefetch thread."""
+    import shutil
+    broken_root = os.path.join(golden["root"], "store_broken")
+    shutil.copytree(golden["store"], broken_root)
+    manifest = StoreManifest.load(broken_root)
+    path = os.path.join(broken_root, manifest.shards[0].filename)
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    store = TrackStore(broken_root)
+    with pytest.raises(ShardFormatError):
+        list(store.iter_batches(prefetch=0))
+    with pytest.raises(ShardFormatError):
+        list(store.iter_batches(prefetch=2))
+
+
+def test_plan_shards_respects_target_and_order(golden):
+    sources = discover_sources(golden["arc"])
+    assert sources == sorted(sources, key=lambda s: s[0])
+    plans = plan_shards(sources, target_points=1)   # one track per shard
+    assert len(plans) == len(sources)
+    assert [p.shard_id for p in plans] == \
+        [f"s{i:05d}" for i in range(len(plans))]
+    one = plan_shards(sources, target_points=10 ** 12)
+    assert len(one) == 1
+    assert [t for t, _ in one[0].sources] == [s[0] for s in sources]
+
+
+# ---------------------------------------------------------------------------
+# Workflow integration: the store-build phase.
+# ---------------------------------------------------------------------------
+
+def test_workflow_store_build_phase(tmp_path):
+    from repro.tracks.workflow import TrackWorkflow
+    wf = TrackWorkflow(str(tmp_path), n_workers=2, poll_interval=0.003,
+                       input="store", store_target_points=2048,
+                       tasks_per_message=2)
+    wf.generate_raw(n_files=3, scale=2e4)
+    reports = wf.run()
+    assert [r.phase for r in reports] == \
+        ["organize", "archive", "store-build", "process"]
+    assert all(r.tasks > 0 for r in reports)
+    manifest = StoreManifest.load(wf.store_dir)
+    assert manifest.tracks and manifest.shards
+    # resume skips every completed phase
+    wf2 = TrackWorkflow(str(tmp_path), n_workers=2, input="store")
+    assert wf2.run() == []
+
+
+def test_workflow_store_build_resumes_past_checkpointed_shards(tmp_path):
+    """Shard tasks completed before a mid-phase kill are excluded from
+    re-dispatch by the restored manager; finalize must still index them
+    (regression: KeyError on every pre-kill shard)."""
+    from repro.runtime import ManagerCheckpoint
+    from repro.store.writer import ShardBuilder
+    from repro.tracks.workflow import TrackWorkflow
+
+    wfz = TrackWorkflow(str(tmp_path), n_workers=2, poll_interval=0.003)
+    wfz.generate_raw(n_files=3, scale=2e4)
+    wfz.run()                      # organize + archive + (zip) process
+    sources = discover_sources(wfz.archive_dir)
+    plans = plan_shards(sources, target_points=1)
+    assert len(plans) >= 2
+    # shard 0 "completed before the kill": file committed, records lost
+    store_dir = str(tmp_path / "store")
+    done_task = Task(task_id=f"store/{plans[0].shard_id}",
+                     payload=plans[0].dumps())
+    ShardBuilder(store_dir)(done_task)
+    with open(wfz.ckpt_path) as f:
+        state = json.load(f)
+    state["manager_phase"] = "store-build"
+    state["manager"] = ManagerCheckpoint({done_task.task_id}, []).dumps()
+    with open(wfz.ckpt_path, "w") as f:
+        json.dump(state, f)
+
+    wfs = TrackWorkflow(str(tmp_path), n_workers=2, poll_interval=0.003,
+                        input="store", store_target_points=1)
+    reports = wfs.run()
+    assert [r.phase for r in reports] == ["store-build"]
+    manifest = StoreManifest.load(store_dir)
+    assert [s.shard_id for s in manifest.shards] == \
+        [p.shard_id for p in plans]
+
+
+# ---------------------------------------------------------------------------
+# Archiver crash-safety (satellite).
+# ---------------------------------------------------------------------------
+
+def test_archiver_cleans_orphaned_tmp(tmp_path):
+    src_root = tmp_path / "org" / "2019" / "L2J" / "150" / "b0" / "abc123"
+    src_root.mkdir(parents=True)
+    (src_root / "abc123.csv").write_text("time,icao24\n1,abc123\n")
+    arc_root = str(tmp_path / "arc")
+    arch = Archiver(str(tmp_path / "org"), arc_root)
+    rel = "2019/L2J/150/b0/abc123"
+    # a killed worker's leftovers, both legacy and pid-suffixed
+    parent = os.path.join(arc_root, "2019", "L2J", "150", "b0")
+    os.makedirs(parent, exist_ok=True)
+    zip_path = os.path.join(parent, "abc123.zip")
+    for stale in (zip_path + ".tmp", zip_path + ".tmp.99999"):
+        with open(stale, "w") as f:
+            f.write("garbage from a dead worker")
+    res = arch.archive_dir(rel)
+    assert res.files == 1
+    leftovers = [n for n in os.listdir(parent) if ".tmp" in n]
+    assert leftovers == []
+    with zipfile.ZipFile(zip_path) as zf:      # committed zip is valid
+        assert zf.namelist() == ["abc123.csv"]
+
+
+# ---------------------------------------------------------------------------
+# Token shards on store primitives (satellite).
+# ---------------------------------------------------------------------------
+
+def test_token_shards_are_store_shards(tmp_path):
+    from repro.data.pipeline import (
+        SelfScheduledLoader, synthetic_token_shards,
+        token_shard_manifests)
+    shards = synthetic_token_shards(str(tmp_path), n_shards=4,
+                                    tokens_per_shard_mean=4096, seed=3)
+    # one shard-manifest implementation: the on-disk index IS a store
+    # manifest, and reopening it yields the same loader views
+    reopened = token_shard_manifests(str(tmp_path))
+    assert reopened == shards
+    cols, meta = codec.read_shard(shards[0].path)
+    assert meta["shard_id"] == shards[0].shard_id
+    assert cols["tokens"].dtype == np.int32
+    assert len(cols["tokens"]) == shards[0].n_tokens
+    loader = SelfScheduledLoader(shards, batch_size=2, seq_len=32,
+                                 n_ingest_workers=2, poll_interval=0.003)
+    batch = next(iter(loader))
+    assert batch["tokens"].shape == (2, 32)
+    # corruption fails the ingest job loudly
+    blob = bytearray(open(shards[1].path, "rb").read())
+    blob[-1] ^= 0xFF
+    with open(shards[1].path, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(RuntimeError, match="failed"):
+        SelfScheduledLoader(shards, batch_size=2, seq_len=32,
+                            n_ingest_workers=2, poll_interval=0.003)
