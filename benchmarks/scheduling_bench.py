@@ -1,0 +1,29 @@
+"""Scheduling-policy BENCH artifact CLI (thin adapter).
+
+Benchmarks the pluggable scheduling policies
+(:mod:`repro.runtime.policies`) across policy x dataset x fault-profile
+x backend cells — simulated makespan + worker-busy quantiles on the
+heavy-tailed manifests, and live store-backed prefetch-wait attribution
+for shard_affinity — and writes a schema-validated
+``BENCH_scheduling.json`` (``repro.bench.scheduling/v1``).  Exits
+non-zero if any scenario misses its check (CI gates on the quick tier:
+adaptive_chunk and sized_lpt >= 1.3x static makespan on the heavy-tail
+dataset with 20 % worker deaths, shard_affinity cutting measured
+prefetch wait vs fifo_selfsched).
+
+    PYTHONPATH=src python benchmarks/scheduling_bench.py --quick
+    PYTHONPATH=src python benchmarks/scheduling_bench.py --out BENCH_scheduling.json
+
+The scenario declarations and record layout live in
+:mod:`repro.bench.scheduling` (``python -m repro.bench.scheduling`` is
+the same entry point).
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.bench.scheduling import main
+
+if __name__ == "__main__":
+    sys.exit(main())

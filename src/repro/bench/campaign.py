@@ -76,6 +76,14 @@ def main(argv=None) -> int:
                     metavar="JSON",
                     help="artifact path for --storage "
                          "(default BENCH_storage.json)")
+    ap.add_argument("--scheduling", action="store_true",
+                    help="also run the scheduling-policy matrix "
+                         "(repro.bench.scheduling: makespan + prefetch "
+                         "wait per policy) and write another artifact")
+    ap.add_argument("--scheduling-out", default="BENCH_scheduling.json",
+                    metavar="JSON",
+                    help="artifact path for --scheduling "
+                         "(default BENCH_scheduling.json)")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="max allowed relative job_seconds regression vs "
                          "--baseline (default 0.10)")
@@ -156,6 +164,29 @@ def main(argv=None) -> int:
             for line in storage_summary_lines(sdoc):
                 print(line)
             if sdoc["summary"]["fail"] or sdoc["summary"]["error"]:
+                rc = 1
+    if args.scheduling:
+        from repro.bench.scheduling import (
+            run_scheduling_campaign, scheduling_scenarios,
+            scheduling_summary_lines)
+        if not any(sc.matches(args.filter)
+                   and (not args.quick or sc.tier == "quick")
+                   for sc in scheduling_scenarios()):
+            print("no scheduling scenarios match --filter; skipping "
+                  "--scheduling artifact")
+        else:
+            pdoc = run_scheduling_campaign(quick=args.quick,
+                                           filters=args.filter,
+                                           seed=args.seed,
+                                           progress=progress)
+            if args.scheduling_out != "-":
+                with open(args.scheduling_out, "w") as f:
+                    json.dump(pdoc, f, indent=1, sort_keys=True)
+                    f.write("\n")
+                print(f"wrote {args.scheduling_out}")
+            for line in scheduling_summary_lines(pdoc):
+                print(line)
+            if pdoc["summary"]["fail"] or pdoc["summary"]["error"]:
                 rc = 1
     if args.baseline:
         from repro.bench.compare import compare_docs, render_rows

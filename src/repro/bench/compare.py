@@ -8,7 +8,12 @@ BENCH kind the repo emits:
   * ``repro.bench.kernels/v1`` — ``padded_fraction`` (padding-to-payload
     ratio of the fused pipeline; multiplies wasted kernel compute);
   * ``repro.bench.storage/v1`` — ``bytes_per_point`` (columnar-store
-    encoding efficiency).
+    encoding efficiency);
+  * ``repro.bench.scheduling/v1`` — ``makespan_seconds`` (simulated
+    policy makespan), with non-gating busy-quantile delta rows
+    (``busy_p50_s``/``busy_p90_s``) printed alongside so a policy that
+    holds its makespan by burning worker-time imbalance is still
+    visible in the diff.
 
 All default metrics are lower-is-better and deterministic for a fixed
 seed; live wall-clock numbers live under ``measured`` and are
@@ -30,8 +35,8 @@ import argparse
 import json
 import sys
 
-__all__ = ["DEFAULT_METRICS", "default_metric", "compare_docs",
-           "render_rows", "main"]
+__all__ = ["DEFAULT_METRICS", "INFO_METRICS", "default_metric",
+           "compare_docs", "render_rows", "main"]
 
 METRIC = "job_seconds"          # historical default (campaign artifacts)
 
@@ -41,6 +46,13 @@ DEFAULT_METRICS = {
     "repro.bench.smoke/v1": "job_seconds",
     "repro.bench.kernels/v1": "padded_fraction",
     "repro.bench.storage/v1": "bytes_per_point",
+    "repro.bench.scheduling/v1": "makespan_seconds",
+}
+
+#: schema -> informational secondary metrics: their deltas are printed
+#: but never gate (only the schema's DEFAULT metric regresses a run).
+INFO_METRICS = {
+    "repro.bench.scheduling/v1": ("busy_p50_s", "busy_p90_s"),
 }
 
 
@@ -151,6 +163,14 @@ def main(argv=None) -> int:
           f"[{old.get('schema')}]")
     for line in render_rows(rows):
         print(line)
+    if args.metric is None:
+        for extra in INFO_METRICS.get(old.get("schema"), ()):
+            xrows, _ = compare_docs(old, new, threshold=float("inf"),
+                                    metric=extra)
+            if xrows:
+                print(f"info metric: {extra} (not gated)")
+                for line in render_rows(xrows):
+                    print(line)
     if regressions:
         print(f"{len(regressions)} scenario(s) regressed beyond "
               f"{args.threshold:.0%}")

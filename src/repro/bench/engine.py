@@ -107,6 +107,7 @@ def execute_spec(spec: RunSpec) -> tuple[RunResult, int]:
         nodes=spec.nodes, nppn=spec.nppn,
         organization=spec.organization,
         tasks_per_message=spec.tasks_per_message,
+        policy=spec.sched_policy,
         organize_seed=spec.seed, raise_on_failure=False, **kwargs)
     return result, len(tasks)
 

@@ -103,6 +103,7 @@ class RunSpec:
     backend: str = "sim"                # sim | threads | processes
     mode: str = "self_sched"            # self_sched | static
     policy: str = "cyclic"              # static mode only: block | cyclic
+    sched_policy: str = "static"        # self_sched: runtime.policies name
     n_workers: int = 4
     nodes: Optional[int] = None
     nppn: Optional[int] = None
@@ -122,6 +123,14 @@ class RunSpec:
             raise ValueError(f"unknown mode {self.mode!r}")
         if self.mode == "static" and self.backend != "sim":
             raise ValueError("static distribution is sim-only")
+        from repro.runtime.policies import POLICY_NAMES
+        if self.sched_policy not in POLICY_NAMES:
+            raise ValueError(
+                f"unknown scheduling policy {self.sched_policy!r}; "
+                f"choose from {list(POLICY_NAMES)}")
+        if self.mode == "static" and self.sched_policy != "static":
+            raise ValueError("mode='static' pre-assigns all tasks; "
+                             "sched_policy applies to self_sched only")
         if self.fault_profile not in FAULT_PROFILES:
             raise ValueError(f"unknown fault profile {self.fault_profile!r}; "
                              f"choose from {sorted(FAULT_PROFILES)}")
@@ -230,7 +239,8 @@ ChecksFor = Callable[[dict], tuple[Check, ...]]
 # Swept-axis abbreviations used in expanded scenario names.
 _ABBREV = {"tasks_per_message": "k", "poll_interval": "poll",
            "organization": "org", "fault_profile": "", "backend": "",
-           "n_workers": "w", "cpu_rate_scale": "cpu", "dataset": ""}
+           "n_workers": "w", "cpu_rate_scale": "cpu", "dataset": "",
+           "sched_policy": ""}
 
 
 def expand(group: str, *, tier: str = "full",

@@ -1,0 +1,635 @@
+"""Scheduling-policy benchmark matrix: policy x dataset x fault x backend.
+
+The campaign benchmarks the protocol against the paper's tables, the
+kernels matrix benchmarks the device hot path, the storage matrix the
+feed — this module benchmarks the *dispatch decisions* themselves: how
+much makespan, worker balance, and prefetch warmth each
+:mod:`repro.runtime.policies` policy buys on the workloads where the
+companion HPC paper says static chunking falls over (heavy-tailed task
+mixes + worker deaths).  Two cell kinds share one artifact
+(``BENCH_scheduling.json``, schema ``repro.bench.scheduling/v1``):
+
+  * ``sim`` cells — the discrete-event backend at bench scale: run a
+    policy against the heavy-tailed aerodrome manifest under a fault
+    profile and record makespan + worker-busy quantiles + simulated
+    I/O wait.  Fully deterministic per seed, so everything lands in
+    ``metrics`` and regression-gates byte-stably.
+  * ``store_feed`` cells — a LIVE threads-backend job over row-range
+    ``store://`` tasks of a real (synthetic-content) columnar store,
+    with a worker that models the PR-4 prefetch consumer: serving a
+    range from its cached shard decode is free, switching shards pays
+    a full decode into ``wait_s``.  Wall-clock figures land in
+    ``measured``; the quick tier gates the shard_affinity-vs-fifo wait
+    *ratio* (both sides measured on the same machine in the same
+    process).
+
+The quick tier is the ISSUE-5 acceptance cell set: on the heavy-tail
+dataset with the 20 %-death fault profile in the sim backend,
+``adaptive_chunk`` and ``sized_lpt`` each make >= 1.3x lower makespan
+than ``static`` with ``tasks_per_message=1``; and ``shard_affinity``
+reduces measured prefetch ``wait_s`` vs ``fifo_selfsched`` on the
+store-backed feed.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.bench.scheduling --quick
+    PYTHONPATH=src python benchmarks/scheduling_bench.py --out BENCH_scheduling.json
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import threading
+import time
+from typing import Optional, Sequence
+
+from repro.bench.scenarios import FAULT_PROFILES, Check
+from repro.bench.schema import (
+    SCHEDULING_SCHEMA, SCHEMA_VERSION, validate_scheduling)
+from repro.runtime.policies import POLICY_NAMES
+
+__all__ = ["SchedulingSpec", "SchedulingScenario", "StoreFeedWorker",
+           "scheduling_scenarios", "run_scheduling_scenario",
+           "run_scheduling_campaign", "scheduling_summary_lines", "main"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulingSpec:
+    """One policy-bench configuration — JSON-able, hashable."""
+
+    policy: str = "static"
+    kind: str = "sim"                   # sim | store_feed
+    dataset: str = "aerodrome"          # manifest name / feed fixture tag
+    phase: str = "process"              # cost-model name (sim cells)
+    backend: str = "sim"                # sim | threads
+    n_workers: int = 64
+    organization: str = "chronological"
+    tasks_per_message: int = 1
+    fault_profile: str = "none"
+    dataset_limit: Optional[int] = 3000
+    poll_interval: Optional[float] = None
+    failure_timeout: Optional[float] = None
+    seed: int = 0
+    # store_feed fixture knobs (which store, how it is sliced into tasks).
+    n_archives: int = 48
+    segments_per_archive: int = 8
+    target_points: int = 3072
+    rows_per_task: int = 2
+
+    def __post_init__(self) -> None:
+        if self.policy not in POLICY_NAMES:
+            raise ValueError(f"unknown policy {self.policy!r}; choose "
+                             f"from {list(POLICY_NAMES)}")
+        if self.kind not in ("sim", "store_feed"):
+            raise ValueError(f"unknown cell kind {self.kind!r}")
+        if self.fault_profile not in FAULT_PROFILES:
+            raise ValueError(
+                f"unknown fault profile {self.fault_profile!r}")
+        if self.kind == "sim" and self.backend != "sim":
+            raise ValueError("sim cells run on the sim backend")
+        if self.kind == "store_feed" and self.backend != "threads":
+            raise ValueError("store_feed cells measure a live feed; "
+                             "backend must be 'threads'")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def fixture_key(self) -> tuple:
+        return (self.n_archives, self.segments_per_archive,
+                self.target_points, self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulingScenario:
+    """One named scheduling-bench cell."""
+
+    name: str
+    group: str
+    run: SchedulingSpec
+    baseline: Optional[SchedulingSpec] = None
+    checks: tuple[Check, ...] = ()
+    tier: str = "full"
+    notes: str = ""
+
+    def matches(self, patterns: Sequence[str]) -> bool:
+        if not patterns:
+            return True
+        return any(p in self.name or p in self.group for p in patterns)
+
+
+# ---------------------------------------------------------------------------
+# sim cells.
+# ---------------------------------------------------------------------------
+
+def _execute_sim(spec: SchedulingSpec) -> dict:
+    from repro.core.cost_model import PHASES
+    from repro.runtime import run_job
+    from repro.tracks.datasets import get_manifest
+
+    tasks = get_manifest(spec.dataset, limit=spec.dataset_limit)
+    model = PHASES[spec.phase]
+    worker_death, worker_speed, _ = FAULT_PROFILES[
+        spec.fault_profile].materialize(spec.n_workers, spec.seed)
+    kwargs: dict = {}
+    if spec.poll_interval is not None:
+        kwargs["poll_interval"] = spec.poll_interval
+    if spec.failure_timeout is not None:
+        kwargs["failure_timeout"] = spec.failure_timeout
+    result = run_job(
+        tasks, None, backend="sim", n_workers=spec.n_workers,
+        organization=spec.organization,
+        tasks_per_message=spec.tasks_per_message,
+        policy=spec.policy, cost_model=model,
+        worker_death=worker_death, worker_speed=worker_speed,
+        organize_seed=spec.seed, raise_on_failure=False, **kwargs)
+    bq = result.busy_quantiles()
+    # Everything the sim reports is deterministic for a fixed spec+seed.
+    metrics = {
+        "n_tasks": len(tasks),
+        "tasks_completed": len(result.completed_ids),
+        "messages_sent": result.messages_sent,
+        "n_batches": len(result.batches),
+        "reassigned_tasks": result.reassigned_tasks,
+        "makespan_seconds": result.job_seconds,
+        "busy_p50_s": bq["p50"],
+        "busy_p90_s": bq["p90"],
+        "busy_p99_s": bq["p99"],
+        "busy_total_s": sum(result.worker_busy),
+        "wait_total_s": sum(result.worker_wait),
+        "dispatch_digest": result.dispatch_digest,
+    }
+    return {"metrics": metrics, "measured": {}}
+
+
+# ---------------------------------------------------------------------------
+# store_feed cells.
+# ---------------------------------------------------------------------------
+
+class StoreFeedWorker:
+    """run_job worker fn modelling the store-backed prefetch consumer.
+
+    Each task is a ``store://...#shard=<id>&rows=a:b`` payload.  The
+    worker keeps ONE decoded shard per thread/process (exactly what the
+    double-buffered prefetcher keeps warm): a task on the cached shard
+    serves from memory; a task on a different shard pays the full
+    read+decode, accumulated as feed wait.  ``take_wait_s()`` hands the
+    wait to the runtime after every DONE batch, so it surfaces in
+    ``RunResult`` per worker — the number the shard_affinity acceptance
+    cell gates on.
+    """
+
+    def __init__(self, store_root: str):
+        self.store_root = store_root
+        self._local = threading.local()
+
+    # One-shard-cache state is per thread (threads backend) and rebuilt
+    # per process after pickling (processes backend).
+    def __getstate__(self) -> dict:
+        return {"store_root": self.store_root}
+
+    def __setstate__(self, state: dict) -> None:
+        self.__init__(state["store_root"])
+
+    def _state(self):
+        loc = self._local
+        if not hasattr(loc, "store"):
+            from repro.store.reader import TrackStore
+            loc.store = TrackStore(self.store_root, prefetch=0)
+            loc.shard_id = None
+            loc.batch = None
+            loc.wait_s = 0.0
+            loc.decodes = 0
+        return loc
+
+    def __call__(self, task) -> dict:
+        from repro.store.reader import parse_store_uri
+
+        loc = self._state()
+        _root, sel = parse_store_uri(task.payload)
+        shard_id = sel["shard"]
+        decoded = 0
+        if loc.shard_id != shard_id:
+            t0 = time.perf_counter()
+            loc.batch = loc.store.read_shard_batch(shard_id)
+            loc.wait_s += time.perf_counter() - t0
+            loc.decodes += 1
+            loc.shard_id = shard_id
+            decoded = 1
+        a, _, b = sel.get("rows", "").partition(":")
+        lo = int(a) if a else 0
+        hi = int(b) if b else len(loc.batch.items)
+        items = loc.batch.items[lo:hi]
+        return {"n_rows": len(items),
+                "n_points": sum(len(obs["time"]) for obs, _ in items),
+                "decoded": decoded}
+
+    def take_wait_s(self) -> float:
+        """Return-and-reset this thread's accumulated decode wait (the
+        runtime calls it after each DONE batch — see worker_loop)."""
+        loc = self._state()
+        w, loc.wait_s = loc.wait_s, 0.0
+        return w
+
+
+def _feed_fixture(spec: SchedulingSpec) -> dict:
+    """A real columnar store on disk (cached via the storage bench's
+    fixture machinery, which also cleans it up at exit)."""
+    from repro.bench.storage import StorageSpec, _fixture
+
+    return _fixture(StorageSpec(
+        source="store", phase="warm", workload="heavy_tail",
+        n_archives=spec.n_archives,
+        segments_per_archive=spec.segments_per_archive,
+        target_points=spec.target_points, seed=spec.seed))
+
+
+def _feed_tasks(store_root: str, spec: SchedulingSpec) -> list:
+    """Row-range tasks over every shard, timestamped so chronological
+    order interleaves shards round-robin — the worst case for a
+    locality-blind policy (consecutive FIFO tasks almost always switch
+    shards) and precisely what shard_affinity is meant to undo."""
+    from repro.store.reader import parse_store_uri
+    from repro.tracks.segments import segment_tasks_from_store
+
+    tasks = segment_tasks_from_store(store_root, granularity="rows",
+                                     rows_per_task=spec.rows_per_task)
+    by_shard: dict[str, list] = {}
+    for t in tasks:
+        _root, sel = parse_store_uri(t.payload)
+        by_shard.setdefault(sel["shard"], []).append(t)
+    n_shards = len(by_shard)
+    for si, sid in enumerate(sorted(by_shard)):
+        for ri, t in enumerate(sorted(by_shard[sid],
+                                      key=lambda t: t.task_id)):
+            t.timestamp = float(ri * n_shards + si)
+    return tasks
+
+
+def _batch_locality(batches: list, tasks: list) -> float:
+    """Fraction of MULTI-task ASSIGNs whose ids share one shard (1.0 =
+    every such batch is single-shard, the shard_affinity invariant).
+    Single-task batches are trivially single-shard and are excluded so
+    the metric cannot go vacuously true; 0.0 when the job produced no
+    multi-task batch at all (the acceptance cell runs at
+    tasks_per_message=2 precisely so this measures something)."""
+    from repro.store.reader import parse_store_uri
+
+    shard_of = {}
+    for t in tasks:
+        _root, sel = parse_store_uri(t.payload)
+        shard_of[t.task_id] = sel["shard"]
+    multi = [b for b in batches if len(b) > 1]
+    if not multi:
+        return 0.0
+    ok = sum(1 for b in multi
+             if len({shard_of[tid] for tid in b}) == 1)
+    return ok / len(multi)
+
+
+def _execute_store_feed(spec: SchedulingSpec) -> dict:
+    from repro.runtime import run_job
+
+    from repro.store.reader import parse_store_uri
+
+    fx = _feed_fixture(spec)
+    tasks = _feed_tasks(fx["store_root"], spec)
+    fn = StoreFeedWorker(fx["store_root"])
+    # Warm-up decode of every shard once (page cache + lazy imports) so
+    # the measured cells compare decode *scheduling*, not first-touch
+    # costs that only the first cell of the process would pay.
+    warm = StoreFeedWorker(fx["store_root"])._state().store
+    for sid in sorted({parse_store_uri(t.payload)[1]["shard"]
+                       for t in tasks}):
+        warm.read_shard_batch(sid)
+    result = run_job(
+        tasks, fn, backend="threads", n_workers=spec.n_workers,
+        organization=spec.organization,
+        tasks_per_message=spec.tasks_per_message,
+        policy=spec.policy,
+        poll_interval=(spec.poll_interval if spec.poll_interval is not None
+                       else 0.002))
+    metrics = {
+        "n_tasks": len(tasks),
+        "n_shards": fx["n_shards"],
+        "tasks_completed": len(result.completed_ids),
+        "messages_sent": result.messages_sent,
+        "n_batches": len(result.batches),
+        "batch_locality": _batch_locality(result.batches, tasks),
+    }
+    measured = {
+        "makespan_seconds": result.job_seconds,
+        "prefetch_wait_s": sum(result.worker_wait),
+        "shard_decodes": float(sum(
+            r.get("decoded", 0) for r in result.results.values())),
+        "worker_breakdown": result.worker_breakdown(),
+    }
+    return {"metrics": metrics, "measured": measured}
+
+
+# ---------------------------------------------------------------------------
+# Record assembly.
+# ---------------------------------------------------------------------------
+
+def _execute(spec: SchedulingSpec,
+             cache: Optional[dict] = None) -> dict:
+    """Run one spec; ``cache`` (keyed on the frozen spec) lets a
+    campaign reuse shared baselines — the quick tier alone would
+    otherwise simulate the identical static cell once per scenario."""
+    if cache is not None and spec in cache:
+        return cache[spec]
+    out = (_execute_sim(spec) if spec.kind == "sim"
+           else _execute_store_feed(spec))
+    if cache is not None:
+        cache[spec] = out
+    return out
+
+
+def run_scheduling_scenario(sc: SchedulingScenario,
+                            cache: Optional[dict] = None) -> dict:
+    """Execute one scenario (plus baseline) into a BENCH record."""
+    t0 = time.perf_counter()
+    spec_doc = {"run": sc.run.to_dict(),
+                "baseline": sc.baseline.to_dict() if sc.baseline else None}
+    try:
+        run = _execute(sc.run, cache)
+        base = _execute(sc.baseline, cache) if sc.baseline else None
+    except Exception as e:                 # keep the campaign going
+        return {"name": sc.name, "group": sc.group, "tier": sc.tier,
+                "status": "error", "spec": spec_doc,
+                "metrics": {}, "measured": {}, "checks": [],
+                "timing": {"wall_s": time.perf_counter() - t0},
+                "error": f"{type(e).__name__}: {e}"}
+
+    metrics = dict(run["metrics"])
+    measured = dict(run["measured"])
+    if base is not None:
+        bm, bw = base["metrics"], base["measured"]
+        if "makespan_seconds" in bm:          # sim vs sim: deterministic
+            metrics["baseline_makespan_seconds"] = bm["makespan_seconds"]
+            if metrics.get("makespan_seconds"):
+                metrics["makespan_speedup_x"] = (
+                    bm["makespan_seconds"] / metrics["makespan_seconds"])
+            if bm.get("busy_p90_s"):
+                metrics["busy_p90_delta_pct"] = (
+                    metrics["busy_p90_s"] / bm["busy_p90_s"] - 1.0) * 100.0
+        if "makespan_seconds" in bw:          # live vs live: wall clock
+            measured["baseline_makespan_seconds"] = bw["makespan_seconds"]
+            if bw.get("prefetch_wait_s") is not None:
+                measured["baseline_prefetch_wait_s"] = bw["prefetch_wait_s"]
+                w = measured.get("prefetch_wait_s") or 0.0
+                measured["prefetch_wait_reduction_x"] = (
+                    bw["prefetch_wait_s"] / w if w > 0 else float("inf"))
+            if bw.get("shard_decodes"):
+                measured["baseline_shard_decodes"] = bw["shard_decodes"]
+
+    merged = {**measured, **metrics}
+    checks = [c.evaluate(merged) for c in sc.checks]
+    status = ("ran" if not checks
+              else "pass" if all(c["passed"] for c in checks) else "fail")
+    return {"name": sc.name, "group": sc.group, "tier": sc.tier,
+            "status": status, "spec": spec_doc,
+            "metrics": metrics, "measured": measured, "checks": checks,
+            "timing": {"wall_s": time.perf_counter() - t0}, "error": None}
+
+
+# ---------------------------------------------------------------------------
+# The declared matrix.
+# ---------------------------------------------------------------------------
+
+#: The ISSUE-5 sim acceptance cell base: the heavy-tail dataset (many
+#: small tasks under a Pareto tail with the largest near total/P — see
+#: repro.tracks.datasets.heavy_tail_manifest), naive arrival order, one
+#: task per message, 20 % of the fleet dying mid-job — the regime where
+#: the 2020 HPC companion paper shows static chunking collapsing behind
+#: stragglers, and where the paper's own §V needed tasks-per-message to
+#: stop the manager serializing.
+_SIM_BASE = SchedulingSpec(kind="sim", dataset="heavy_tail",
+                           phase="radar", backend="sim", n_workers=64,
+                           organization="chronological",
+                           tasks_per_message=1,
+                           fault_profile="deaths_20pct",
+                           dataset_limit=12_000)
+
+_FEED_BASE = SchedulingSpec(kind="store_feed", dataset="store_heavy_tail",
+                            backend="threads", n_workers=3,
+                            organization="chronological",
+                            tasks_per_message=1, dataset_limit=None)
+
+
+def scheduling_scenarios() -> list[SchedulingScenario]:
+    """policy x dataset x fault-profile x backend.
+
+    Quick tier = the ISSUE-5 acceptance cells; full tier sweeps every
+    policy over fault profiles and adds the radar-like tiny-task regime
+    (where adaptive chunking pays through message-overhead amortization
+    rather than tail behavior).
+    """
+    static_base = dataclasses.replace(_SIM_BASE, policy="static")
+    fifo_feed = dataclasses.replace(_FEED_BASE, policy="fifo_selfsched")
+    out = [
+        SchedulingScenario(
+            name="sched_heavy_tail_deaths20_adaptive_chunk",
+            group="sched_makespan",
+            run=dataclasses.replace(_SIM_BASE, policy="adaptive_chunk"),
+            baseline=static_base,
+            checks=(Check("makespan_speedup_x", "min", 1.3,
+                          source="ISSUE 5: adaptive_chunk >= 1.3x vs "
+                                 "static @ k=1, heavy tail, 20% deaths"),
+                    Check("tasks_completed", "min", 12_000,
+                          source="exactly-once under deaths")),
+            tier="quick", notes="ISSUE-5 acceptance cell"),
+        SchedulingScenario(
+            name="sched_heavy_tail_deaths20_sized_lpt",
+            group="sched_makespan",
+            run=dataclasses.replace(_SIM_BASE, policy="sized_lpt"),
+            baseline=static_base,
+            checks=(Check("makespan_speedup_x", "min", 1.3,
+                          source="ISSUE 5: sized_lpt >= 1.3x vs static "
+                                 "@ k=1, heavy tail, 20% deaths"),
+                    Check("tasks_completed", "min", 12_000,
+                          source="exactly-once under deaths")),
+            tier="quick", notes="ISSUE-5 acceptance cell"),
+        SchedulingScenario(
+            name="sched_store_affinity_prefetch_wait",
+            group="sched_locality",
+            # k=2 so the run emits real multi-task ASSIGNs — that is
+            # what makes the batch_locality gate falsifiable (a k=1 run
+            # is single-shard per batch by construction).
+            run=dataclasses.replace(_FEED_BASE, policy="shard_affinity",
+                                    tasks_per_message=2),
+            baseline=fifo_feed,
+            checks=(Check("prefetch_wait_reduction_x", "min", 1.2,
+                          source="ISSUE 5: shard_affinity cuts measured "
+                                 "prefetch wait_s vs fifo_selfsched"),
+                    Check("batch_locality", "min", 1.0,
+                          source="every multi-task affinity ASSIGN is "
+                                 "single-shard"),),
+            tier="quick", notes="ISSUE-5 acceptance cell (live feed)"),
+    ]
+    # Full tier: the whole policy sweep on the acceptance regime plus a
+    # fault-free control (policies must not cost anything when nothing
+    # goes wrong) and the tiny-task message-overhead regime.
+    for policy in POLICY_NAMES:
+        out.append(SchedulingScenario(
+            name=f"sched_sweep_deaths20_{policy}",
+            group="sched_sweep",
+            run=dataclasses.replace(_SIM_BASE, policy=policy),
+            baseline=(static_base if policy != "static" else None)))
+        out.append(SchedulingScenario(
+            name=f"sched_sweep_faultfree_{policy}",
+            group="sched_sweep",
+            run=dataclasses.replace(_SIM_BASE, policy=policy,
+                                    fault_profile="none"),
+            baseline=(dataclasses.replace(static_base,
+                                          fault_profile="none")
+                      if policy != "static" else None)))
+    tiny = dataclasses.replace(_SIM_BASE, dataset="tiny", phase="radar",
+                               dataset_limit=20_000,
+                               fault_profile="none")
+    out.append(SchedulingScenario(
+        name="sched_tiny_msg_overhead_adaptive_chunk",
+        group="sched_tiny",
+        run=dataclasses.replace(tiny, policy="adaptive_chunk"),
+        baseline=dataclasses.replace(tiny, policy="static"),
+        notes="radar regime: chunking amortizes the serial manager"))
+    out.append(SchedulingScenario(
+        name="sched_store_static_vs_fifo",
+        group="sched_locality",
+        run=dataclasses.replace(_FEED_BASE, policy="static",
+                                tasks_per_message=2),
+        baseline=fifo_feed))
+    return out
+
+
+def run_scheduling_campaign(*, quick: bool = False,
+                            filters: Sequence[str] = (),
+                            seed: Optional[int] = None,
+                            progress=None) -> dict:
+    """Run the policy matrix into a schema-valid BENCH_scheduling doc."""
+    selected = [sc for sc in scheduling_scenarios()
+                if (not quick or sc.tier == "quick")
+                and sc.matches(filters)]
+    if not selected:
+        raise ValueError("no scheduling scenarios match the quick/filter "
+                         "selection")
+    if seed is not None:
+        selected = [dataclasses.replace(
+            sc, run=dataclasses.replace(sc.run, seed=seed),
+            baseline=(dataclasses.replace(sc.baseline, seed=seed)
+                      if sc.baseline else None))
+            for sc in selected]
+    t0 = time.perf_counter()
+    records = []
+    cache: dict = {}     # one execution per distinct spec per campaign
+    for sc in selected:
+        rec = run_scheduling_scenario(sc, cache)
+        records.append(rec)
+        if progress is not None:
+            progress(rec)
+    counts = {s: 0 for s in ("pass", "fail", "ran", "error")}
+    for rec in records:
+        counts[rec["status"]] += 1
+    doc = {
+        "schema": SCHEDULING_SCHEMA,
+        "schema_version": SCHEMA_VERSION,
+        "created_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "config": {"quick": quick, "filters": list(filters),
+                   "seed": seed, "n_selected": len(selected)},
+        "environment": {"python": sys.version.split()[0],
+                        "platform": sys.platform},
+        "scenarios": records,
+        "summary": {"total": len(records), **counts,
+                    "checked": sum(1 for r in records if r["checks"])},
+        "timing": {"wall_s": time.perf_counter() - t0},
+    }
+    problems = validate_scheduling(doc)
+    if problems:      # a bug in this module, not in the scenarios
+        raise RuntimeError("scheduling bench produced a schema-invalid "
+                           "artifact: " + "; ".join(problems[:5]))
+    return doc
+
+
+def scheduling_summary_lines(doc: dict) -> list[str]:
+    """Human-readable summary for the CLI."""
+    s = doc["summary"]
+    lines = [f"{s['total']} scheduling scenarios: {s['pass']} pass, "
+             f"{s['fail']} fail, {s['ran']} ran, {s['error']} error "
+             f"[{doc['timing']['wall_s']:.1f}s]"]
+    for rec in doc["scenarios"]:
+        if rec["status"] == "error":
+            lines.append(f"  ERROR {rec['name']}: {rec['error']}")
+            continue
+        m = {**rec["measured"], **rec["metrics"]}
+        bits = [f"makespan={m['makespan_seconds']:.3g}s"]
+        if "makespan_speedup_x" in m:
+            bits.append(f"speedup={m['makespan_speedup_x']:.2f}x")
+        if "busy_p90_s" in m:
+            bits.append(f"busy_p90={m['busy_p90_s']:.3g}s")
+        if "prefetch_wait_s" in m:
+            bits.append(f"wait={m['prefetch_wait_s'] * 1e3:.1f}ms")
+        if "prefetch_wait_reduction_x" in m:
+            bits.append(f"wait_cut={m['prefetch_wait_reduction_x']:.2f}x")
+        if "shard_decodes" in m:
+            bits.append(f"decodes={m['shard_decodes']:.0f}")
+        lines.append(f"  {rec['status']:5s} {rec['name']}: "
+                     + " ".join(bits))
+        for c in rec["checks"]:
+            if not c["passed"]:
+                lines.append(f"        FAIL {c['metric']}="
+                             f"{c['actual']} vs {c['kind']} {c['expect']}")
+    return lines
+
+
+def main(argv=None) -> int:
+    """CLI: ``python -m repro.bench.scheduling [--quick] [--out PATH]``."""
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.bench.scheduling",
+        description="Benchmark the scheduling-policy matrix (makespan, "
+                    "busy quantiles, prefetch wait); write "
+                    "BENCH_scheduling.json.")
+    ap.add_argument("--quick", action="store_true",
+                    help="run only the quick tier (the CI acceptance "
+                         "cells)")
+    ap.add_argument("--filter", action="append", default=[],
+                    metavar="SUBSTR")
+    ap.add_argument("--out", default="BENCH_scheduling.json",
+                    help="artifact path ('-' for stdout only)")
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for sc in scheduling_scenarios():
+            if sc.matches(args.filter) and (not args.quick
+                                            or sc.tier == "quick"):
+                print(f"{sc.tier:5s} {sc.group:18s} {sc.name} "
+                      f"[{len(sc.checks)} checks]")
+        return 0
+
+    if not any(sc.matches(args.filter) and (not args.quick
+                                            or sc.tier == "quick")
+               for sc in scheduling_scenarios()):
+        print("no scheduling scenarios match", file=sys.stderr)
+        return 1
+
+    def progress(rec):
+        print(f"  {rec['status']:5s} {rec['name']} "
+              f"({rec['timing']['wall_s']:.2f}s)", flush=True)
+
+    doc = run_scheduling_campaign(quick=args.quick, filters=args.filter,
+                                  seed=args.seed, progress=progress)
+    if args.out != "-":
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    for line in scheduling_summary_lines(doc):
+        print(line)
+    return 1 if (doc["summary"]["fail"] or doc["summary"]["error"]) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

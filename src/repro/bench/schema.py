@@ -19,6 +19,12 @@ Three artifact kinds share the scenario-record shape:
     fraction, bitwise feed equality and rebuild determinism.  Storage
     records use a source x phase x prefetch x consume ``spec.run``
     shape.
+  * ``BENCH_scheduling.json`` (``repro.bench.scheduling/v1``) —
+    scheduling-policy records from ``benchmarks/scheduling_bench.py``:
+    makespan + worker-busy quantiles per policy x dataset x
+    fault-profile x backend, and prefetch-wait attribution for the
+    store-backed shard-affinity cells.  Scheduling records use a
+    policy x dataset x fault-profile x backend ``spec.run`` shape.
 
 Scenario record layout::
 
@@ -46,16 +52,18 @@ import json
 from typing import Any
 
 __all__ = ["CAMPAIGN_SCHEMA", "SMOKE_SCHEMA", "KERNELS_SCHEMA",
-           "STORAGE_SCHEMA", "SCHEMA_VERSION",
+           "STORAGE_SCHEMA", "SCHEDULING_SCHEMA", "SCHEMA_VERSION",
            "NONDETERMINISTIC_RECORD_KEYS", "NONDETERMINISTIC_DOC_KEYS",
            "validate_record", "validate_campaign", "validate_smoke",
-           "validate_kernels", "validate_storage", "canonical_bytes"]
+           "validate_kernels", "validate_storage", "validate_scheduling",
+           "canonical_bytes"]
 
 SCHEMA_VERSION = 1
 CAMPAIGN_SCHEMA = "repro.bench.campaign/v1"
 SMOKE_SCHEMA = "repro.bench.smoke/v1"
 KERNELS_SCHEMA = "repro.bench.kernels/v1"
 STORAGE_SCHEMA = "repro.bench.storage/v1"
+SCHEDULING_SCHEMA = "repro.bench.scheduling/v1"
 
 NONDETERMINISTIC_RECORD_KEYS = ("measured", "timing")
 NONDETERMINISTIC_DOC_KEYS = ("created_at", "environment", "timing")
@@ -78,6 +86,15 @@ _KERNEL_METRICS_REQUIRED = ("n_segments", "padded_fraction",
 _STORAGE_SPEC_REQUIRED = ("source", "phase", "prefetch", "consume",
                           "workload", "n_archives", "seed")
 _STORAGE_METRICS_REQUIRED = ("n_tracks", "n_points", "bytes_on_disk")
+# Scheduling-bench records describe a policy cell: policy x dataset x
+# fault profile x backend.  makespan_seconds lives under ``metrics`` on
+# the sim backend (deterministic) and ``measured`` on live backends;
+# the validator merges both, so one requirement covers both kinds.
+_SCHEDULING_SPEC_REQUIRED = ("policy", "dataset", "backend", "n_workers",
+                             "organization", "tasks_per_message",
+                             "fault_profile", "seed")
+_SCHEDULING_METRICS_REQUIRED = ("tasks_completed", "messages_sent",
+                                "makespan_seconds")
 
 
 def _num(x: Any) -> bool:
@@ -240,6 +257,14 @@ def validate_storage(doc: Any) -> list[str]:
         doc, label="storage", schema=STORAGE_SCHEMA,
         spec_required=_STORAGE_SPEC_REQUIRED,
         required_metrics=_STORAGE_METRICS_REQUIRED)
+
+
+def validate_scheduling(doc: Any) -> list[str]:
+    """Structural validation of a BENCH_scheduling.json artifact."""
+    return _validate_matrix_doc(
+        doc, label="scheduling", schema=SCHEDULING_SCHEMA,
+        spec_required=_SCHEDULING_SPEC_REQUIRED,
+        required_metrics=_SCHEDULING_METRICS_REQUIRED)
 
 
 def validate_smoke(doc: Any) -> list[str]:

@@ -88,6 +88,24 @@ class PhaseCostModel:
         return self.task_overhead_s + base * (1.0 + self.contention_alpha
                                               * (nppn - 1))
 
+    def task_seconds(self, size_bytes: int, nppn: int = 1,
+                     cpu_cost_hint: float | None = None,
+                     nodes: int = 1) -> float:
+        """Isolated-task wall estimate: I/O demand at the *uncontended*
+        per-process rate plus the CPU phase.
+
+        This is the scheduling-heuristic view of a task (sized_lpt /
+        adaptive_chunk ordering keys — see repro.runtime.policies), not
+        a simulation: contention with other active tasks is exactly
+        what the discrete-event engine models and a dispatch-time
+        estimate cannot know.  Monotone in ``size_bytes`` for a fixed
+        model, so cost ordering agrees with largest-first when no
+        explicit ``cpu_cost_hint`` s are present.
+        """
+        rate = self.io_rate(1, max(nodes, 1), nppn)
+        io_s = self.io_bytes(size_bytes) / rate if rate > 0 else 0.0
+        return io_s + self.cpu_seconds(size_bytes, nppn, cpu_cost_hint)
+
     def io_rate(self, n_active: int, nodes: int, nppn: int = 1) -> float:
         """Equal-share instantaneous per-task I/O rate."""
         r_p = self.r_process / (1.0 + self.io_contention_alpha * (nppn - 1))

@@ -78,6 +78,12 @@ class Message:
     # memory, so the same message works across threads AND processes.
     results: tuple[Any, ...] = ()
     busy_seconds: float = 0.0
+    # Seconds of busy_seconds the worker spent *waiting on its feed*
+    # (e.g. the store reader's decode/prefetch wait) rather than
+    # computing — reported by worker fns exposing ``take_wait_s()`` and
+    # surfaced per worker in RunResult so BENCH artifacts can attribute
+    # time to scheduling vs I/O.
+    wait_seconds: float = 0.0
     error: Optional[str] = None
     sent_at: float = dataclasses.field(default_factory=time.monotonic)
 

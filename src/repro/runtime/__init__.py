@@ -8,11 +8,16 @@ One self-scheduling core (protocol.SchedulerCore) over three backends:
   * sim        — the calibrated discrete-event engine at full LLSC scale
                  (sim.simulate_self_scheduling)
 
-Entry point: :func:`run_job`.  The legacy modules ``repro.core.selfsched``
-and ``repro.core.simulator`` are thin wrappers over this package.
+Entry point: :func:`run_job`.  Dispatch order and batch size come from a
+pluggable :class:`~repro.runtime.policies.SchedulingPolicy`
+(``run_job(..., policy=...)``; see :data:`~repro.runtime.policies.POLICY_NAMES`).
+The legacy modules ``repro.core.selfsched`` and ``repro.core.simulator``
+are thin wrappers over this package.
 """
 
 from repro.runtime.result import RunResult, SimTaskRecord, WorkerStats
+from repro.runtime.policies import (
+    POLICIES, POLICY_NAMES, SchedulingPolicy, get_policy)
 from repro.runtime.protocol import (
     DEFAULT_POLL_INTERVAL_S, ManagerCheckpoint, SchedulerCore, drive)
 from repro.runtime.transports import (
@@ -24,8 +29,9 @@ from repro.runtime.api import BACKENDS, run_job
 
 __all__ = [
     "BACKENDS", "DEFAULT_POLL_INTERVAL_S", "DEFAULT_POLL_S",
-    "ManagerCheckpoint", "ProcessTransport", "RunResult", "SchedulerCore",
-    "SimTaskRecord", "ThreadTransport", "Transport", "WorkerStats",
-    "drive", "merge_tasks_per_message", "run_job",
-    "simulate_self_scheduling", "simulate_static", "worker_loop",
+    "ManagerCheckpoint", "POLICIES", "POLICY_NAMES", "ProcessTransport",
+    "RunResult", "SchedulerCore", "SchedulingPolicy", "SimTaskRecord",
+    "ThreadTransport", "Transport", "WorkerStats", "drive", "get_policy",
+    "merge_tasks_per_message", "run_job", "simulate_self_scheduling",
+    "simulate_static", "worker_loop",
 ]

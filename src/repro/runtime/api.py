@@ -27,6 +27,7 @@ from __future__ import annotations
 from typing import Any, Callable, Optional, Sequence
 
 from repro.core.messages import Task
+from repro.runtime.policies import get_policy, model_task_cost
 from repro.runtime.protocol import (
     DEFAULT_POLL_INTERVAL_S, ManagerCheckpoint, SchedulerCore, drive)
 from repro.runtime.result import RunResult
@@ -54,6 +55,7 @@ def run_job(tasks: Sequence[Task],
             triple: Optional[Any] = None,
             organization: str = "largest_first",
             tasks_per_message: int = 1,
+            policy: Optional[Any] = None,
             poll_interval: float = DEFAULT_POLL_INTERVAL_S,
             failure_timeout: Optional[float] = None,
             checkpoint: Optional[ManagerCheckpoint] = None,
@@ -63,7 +65,8 @@ def run_job(tasks: Sequence[Task],
             batch_fn: Optional[Callable[[list[Task]], dict]] = None,
             raise_on_failure: bool = True,
             worker_fail_after: Optional[dict[str, int]] = None,
-            # sim-backend knobs
+            # cost model: sim timing AND the cost-aware policies' task
+            # estimates (all backends); remaining knobs are sim-only
             cost_model: Optional[Any] = None,
             nodes: Optional[int] = None,
             nppn: Optional[int] = None,
@@ -88,6 +91,17 @@ def run_job(tasks: Sequence[Task],
     fires on wall-clock intervals and therefore applies to the live
     backends only; the sim backend ignores it (simulated jobs rebuild
     from their task list, not from mid-run state).
+
+    ``policy`` selects the scheduling policy (a name from
+    :data:`repro.runtime.policies.POLICY_NAMES` or a configured
+    :class:`~repro.runtime.policies.SchedulingPolicy` instance) with
+    identical semantics on all three backends; the default ``static``
+    keeps the historical organizer-order fixed-batch dispatch bitwise.
+    Cost-aware policies (``sized_lpt``, ``adaptive_chunk``) estimate
+    per-task seconds from ``cost_model`` (default: the §IV.C process
+    phase) at the job's topology — on EVERY backend, so a fixed job
+    spec orders and chunks identically whether it runs live or
+    simulated.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
@@ -104,15 +118,25 @@ def run_job(tasks: Sequence[Task],
     if n_workers < 1:
         raise ValueError("need at least one worker")
 
+    default_nodes, default_nppn = default_topology(n_workers)
+    if cost_model is None:
+        from repro.core.cost_model import PROCESS_PHASE
+        cost_model = PROCESS_PHASE
+    # One cost estimator for all backends: dispatch decisions must not
+    # depend on where the job runs (the cross-backend bit-identical
+    # dispatch contract covers the cost-aware policies too).
+    cost_fn = model_task_cost(
+        cost_model,
+        nppn=nppn if nppn is not None else default_nppn,
+        nodes=nodes if nodes is not None else default_nodes)
+    policy_obj = get_policy(policy, tasks_per_message=tasks_per_message,
+                            n_workers=n_workers, cost_fn=cost_fn)
     core = SchedulerCore(tasks, organization=organization,
                          tasks_per_message=tasks_per_message,
-                         checkpoint=checkpoint, organize_seed=organize_seed)
+                         checkpoint=checkpoint, organize_seed=organize_seed,
+                         policy=policy_obj, n_workers=n_workers)
 
     if backend == "sim":
-        if cost_model is None:
-            from repro.core.cost_model import PROCESS_PHASE
-            cost_model = PROCESS_PHASE
-        default_nodes, default_nppn = default_topology(n_workers)
         result = _sim.simulate_self_scheduling(
             list(tasks),
             n_workers=n_workers,

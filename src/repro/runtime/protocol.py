@@ -5,28 +5,32 @@ The paper's protocol (§II.D) used to be implemented three separate times
 is the single source of truth for every *decision* the managing process
 makes; the backends supply only the physics of message delivery:
 
-  * :class:`SchedulerCore` — dispatch/batching (tasks-per-message, Fig 7),
-    exactly-once accounting by task id, failure detection + largest-first
-    re-queue, and checkpoint serialization.  Driven by the threads and
-    processes transports (transports.py) and by the discrete-event engine
-    (sim.py), so all three backends make bit-identical batching decisions.
+  * :class:`SchedulerCore` — exactly-once accounting by task id, failure
+    detection + re-queue, and checkpoint serialization.  Dispatch order
+    and batch size are delegated to a pluggable
+    :class:`~repro.runtime.policies.SchedulingPolicy` (default
+    ``static`` = the paper baseline: organizer order, fixed
+    tasks-per-message — Fig 7).  Driven by the threads and processes
+    transports (transports.py) and by the discrete-event engine
+    (sim.py), so all three backends make bit-identical batching
+    decisions for any order-based policy.
   * :func:`drive` — the real-time manager loop of §II.D (eager initial
     allocation, drain-then-poll, 0.3 s default poll) run against any
     :class:`~repro.runtime.transports.Transport`.
 
-Perf note: ``pending`` is a :class:`collections.deque` and per-worker
-in-flight sets are ``set``s — the previous list-based manager paid
-O(n²) ``list.pop(0)`` across a job (see benchmarks/dispatch_bench.py).
+Perf note: the policy queues are :class:`collections.deque` s and
+per-worker in-flight sets are ``set``s — the previous list-based manager
+paid O(n²) ``list.pop(0)`` across a job (see benchmarks/dispatch_bench.py).
 """
 
 from __future__ import annotations
 
 import json
 import time
-from collections import deque
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence, Union
 
 from repro.core.messages import Message, MessageKind, Task, get_organizer
+from repro.runtime.policies import SchedulingPolicy, get_policy
 from repro.runtime.result import RunResult, WorkerStats
 
 DEFAULT_POLL_INTERVAL_S = 0.3
@@ -38,25 +42,59 @@ __all__ = ["DEFAULT_POLL_INTERVAL_S", "ManagerCheckpoint", "SchedulerCore",
 class ManagerCheckpoint:
     """JSON-serializable manager state for restart (beyond-paper).
 
-    Restart consumes only ``completed``: the restored scheduler rebuilds
-    its queue from the full task list minus the completed ids, so
-    in-flight tasks at checkpoint time are re-run.  ``pending_ids`` is
-    written for observability (how much was left) — edits to it are not
-    read back.
+    Restart consumes ``completed`` (the restored scheduler rebuilds its
+    queue from the full task list minus the completed ids, so in-flight
+    tasks at checkpoint time are re-run) and ``policy_state`` (the
+    scheduling policy's mid-run state — e.g. ``adaptive_chunk``'s open
+    round — so a resume continues the chunk schedule instead of
+    resetting it).  ``pending_ids`` is written for observability (how
+    much was left) — edits to it are not read back.  Checkpoints
+    written before the policy layer existed load fine (``policy_state``
+    defaults to None).
     """
 
-    def __init__(self, completed: set, pending_ids: list):
+    def __init__(self, completed: set, pending_ids: list,
+                 policy_state: Optional[dict] = None):
         self.completed = set(completed)
         self.pending_ids = list(pending_ids)
+        self.policy_state = (dict(policy_state)
+                             if policy_state is not None else None)
 
     def dumps(self) -> str:
-        return json.dumps({"completed": sorted(self.completed),
-                           "pending": self.pending_ids})
+        doc: dict = {"completed": sorted(self.completed),
+                     "pending": self.pending_ids}
+        if self.policy_state is not None:
+            doc["policy"] = self.policy_state
+        return json.dumps(doc)
 
     @classmethod
     def loads(cls, s: str) -> "ManagerCheckpoint":
         d = json.loads(s)
-        return cls(set(d["completed"]), list(d["pending"]))
+        return cls(set(d["completed"]), list(d["pending"]),
+                   policy_state=d.get("policy"))
+
+
+class _PendingView:
+    """Deque-ish read view over the policy's queue (the policy owns the
+    storage; callers keep using ``core.pending`` for truthiness, length,
+    and iteration exactly as when it was a plain deque)."""
+
+    __slots__ = ("_policy",)
+
+    def __init__(self, policy: SchedulingPolicy):
+        self._policy = policy
+
+    def __len__(self) -> int:
+        return self._policy.pending_count()
+
+    def __bool__(self) -> bool:
+        return self._policy.pending_count() > 0
+
+    def __iter__(self):
+        return iter(self._policy.pending_tasks())
+
+    def __repr__(self) -> str:
+        return f"<pending {len(self)} tasks>"
 
 
 class SchedulerCore:
@@ -71,7 +109,9 @@ class SchedulerCore:
                  organization: str = "largest_first",
                  tasks_per_message: int = 1,
                  checkpoint: Optional[ManagerCheckpoint] = None,
-                 organize_seed: int = 0):
+                 organize_seed: int = 0,
+                 policy: Union[str, SchedulingPolicy, None] = None,
+                 n_workers: Optional[int] = None):
         if tasks_per_message < 1:
             raise ValueError("tasks_per_message must be >= 1")
         organizer = get_organizer(organization)
@@ -87,7 +127,11 @@ class SchedulerCore:
         if checkpoint is not None:
             self.completed |= checkpoint.completed & set(self._by_id)
             ordered = [t for t in ordered if t.task_id not in self.completed]
-        self.pending: deque[Task] = deque(ordered)
+        self.policy = get_policy(policy, tasks_per_message=tasks_per_message,
+                                 n_workers=n_workers)
+        self.policy.initialize(ordered)
+        if checkpoint is not None and checkpoint.policy_state is not None:
+            self.policy.restore(checkpoint.policy_state)
         self.in_flight: dict[Any, set[str]] = {}
         self.dead: set = set()
         self.failures: dict[str, str] = {}
@@ -96,6 +140,17 @@ class SchedulerCore:
         self.batches: list[tuple[str, ...]] = []
 
     # -- queries -----------------------------------------------------------
+
+    @property
+    def pending(self) -> _PendingView:
+        """The policy-owned queue, as a deque-ish view (len/bool/iter)."""
+        return _PendingView(self.policy)
+
+    @pending.setter
+    def pending(self, value: Sequence[Task]) -> None:
+        """Replace the queue wholesale (checkpoint surgery in tests/tools);
+        the policy re-applies its own ordering to the new contents."""
+        self.policy.initialize(list(value))
 
     @property
     def total(self) -> int:
@@ -114,15 +169,10 @@ class SchedulerCore:
     # -- protocol events ---------------------------------------------------
 
     def next_batch(self, worker: Any) -> tuple[Task, ...]:
-        """Pop up to tasks_per_message pending tasks for one ASSIGN."""
+        """The scheduling policy's next ASSIGN batch for ``worker``."""
         if worker in self.dead:
             return ()
-        batch: list[Task] = []
-        while self.pending and len(batch) < self.tasks_per_message:
-            t = self.pending.popleft()
-            if t.task_id in self.completed:   # stale re-queue of a late DONE
-                continue
-            batch.append(t)
+        batch = self.policy.select(self, worker)
         if not batch:
             return ()
         ids = tuple(t.task_id for t in batch)
@@ -155,13 +205,16 @@ class SchedulerCore:
 
     def mark_dead(self, worker: Any) -> list[Task]:
         """Declare a worker dead and re-queue its in-flight tasks,
-        largest-first, ahead of the rest of the queue.  Idempotent."""
+        largest-first, ahead of the rest of the queue (the policy may
+        refine placement — e.g. shard_affinity re-inserts each task at
+        the front of its locality run).  Idempotent."""
         self.dead.add(worker)
+        self.policy.release(worker)
         ids = self.in_flight.pop(worker, set())
         requeue = [self._by_id[tid] for tid in ids
                    if tid not in self.completed and tid not in self.failures]
         requeue.sort(key=lambda t: (-t.size_bytes, t.task_id))
-        self.pending.extendleft(reversed(requeue))
+        self.policy.requeue(requeue)
         self.reassigned += len(requeue)
         return requeue
 
@@ -169,7 +222,8 @@ class SchedulerCore:
 
     def checkpoint(self) -> ManagerCheckpoint:
         return ManagerCheckpoint(
-            set(self.completed), [t.task_id for t in self.pending])
+            set(self.completed), [t.task_id for t in self.pending],
+            policy_state=self.policy.state())
 
 
 def drive(core: SchedulerCore, transport, *,
@@ -228,6 +282,7 @@ def drive(core: SchedulerCore, transport, *,
                     s = stats[msg.sender]
                     s.tasks_completed += len(fresh)
                     s.busy_seconds += msg.busy_seconds
+                    s.wait_seconds += msg.wait_seconds
                     prev = (s.last_done_at if s.last_done_at is not None
                             else t_start)
                     s.idle_seconds += max(0.0, (now - prev)

@@ -31,6 +31,11 @@ class WorkerStats:
     tasks_completed: int = 0
     busy_seconds: float = 0.0
     idle_seconds: float = 0.0
+    # Portion of busy_seconds spent waiting on the task *feed* rather
+    # than computing: live backends fill it from DONE messages (worker
+    # fns exposing take_wait_s(), e.g. the store reader's decode wait);
+    # the sim backend fills it with the task's I/O-phase seconds.
+    wait_seconds: float = 0.0
     first_task_at: Optional[float] = None
     last_done_at: Optional[float] = None
 
@@ -94,6 +99,11 @@ class RunResult:
         return [s.span_seconds for s in self.worker_stats.values()]
 
     @property
+    def worker_wait(self) -> list[float]:
+        """Per-worker feed-wait seconds, in worker order."""
+        return [s.wait_seconds for s in self.worker_stats.values()]
+
+    @property
     def dead_workers(self) -> list:
         return self.failed_workers
 
@@ -127,18 +137,44 @@ class RunResult:
             h.update(b"\n")
         return h.hexdigest()
 
-    def busy_quantiles(self, qs=BUSY_QUANTILES) -> dict[str, float]:
-        """Quantiles of per-worker busy seconds (workers that ran >0 s)."""
-        xs = sorted(b for b in self.worker_busy if b > 0)
+    @staticmethod
+    def _quantiles(xs: list, qs) -> dict[str, float]:
+        xs = sorted(xs)
         if not xs:
             return {f"p{int(q * 100)}": 0.0 for q in qs}
         out = {}
         for q in qs:
-            # Nearest-rank on the sorted busy times: index-arithmetic only,
+            # Nearest-rank on the sorted values: index-arithmetic only,
             # so the values are bit-reproducible across platforms.
             i = min(int(q * (len(xs) - 1) + 0.5), len(xs) - 1)
             out[f"p{int(q * 100)}"] = xs[i]
         return out
+
+    def busy_quantiles(self, qs=BUSY_QUANTILES) -> dict[str, float]:
+        """Quantiles of per-worker busy seconds (workers that ran >0 s)."""
+        return self._quantiles([b for b in self.worker_busy if b > 0], qs)
+
+    def wait_quantiles(self, qs=BUSY_QUANTILES) -> dict[str, float]:
+        """Quantiles of per-worker feed-wait seconds (workers that ran)."""
+        return self._quantiles(
+            [s.wait_seconds for s in self.worker_stats.values()
+             if s.busy_seconds > 0], qs)
+
+    def worker_breakdown(self) -> dict[str, dict[str, float]]:
+        """Per-worker busy/idle/wait attribution, keyed by worker id.
+
+        ``busy_s`` includes ``wait_s`` (a worker stalled on its feed is
+        occupied, not idle); ``idle_s`` is time between DONEs not
+        covered by reported busy time — i.e. scheduling/poll latency.
+        """
+        return {
+            str(s.worker_id): {
+                "tasks": s.tasks_completed,
+                "busy_s": s.busy_seconds,
+                "idle_s": s.idle_seconds,
+                "wait_s": s.wait_seconds,
+            }
+            for s in self.worker_stats.values()}
 
     def to_record(self) -> dict[str, Any]:
         """Flat JSON-able summary of the run for BENCH artifacts.
@@ -167,4 +203,11 @@ class RunResult:
             "median_worker_busy_s": self.median_worker_busy,
             "worker_time_span_s": self.worker_time_span,
             "worker_busy_quantiles_s": self.busy_quantiles(),
+            "wait_total_s": sum(self.worker_wait),
+            "worker_wait_quantiles_s": self.wait_quantiles(),
+            # Full per-worker attribution only at benchmarkable worker
+            # counts — a 2047-worker sim sweep would bloat every BENCH
+            # record; the quantiles above always summarize the fleet.
+            **({"worker_breakdown": self.worker_breakdown()}
+               if 0 < len(self.worker_stats) <= 64 else {}),
         }

@@ -104,6 +104,7 @@ class _Sim:
         # Workers.
         self.inflight: list[list[int]] = [[] for _ in range(n_workers)]
         self.batch_pos: list[int] = [0] * n_workers
+        self.io_wait: list[float] = [0.0] * n_workers
         self.cur_task: list[Optional[int]] = [None] * n_workers
         self.in_io: list[bool] = [False] * n_workers
         self.dead: list[bool] = [False] * n_workers
@@ -202,6 +203,9 @@ class _Sim:
     def _io_done(self, worker: int) -> None:
         self.n_io -= 1
         self.in_io[worker] = False
+        # The I/O phase is the worker waiting on its feed: attribute it
+        # to wait_seconds so BENCH records split busy into compute vs I/O.
+        self.io_wait[worker] += self.now - self.task_start[worker]
         idx = self.cur_task[worker]
         assert idx is not None
         t = self.tasks[idx]
@@ -289,7 +293,19 @@ class _Sim:
         static = self._static
         n_total = len(self.tasks)
         dead_workers: list[int] = []
-        while self.completed + len(self.failed_tasks) < n_total:
+
+        def running() -> bool:
+            # Dynamic jobs end when the MANAGER's ledger is complete, not
+            # when the last worker-side copy finishes: a worker that dies
+            # mid-batch after completing a task but before its per-batch
+            # DONE leaves the manager unaware, and the job truly lasts
+            # until the re-dispatched copy reports (the live drive loop
+            # behaves exactly this way).  Static jobs have no manager.
+            if static:
+                return self.completed + len(self.failed_tasks) < n_total
+            return not self.core.done
+
+        while running():
             t_io = self._next_io_time()
             t_ev = self.events[0][0] if self.events else float("inf")
             if t_io == float("inf") and t_ev == float("inf"):
@@ -383,6 +399,7 @@ class _Sim:
                 tasks_completed=per_worker[w],
                 busy_seconds=self.busy[w],
                 idle_seconds=max(0.0, span - self.busy[w]),
+                wait_seconds=self.io_wait[w],
                 first_task_at=self.first_start[w],
                 last_done_at=(self.last_end[w]
                               if self.first_start[w] is not None else None))
@@ -430,12 +447,25 @@ def simulate_self_scheduling(
         worker_speed: Optional[Sequence[float]] = None,
         speculative: bool = False,
         organize_seed: int = 0,
+        policy: object = None,
         core: Optional[SchedulerCore] = None) -> RunResult:
-    """Simulate a triples-mode self-scheduled job (the paper's §II.D)."""
+    """Simulate a triples-mode self-scheduled job (the paper's §II.D).
+
+    ``policy`` selects the scheduling policy (name or instance, see
+    :mod:`repro.runtime.policies`); cost-aware policies estimate task
+    seconds from ``model`` at this topology.  Ignored when an
+    already-built ``core`` is supplied (run_job resolves it there).
+    """
     if core is None:
+        from repro.runtime.policies import get_policy, model_task_cost
+        pol = get_policy(policy, tasks_per_message=tasks_per_message,
+                         n_workers=n_workers,
+                         cost_fn=model_task_cost(model, nppn=nppn,
+                                                 nodes=nodes))
         core = SchedulerCore(tasks, organization=organization,
                              tasks_per_message=tasks_per_message,
-                             organize_seed=organize_seed)
+                             organize_seed=organize_seed,
+                             policy=pol, n_workers=n_workers)
     sim = _Sim(tasks, n_workers, nodes, nppn, model,
                poll_interval, worker_death, failure_timeout, core=core,
                legacy_launch_penalty=legacy_launch_penalty,

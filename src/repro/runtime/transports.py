@@ -118,10 +118,17 @@ def _worker_recv_loop(worker_id, inbox, to_manager, fn, batch_fn,
                 res.append(r)
                 completed += 1
         if done_ids:
+            # Worker fns may expose take_wait_s() (return-and-reset feed
+            # wait accumulated in THIS thread/process, e.g. store decode
+            # stalls); it rides back in the DONE so the manager can split
+            # busy time into compute vs I/O wait.
+            take_wait = getattr(fn, "take_wait_s", None)
+            wait_s = float(take_wait()) if take_wait is not None else 0.0
             to_manager(Message(
                 MessageKind.DONE, sender=worker_id,
                 task_ids=tuple(done_ids), results=tuple(res),
-                busy_seconds=time.monotonic() - t0))
+                busy_seconds=time.monotonic() - t0,
+                wait_seconds=wait_s))
 
 
 class Transport(abc.ABC):

@@ -201,6 +201,28 @@ class StoreManifest:
     def size_bytes(self) -> int:
         return sum(s.size_bytes for s in self.shards)
 
+    def row_range_bytes(self, shard_id: str, lo: int = 0,
+                        hi: Optional[int] = None) -> int:
+        """Encoded-byte estimate for rows ``[lo, hi)`` of a shard,
+        computed purely from the index (no payload reads): the shard's
+        on-disk size prorated by the range's share of observation
+        points.  This is how row-range ``store://`` tasks get the size
+        signal that largest-first organization and the cost-aware
+        scheduling policies (sized_lpt / adaptive_chunk) key on.
+        """
+        shard = self.shard(shard_id)
+        rows = self.tracks_in(shard_id)
+        if hi is None:
+            hi = len(rows)
+        if not (0 <= lo <= hi <= len(rows)):
+            raise ValueError(f"row range {lo}:{hi} out of bounds for "
+                             f"{len(rows)} rows in shard {shard_id!r}")
+        total = sum(t.n_obs for t in rows)
+        if total <= 0:
+            return 0
+        part = sum(t.n_obs for t in rows[lo:hi])
+        return int(round(shard.size_bytes * (part / total)))
+
     def bucket_histogram(self, tracks: Optional[list[TrackRecord]] = None
                          ) -> dict[int, int]:
         """Segment count per fused-pipeline bucket width, computed purely

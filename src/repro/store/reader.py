@@ -230,6 +230,23 @@ class TrackStore:
         assert batch.track_ids == [t.track_id]
         return batch.items[0][0]
 
+    def read_shard_batch(self, shard_id: str) -> ShardBatch:
+        """Decode ONE whole shard into a :class:`ShardBatch` (items in
+        row order, so ``items[a:b]`` is the ``rows=a:b`` selection).
+
+        This is the decode a shard-affinity consumer caches: serve every
+        row-range task of the shard from one decoded batch, re-decoding
+        only when the scheduler moves the worker to another shard.
+        """
+        rows = self._shard_rows(shard_id)
+        if not rows:
+            raise KeyError(f"shard {shard_id!r} has no rows in store "
+                           f"{self.root}")
+        plan = ReadPlan(
+            shard=self._shards_by_id[shard_id], tracks=tuple(rows),
+            bucket_histogram=self.manifest.bucket_histogram(list(rows)))
+        return self._decode_shard(plan)
+
     def read_selection(self, sel: dict[str, str]
                        ) -> list[tuple[str, dict, list[slice]]]:
         """One selector -> [(track_id, obs, segs)] in plan order."""

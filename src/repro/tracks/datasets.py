@@ -197,6 +197,32 @@ def smoke_manifest(n: int = 200, seed: int = 0) -> list[Task]:
             for i in range(n)]
 
 
+def heavy_tail_manifest(n: int = 20_000, seed: int = 5) -> list[Task]:
+    """Many small tasks under a heavy Pareto tail (beyond-paper).
+
+    The scheduling-policy bench's acceptance dataset: the §V radar
+    regime (so many sub-second-to-seconds tasks that per-message
+    overhead and the manager's serial send matter at
+    ``tasks_per_message=1``) crossed with the aerodrome datasets'
+    heavy-tailed size mix (Fig 3 "sloping": a few tasks hundreds of
+    times the median).  Pareto(1.6) compute hints put the largest task
+    near ``total/P`` for the bench's worker counts, which is the regime
+    where dispatch ORDER (sized_lpt) and cost-budgeted chunking
+    (adaptive_chunk) each separate from naive FIFO dispatch — exactly
+    the gap the companion 2020 HPC paper measured behind stragglers.
+    Task order is shuffled (timestamps are a random permutation), so
+    chronological organization models an arrival stream with no
+    helpful accidental ordering.
+    """
+    rng = np.random.default_rng(seed)
+    cpu = 0.35 + rng.pareto(1.6, size=n) * 1.9           # seconds
+    sizes = (cpu / cpu.mean()) * 260_000                  # bytes ~ cpu
+    order = rng.permutation(n)
+    return [Task(task_id=f"ht/t{i:06d}", size_bytes=max(int(s), 1_000),
+                 timestamp=float(order[i]), cpu_cost_hint=float(c))
+            for i, (s, c) in enumerate(zip(sizes, cpu))]
+
+
 def tiny_task_manifest(n: int = 131_400, seed: int = 0) -> list[Task]:
     """Radar-like tiny-uniform tasks at reduced count (beyond-paper).
 
@@ -222,6 +248,7 @@ MANIFESTS = {
     "archive": aircraft_archive_manifest,
     "processing": processing_manifest,
     "smoke": smoke_manifest,
+    "heavy_tail": heavy_tail_manifest,
     "tiny": tiny_task_manifest,
 }
 

@@ -645,7 +645,8 @@ _STORE_BYTES_PER_POINT = 36
 
 
 def segment_tasks_from_store(store_root: str,
-                             granularity: str = "shard") -> list[Task]:
+                             granularity: str = "shard",
+                             rows_per_task: int = 4) -> list[Task]:
     """Store-backed processing tasks, sized from the index alone.
 
     ``granularity='shard'``: one Task per shard — a worker's ASSIGN
@@ -654,11 +655,16 @@ def segment_tasks_from_store(store_root: str,
     Task per track — drop-in parity with
     :func:`segment_tasks_from_archive_tree` task ids (the golden
     store-vs-zip equivalence tests rely on that).
+    ``granularity='rows'``: one Task per ``rows_per_task`` consecutive
+    rows of a shard (``store://...#shard=<id>&rows=a:b`` payloads),
+    sized via :meth:`repro.store.format.StoreManifest.row_range_bytes`
+    — the grain the ``shard_affinity`` scheduling policy groups by, so
+    one worker streams a shard's ranges back-to-back off one decode.
     """
     from repro.store.format import StoreManifest
     from repro.store.reader import make_store_uri
 
-    if granularity not in ("shard", "track"):
+    if granularity not in ("shard", "track", "rows"):
         raise ValueError(f"unknown granularity {granularity!r}")
     manifest = StoreManifest.load(store_root)
     tasks = []
@@ -668,6 +674,18 @@ def segment_tasks_from_store(store_root: str,
                 task_id=f"store/{s.shard_id}",
                 size_bytes=s.n_points * _STORE_BYTES_PER_POINT,
                 payload=make_store_uri(store_root, shard=s.shard_id)))
+    elif granularity == "rows":
+        if rows_per_task < 1:
+            raise ValueError("rows_per_task must be >= 1")
+        for s in manifest.shards:
+            n_rows = len(manifest.tracks_in(s.shard_id))
+            for a in range(0, n_rows, rows_per_task):
+                b = min(a + rows_per_task, n_rows)
+                tasks.append(Task(
+                    task_id=f"store/{s.shard_id}/r{a:05d}",
+                    size_bytes=manifest.row_range_bytes(s.shard_id, a, b),
+                    payload=make_store_uri(store_root, shard=s.shard_id,
+                                           rows=f"{a}:{b}")))
     else:
         for t in manifest.tracks:
             tasks.append(Task(

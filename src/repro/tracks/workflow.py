@@ -68,6 +68,7 @@ class TrackWorkflow:
                  pipeline: str = "fused",
                  exec_backend: str = "threads",
                  tasks_per_message: int = 1,
+                 policy: str = "static",
                  checkpoint_interval_s: float = 0.5,
                  triple: Optional[TriplesConfig] = None,
                  input: str = "zip",
@@ -82,6 +83,10 @@ class TrackWorkflow:
             raise ValueError(f"unknown input {input!r}; 'zip' processes "
                              f"archives directly, 'store' inserts a "
                              f"store-build phase")
+        from repro.runtime.policies import POLICY_NAMES
+        if policy not in POLICY_NAMES:
+            raise ValueError(f"unknown scheduling policy {policy!r}; "
+                             f"choose from {list(POLICY_NAMES)}")
         self.root = root
         self.raw_dir = os.path.join(root, "raw")
         self.organized_dir = os.path.join(root, "organized")
@@ -98,6 +103,7 @@ class TrackWorkflow:
         self.pipeline = pipeline
         self.exec_backend = exec_backend
         self.tasks_per_message = tasks_per_message
+        self.policy = policy
         self.checkpoint_interval_s = checkpoint_interval_s
         self.seed = seed
         self.registry = synthetic_registry(n=2000, seed=seed + 13)
@@ -142,6 +148,9 @@ class TrackWorkflow:
             mid["manager_phase"] = phase
             self._save_ckpt(mid)
 
+        # One scheduling policy drives every phase; the mid-phase
+        # checkpoint carries its state (e.g. adaptive_chunk's open
+        # round), so a kill-and-restart resumes the chunk schedule.
         result = run_job(
             tasks, fn,
             backend=self.exec_backend,
@@ -150,6 +159,7 @@ class TrackWorkflow:
             tasks_per_message=(tasks_per_message
                                if tasks_per_message is not None
                                else self.tasks_per_message),
+            policy=self.policy,
             poll_interval=self.poll_interval,
             checkpoint=ck,
             on_checkpoint=save_mid_phase,
@@ -247,6 +257,10 @@ def main() -> None:
     ap.add_argument("--files", type=int, default=8)
     ap.add_argument("--scale", type=float, default=2e4)
     ap.add_argument("--tasks-per-message", type=int, default=4)
+    ap.add_argument("--policy", default="static",
+                    help="scheduling policy for every self-scheduled "
+                         "phase (static | fifo_selfsched | sized_lpt | "
+                         "adaptive_chunk | shard_affinity)")
     ap.add_argument("--pipeline", default="fused",
                     choices=["fused", "unfused"],
                     help="segment hot path: fused device-resident "
@@ -268,6 +282,7 @@ def main() -> None:
                        exec_backend=args.backend,
                        pipeline=args.pipeline,
                        tasks_per_message=args.tasks_per_message,
+                       policy=args.policy,
                        poll_interval=0.005, triple=triple,
                        input=args.input,
                        store_target_points=args.store_target_points)

@@ -1,0 +1,153 @@
+"""Tests for the scheduling-policy benchmark matrix + artifact tooling.
+
+The quick tier IS the ISSUE-5 acceptance cell set, so running it here
+(and asserting every cell passes) keeps the CI gate honest locally:
+adaptive_chunk and sized_lpt >= 1.3x static makespan on the heavy-tail
+dataset under 20 % worker deaths, and shard_affinity cutting measured
+prefetch wait vs fifo_selfsched on the store-backed feed.  Also covers
+schema validation, deterministic re-runs of the sim cells, and the
+compare CLI's schema dispatch (makespan_seconds gated, schema mismatch
+exit-1).
+"""
+
+import copy
+import json
+
+import pytest
+
+from repro.bench import scheduling as sched
+from repro.bench.compare import compare_docs, default_metric
+from repro.bench.compare import main as compare_main
+from repro.bench.schema import (
+    SCHEDULING_SCHEMA, canonical_bytes, validate_scheduling)
+
+
+@pytest.fixture(scope="module")
+def quick_doc():
+    return sched.run_scheduling_campaign(quick=True)
+
+
+def test_quick_tier_is_the_acceptance_cells(quick_doc):
+    names = {r["name"] for r in quick_doc["scenarios"]}
+    assert names == {"sched_heavy_tail_deaths20_adaptive_chunk",
+                     "sched_heavy_tail_deaths20_sized_lpt",
+                     "sched_store_affinity_prefetch_wait"}
+
+
+def test_quick_tier_passes_and_validates(quick_doc):
+    assert validate_scheduling(quick_doc) == []
+    assert quick_doc["summary"]["fail"] == 0
+    assert quick_doc["summary"]["error"] == 0
+    by_name = {r["name"]: r for r in quick_doc["scenarios"]}
+    adaptive = by_name["sched_heavy_tail_deaths20_adaptive_chunk"]
+    lpt = by_name["sched_heavy_tail_deaths20_sized_lpt"]
+    assert adaptive["metrics"]["makespan_speedup_x"] >= 1.3
+    assert lpt["metrics"]["makespan_speedup_x"] >= 1.3
+    # Exactly-once under the death wave, for run AND implicit baseline.
+    assert adaptive["metrics"]["tasks_completed"] == \
+        adaptive["metrics"]["n_tasks"]
+    aff = by_name["sched_store_affinity_prefetch_wait"]
+    assert aff["measured"]["prefetch_wait_reduction_x"] > 1.0
+    assert aff["metrics"]["batch_locality"] == 1.0
+    # Wait attribution reaches the record via the worker breakdown.
+    assert aff["measured"]["worker_breakdown"]
+    assert sum(w["wait_s"] for w in
+               aff["measured"]["worker_breakdown"].values()) == \
+        pytest.approx(aff["measured"]["prefetch_wait_s"])
+
+
+def test_sim_cells_are_deterministic_across_reruns():
+    kw = dict(quick=True, filters=["sched_heavy_tail"])
+    a = sched.run_scheduling_campaign(**kw)
+    b = sched.run_scheduling_campaign(**kw)
+    assert canonical_bytes(a) == canonical_bytes(b)
+
+
+def test_validator_catches_missing_required_metric(quick_doc):
+    doc = copy.deepcopy(quick_doc)
+    rec = doc["scenarios"][0]
+    rec["metrics"].pop("makespan_seconds", None)
+    rec["measured"].pop("makespan_seconds", None)
+    problems = validate_scheduling(doc)
+    assert any("makespan_seconds" in p for p in problems)
+    doc2 = copy.deepcopy(quick_doc)
+    doc2["scenarios"][0]["spec"]["run"].pop("policy")
+    assert any("policy" in p for p in validate_scheduling(doc2))
+
+
+def test_spec_validation_rejects_bad_cells():
+    with pytest.raises(ValueError, match="unknown policy"):
+        sched.SchedulingSpec(policy="wat")
+    with pytest.raises(ValueError, match="sim backend"):
+        sched.SchedulingSpec(kind="sim", backend="threads")
+    with pytest.raises(ValueError, match="threads"):
+        sched.SchedulingSpec(kind="store_feed", backend="sim")
+    with pytest.raises(ValueError, match="fault profile"):
+        sched.SchedulingSpec(fault_profile="wat")
+
+
+# ---------------------------------------------------------------------------
+# compare CLI: schema dispatch + gating.
+# ---------------------------------------------------------------------------
+
+def _mini_doc(makespan, busy_p90=10.0):
+    rec = {
+        "name": "cell", "group": "g", "tier": "quick", "status": "ran",
+        "spec": {"run": {"policy": "static", "dataset": "heavy_tail",
+                         "backend": "sim", "n_workers": 4,
+                         "organization": "chronological",
+                         "tasks_per_message": 1, "fault_profile": "none",
+                         "seed": 0}, "baseline": None},
+        "metrics": {"tasks_completed": 5, "messages_sent": 5,
+                    "makespan_seconds": makespan, "busy_p50_s": 5.0,
+                    "busy_p90_s": busy_p90},
+        "measured": {}, "checks": [],
+        "timing": {"wall_s": 0.1}, "error": None,
+    }
+    return {"schema": SCHEDULING_SCHEMA, "schema_version": 1,
+            "config": {}, "scenarios": [rec],
+            "summary": {"total": 1, "pass": 0, "fail": 0, "ran": 1,
+                        "error": 0}}
+
+
+def test_compare_dispatches_makespan_for_scheduling_schema(tmp_path):
+    old, new = _mini_doc(100.0), _mini_doc(95.0)
+    assert default_metric(old) == "makespan_seconds"
+    rows, regressions = compare_docs(old, new)
+    assert rows[0]["metric"] == "makespan_seconds"
+    assert not regressions
+    # >10% slower makespan regresses -> CLI exit 1.
+    worse = _mini_doc(120.0)
+    p_old, p_new = tmp_path / "old.json", tmp_path / "new.json"
+    p_old.write_text(json.dumps(old))
+    p_new.write_text(json.dumps(worse))
+    assert compare_main([str(p_old), str(p_new)]) == 1
+    p_new.write_text(json.dumps(new))
+    assert compare_main([str(p_old), str(p_new)]) == 0
+
+
+def test_compare_schema_mismatch_stays_exit_1(tmp_path):
+    storage_doc = {"schema": "repro.bench.storage/v1", "scenarios": []}
+    p_old, p_new = tmp_path / "old.json", tmp_path / "new.json"
+    p_old.write_text(json.dumps(_mini_doc(100.0)))
+    p_new.write_text(json.dumps(storage_doc))
+    assert compare_main([str(p_old), str(p_new)]) == 1
+
+
+def test_compare_busy_quantile_info_rows(capsys, tmp_path):
+    """Busy-quantile deltas print alongside but never gate."""
+    old = _mini_doc(100.0, busy_p90=10.0)
+    new = _mini_doc(100.0, busy_p90=50.0)      # 5x worse p90, same makespan
+    p_old, p_new = tmp_path / "old.json", tmp_path / "new.json"
+    p_old.write_text(json.dumps(old))
+    p_new.write_text(json.dumps(new))
+    assert compare_main([str(p_old), str(p_new)]) == 0   # not gated
+    out = capsys.readouterr().out
+    assert "busy_p90_s" in out and "+400.0%" in out
+
+
+def test_campaign_cli_flag_lists_scheduling_scenarios():
+    names = [sc.name for sc in sched.scheduling_scenarios()]
+    assert len(names) == len(set(names))
+    assert sum(1 for sc in sched.scheduling_scenarios()
+               if sc.tier == "quick") == 3

@@ -1,13 +1,23 @@
 """Property-based SchedulerCore invariants (hypothesis / tests/_compat shim).
 
 The protocol core is the single decision-maker behind all three execution
-backends, so its invariants are the system's invariants:
+backends, so its invariants are the system's invariants — and since the
+scheduling-policy layer (repro.runtime.policies) owns dispatch order and
+batch size, every invariant is checked for EVERY policy:
 
   * exactly-once completion under arbitrary interleavings of dispatch,
     (duplicate) DONE reports, and worker deaths;
-  * no lost and no duplicated tasks across checkpoint save -> restore;
-  * dispatch-order determinism for a fixed seed, bit-identical across the
-    threads, processes, and sim backends.
+  * no lost and no duplicated tasks across checkpoint save -> restore
+    (including the policy's own mid-run state, e.g. adaptive_chunk's
+    open round);
+  * dispatch-order determinism for a fixed seed.  The order-based
+    policies (static, fifo_selfsched, sized_lpt, adaptive_chunk) emit
+    bit-identical dispatch logs across the threads, processes, and sim
+    backends; shard_affinity's batch contents depend on the asking
+    worker's binding, so on the live backends the *interleaving*
+    follows real completion timing — for it we assert the per-seed sim
+    log bit-identically, exactly-once everywhere, and the single-run
+    batch-locality invariant (see repro.runtime.policies docstring).
 """
 
 import random
@@ -16,13 +26,24 @@ import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.messages import Task
-from repro.runtime import ManagerCheckpoint, SchedulerCore, run_job
+from repro.runtime import (
+    POLICY_NAMES, ManagerCheckpoint, SchedulerCore, run_job)
+from repro.runtime.policies import locality_key
 
 BACKENDS = ("threads", "processes", "sim")
 
+#: Policies whose ASSIGN contents are independent of the asking worker,
+#: hence bit-identical dispatch logs across backends (run_job resolves
+#: ONE model-based cost estimator for every backend, so the cost-aware
+#: policies qualify too); shard_affinity is the documented exception.
+ORDER_POLICIES = ("static", "fifo_selfsched", "sized_lpt",
+                  "adaptive_chunk")
+
 
 def _tasks(sizes):
-    return [Task(task_id=f"t{i:04d}", size_bytes=s, timestamp=i)
+    # Grouped ids ("g<k>/t<i>") give shard_affinity real locality runs;
+    # for every other policy the prefix is just part of the tie-break.
+    return [Task(task_id=f"g{i % 4}/t{i:04d}", size_bytes=s, timestamp=i)
             for i, s in enumerate(sizes)]
 
 
@@ -43,7 +64,7 @@ def job_shapes(draw):
 
 
 # ---------------------------------------------------------------------------
-# Exactly-once under adversarial interleavings.
+# Exactly-once under adversarial interleavings — every policy.
 # ---------------------------------------------------------------------------
 
 @given(job_shapes(), st.integers(0, 2 ** 31 - 1))
@@ -51,59 +72,61 @@ def job_shapes(draw):
 def test_core_exactly_once_under_random_interleaving(shape, opseed):
     sizes, k, org, seed = shape
     tasks = _tasks(sizes)
-    core = SchedulerCore(tasks, organization=org, tasks_per_message=k,
-                         organize_seed=seed)
-    rng = random.Random(opseed)
-    workers = ["w0", "w1", "w2"]
-    inflight = {w: [] for w in workers}
-    fresh_total = []
-    for _ in range(400):
-        if core.done:
-            break
-        op = rng.random()
-        w = rng.choice(workers)
-        if op < 0.45:                          # dispatch
-            if w not in core.dead:
-                inflight[w].extend(
-                    t.task_id for t in core.next_batch(w))
-        elif op < 0.85 and inflight[w]:        # (possibly duplicate) DONE
-            ids = rng.sample(inflight[w],
-                             rng.randint(1, len(inflight[w])))
-            if rng.random() < 0.3:
-                ids = ids + ids                # duplicate within one message
-            fresh_total.extend(core.on_done(w, ids))
-            for tid in set(ids):
-                inflight[w].remove(tid)
-        elif op < 0.95 and len(core.dead) < 2:  # kill (keep one alive)
-            core.mark_dead(w)
-            inflight[w] = []
-        elif inflight[w]:                      # late DONE replay
-            fresh_total.extend(
-                core.on_done(w, [rng.choice(inflight[w])]))
-    # Drain deterministically through the surviving workers.
-    alive = [w for w in workers if w not in core.dead]
-    while not core.done:
-        progressed = False
-        for w in alive:
-            batch = core.next_batch(w)
-            if batch:
-                progressed = True
-                fresh_total.extend(
-                    core.on_done(w, [t.task_id for t in batch]))
-        for w in alive:
-            if inflight[w]:
-                progressed = True
-                fresh_total.extend(core.on_done(w, list(inflight[w])))
+    for policy in POLICY_NAMES:
+        core = SchedulerCore(tasks, organization=org, tasks_per_message=k,
+                             organize_seed=seed, policy=policy, n_workers=3)
+        rng = random.Random(opseed)
+        workers = ["w0", "w1", "w2"]
+        inflight = {w: [] for w in workers}
+        fresh_total = []
+        for _ in range(400):
+            if core.done:
+                break
+            op = rng.random()
+            w = rng.choice(workers)
+            if op < 0.45:                          # dispatch
+                if w not in core.dead:
+                    inflight[w].extend(
+                        t.task_id for t in core.next_batch(w))
+            elif op < 0.85 and inflight[w]:        # (possibly dup) DONE
+                ids = rng.sample(inflight[w],
+                                 rng.randint(1, len(inflight[w])))
+                if rng.random() < 0.3:
+                    ids = ids + ids                # dup within one message
+                fresh_total.extend(core.on_done(w, ids))
+                for tid in set(ids):
+                    inflight[w].remove(tid)
+            elif op < 0.95 and len(core.dead) < 2:  # kill (keep one alive)
+                core.mark_dead(w)
                 inflight[w] = []
-        assert progressed, "scheduler stuck with work outstanding"
-    all_ids = {t.task_id for t in tasks}
-    assert core.completed == all_ids                    # nothing lost
-    assert len(fresh_total) == len(all_ids)             # nothing doubled
-    assert sorted(fresh_total) == sorted(all_ids)
+            elif inflight[w]:                      # late DONE replay
+                fresh_total.extend(
+                    core.on_done(w, [rng.choice(inflight[w])]))
+        # Drain deterministically through the surviving workers.
+        alive = [w for w in workers if w not in core.dead]
+        while not core.done:
+            progressed = False
+            for w in alive:
+                batch = core.next_batch(w)
+                if batch:
+                    progressed = True
+                    fresh_total.extend(
+                        core.on_done(w, [t.task_id for t in batch]))
+            for w in alive:
+                if inflight[w]:
+                    progressed = True
+                    fresh_total.extend(core.on_done(w, list(inflight[w])))
+                    inflight[w] = []
+            assert progressed, \
+                f"{policy}: scheduler stuck with work outstanding"
+        all_ids = {t.task_id for t in tasks}
+        assert core.completed == all_ids, policy         # nothing lost
+        assert len(fresh_total) == len(all_ids), policy  # nothing doubled
+        assert sorted(fresh_total) == sorted(all_ids), policy
 
 
 # ---------------------------------------------------------------------------
-# Checkpoint save -> restore: no lost, no duplicated tasks.
+# Checkpoint save -> restore: no lost, no duplicated tasks — every policy.
 # ---------------------------------------------------------------------------
 
 @given(job_shapes(), st.integers(0, 2 ** 31 - 1))
@@ -111,58 +134,125 @@ def test_core_exactly_once_under_random_interleaving(shape, opseed):
 def test_checkpoint_cycle_loses_and_duplicates_nothing(shape, opseed):
     sizes, k, org, seed = shape
     tasks = _tasks(sizes)
-    core = SchedulerCore(tasks, organization=org, tasks_per_message=k,
-                         organize_seed=seed)
-    rng = random.Random(opseed)
-    fresh_before = []
-    # Partially run: some dispatches completed, some left in flight (those
-    # must be re-run after restore — the checkpoint only trusts DONEs).
-    for _ in range(rng.randint(0, len(tasks))):
-        batch = core.next_batch("w0")
-        if not batch:
-            break
-        if rng.random() < 0.6:
-            fresh_before.extend(
-                core.on_done("w0", [t.task_id for t in batch]))
-    ck = ManagerCheckpoint.loads(core.checkpoint().dumps())   # round-trip
-    assert ck.completed == core.completed
+    for policy in POLICY_NAMES:
+        core = SchedulerCore(tasks, organization=org, tasks_per_message=k,
+                             organize_seed=seed, policy=policy, n_workers=3)
+        rng = random.Random(opseed)
+        fresh_before = []
+        # Partially run: some dispatches completed, some left in flight
+        # (those must re-run after restore — the checkpoint only trusts
+        # DONEs).
+        for _ in range(rng.randint(0, len(tasks))):
+            batch = core.next_batch("w0")
+            if not batch:
+                break
+            if rng.random() < 0.6:
+                fresh_before.extend(
+                    core.on_done("w0", [t.task_id for t in batch]))
+        ck = ManagerCheckpoint.loads(core.checkpoint().dumps())  # round-trip
+        assert ck.completed == core.completed
+        assert ck.policy_state == core.policy.state()
 
-    restored = SchedulerCore(tasks, organization=org, tasks_per_message=k,
-                             organize_seed=seed, checkpoint=ck)
-    fresh_after = []
-    while not restored.done:
-        batch = restored.next_batch("w1")
-        assert batch, "restored scheduler stuck"
-        fresh_after.extend(
-            restored.on_done("w1", [t.task_id for t in batch]))
-    all_ids = {t.task_id for t in tasks}
-    assert restored.completed == all_ids                     # nothing lost
-    # Exactly-once ACROSS the restart: completed-before tasks never
-    # re-complete fresh, and nothing completes fresh twice.
-    assert sorted(fresh_before + fresh_after) == sorted(all_ids)
-    # The restored queue never re-dispatched an already-completed task.
-    assert not (set(fresh_after) & set(fresh_before))
+        restored = SchedulerCore(tasks, organization=org,
+                                 tasks_per_message=k, organize_seed=seed,
+                                 policy=policy, n_workers=3, checkpoint=ck)
+        fresh_after = []
+        while not restored.done:
+            batch = restored.next_batch("w1")
+            assert batch, f"{policy}: restored scheduler stuck"
+            fresh_after.extend(
+                restored.on_done("w1", [t.task_id for t in batch]))
+        all_ids = {t.task_id for t in tasks}
+        assert restored.completed == all_ids, policy     # nothing lost
+        # Exactly-once ACROSS the restart: completed-before tasks never
+        # re-complete fresh, and nothing completes fresh twice.
+        assert sorted(fresh_before + fresh_after) == sorted(all_ids), policy
+        # The restored queue never re-dispatched a completed task.
+        assert not (set(fresh_after) & set(fresh_before)), policy
 
 
 # ---------------------------------------------------------------------------
-# Dispatch-order determinism across all three backends.
+# Dispatch-order determinism across all three backends — every policy.
 # ---------------------------------------------------------------------------
 
 @given(job_shapes())
-@settings(max_examples=5, deadline=None)
+@settings(max_examples=3, deadline=None)
 def test_dispatch_order_deterministic_across_backends(shape):
     sizes, k, org, seed = shape
     tasks = _tasks(sizes)
-    batches = {}
-    for backend in BACKENDS:
-        r = run_job(tasks, _pickle_safe_fn, backend=backend, n_workers=3,
-                    organization=org, tasks_per_message=k,
-                    organize_seed=seed, poll_interval=0.002)
-        batches[backend] = r.batches
-        assert r.completed_ids == {t.task_id for t in tasks}
-    assert batches["threads"] == batches["processes"] == batches["sim"]
-    # And a repeat run reproduces the log bit-identically.
-    again = run_job(tasks, _pickle_safe_fn, backend="sim", n_workers=3,
-                    organization=org, tasks_per_message=k,
-                    organize_seed=seed, poll_interval=0.002)
-    assert again.batches == batches["sim"]
+    all_ids = {t.task_id for t in tasks}
+    for policy in POLICY_NAMES:
+        batches = {}
+        for backend in BACKENDS:
+            r = run_job(tasks, _pickle_safe_fn, backend=backend,
+                        n_workers=3, organization=org,
+                        tasks_per_message=k, organize_seed=seed,
+                        policy=policy, poll_interval=0.002)
+            batches[backend] = r.batches
+            assert r.completed_ids == all_ids, (policy, backend)
+        # A repeat sim run reproduces the log bit-identically (the sim
+        # is a deterministic machine, so this covers shard_affinity's
+        # worker-binding decisions too).
+        again = run_job(tasks, _pickle_safe_fn, backend="sim", n_workers=3,
+                        organization=org, tasks_per_message=k,
+                        organize_seed=seed, policy=policy,
+                        poll_interval=0.002)
+        assert again.batches == batches["sim"], policy
+        if policy in ORDER_POLICIES:
+            # Worker-ask order cannot change batch contents: the three
+            # backends' dispatch logs agree bitwise.
+            assert batches["threads"] == batches["processes"] \
+                == batches["sim"], policy
+        else:
+            # shard_affinity: the live interleaving follows completion
+            # timing, but every ASSIGN stays within one locality run.
+            by_id = {t.task_id: t for t in tasks}
+            for backend in BACKENDS:
+                for b in batches[backend]:
+                    keys = {locality_key(by_id[tid]) for tid in b}
+                    assert len(keys) == 1, (backend, b)
+
+
+# ---------------------------------------------------------------------------
+# adaptive_chunk: a mid-phase restore continues the chunk schedule.
+# ---------------------------------------------------------------------------
+
+def test_adaptive_chunk_resume_keeps_chunk_schedule():
+    """Regression: restoring from a mid-phase checkpoint must continue
+    the open factoring round (the checkpointed cost budget), not re-open
+    a round from the shrunken queue as a fresh scheduler would."""
+    tasks = [Task(task_id=f"u{i:04d}", size_bytes=100, timestamp=i,
+                  cpu_cost_hint=1.0) for i in range(64)]
+    core = SchedulerCore(tasks, organization="chronological",
+                         tasks_per_message=1, policy="adaptive_chunk",
+                         n_workers=4)
+    # Round opens at 64 tasks: budget = 64 / (2 * 4) = 8 cost units ->
+    # 8-task batches, 4 ASSIGNs per round.
+    first = core.next_batch("w0")
+    assert len(first) == 8
+    core.on_done("w0", [t.task_id for t in first])
+    second = core.next_batch("w1")
+    assert len(second) == 8
+    core.on_done("w1", [t.task_id for t in second])
+
+    ck = ManagerCheckpoint.loads(core.checkpoint().dumps())
+    assert ck.policy_state == {"budget": 8.0, "round_left": 2}
+
+    restored = SchedulerCore(tasks, organization="chronological",
+                             tasks_per_message=1, policy="adaptive_chunk",
+                             n_workers=4, checkpoint=ck)
+    # 48 tasks remain; WITHOUT the policy state a fresh round would open
+    # at 48 / 8 = 6 — the restored scheduler must keep issuing the
+    # checkpointed 8-task budget for the 2 ASSIGNs left in its round.
+    assert len(restored.next_batch("w0")) == 8
+    assert len(restored.next_batch("w1")) == 8
+    # ...and only then open a new, smaller round from what remains.
+    assert len(restored.next_batch("w2")) == 4    # 32 left / (2 * 4)
+
+    # Control: the same ledger with the policy state stripped resets the
+    # schedule (this is the bug the checkpointed state prevents).
+    stripped = ManagerCheckpoint(ck.completed, ck.pending_ids)
+    fresh = SchedulerCore(tasks, organization="chronological",
+                          tasks_per_message=1, policy="adaptive_chunk",
+                          n_workers=4, checkpoint=stripped)
+    assert len(fresh.next_batch("w0")) == 6

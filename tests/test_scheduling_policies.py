@@ -1,0 +1,345 @@
+"""Unit tests for the pluggable scheduling-policy layer.
+
+Covers the per-policy dispatch semantics (repro.runtime.policies), the
+SchedulerCore delegation + checkpoint plumbing, the wait-attribution
+path (worker ``take_wait_s`` -> DONE -> RunResult breakdown), the
+cost-estimate helpers (PhaseCostModel.task_seconds,
+StoreManifest.row_range_bytes), and the store row-range task builder
+the shard_affinity policy groups by.
+"""
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core.cost_model import PROCESS_PHASE
+from repro.core.messages import Task
+from repro.runtime import (
+    POLICY_NAMES, ManagerCheckpoint, SchedulerCore, run_job)
+from repro.runtime.policies import (
+    AdaptiveChunkPolicy, default_task_cost, get_policy, locality_key,
+    model_task_cost)
+
+
+def _tasks(n=20, sizes=None):
+    sizes = sizes if sizes is not None else [(i * 37) % 23 + 1
+                                             for i in range(n)]
+    return [Task(task_id=f"t{i:04d}", size_bytes=s, timestamp=i)
+            for i, s in enumerate(sizes)]
+
+
+# ---------------------------------------------------------------------------
+# Registry / back-compat.
+# ---------------------------------------------------------------------------
+
+def test_policy_registry_names():
+    assert set(POLICY_NAMES) == {"static", "fifo_selfsched", "sized_lpt",
+                                 "adaptive_chunk", "shard_affinity"}
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        get_policy("nope")
+
+
+def test_default_policy_is_bitwise_pre_refactor_static():
+    """No policy argument == policy='static' == the historical fixed
+    tasks_per_message organizer-order dispatch, batch for batch."""
+    tasks = _tasks(23)
+    logs = []
+    for kw in ({}, {"policy": "static"}):
+        core = SchedulerCore(tasks, tasks_per_message=3, **kw)
+        log = []
+        while not core.done:
+            batch = core.next_batch("w0")
+            log.append(tuple(t.task_id for t in batch))
+            core.on_done("w0", [t.task_id for t in batch])
+        logs.append(log)
+    assert logs[0] == logs[1]
+    # largest_first organizer order, fixed batches of 3
+    assert all(len(b) == 3 for b in logs[0][:-1])
+
+
+def test_manager_checkpoint_json_backcompat():
+    # Pre-policy checkpoints (no "policy" key) load fine...
+    old = json.dumps({"completed": ["t0001"], "pending": ["t0002"]})
+    ck = ManagerCheckpoint.loads(old)
+    assert ck.completed == {"t0001"} and ck.policy_state is None
+    # ...and stateless policies keep emitting the old shape.
+    core = SchedulerCore(_tasks(5), policy="static")
+    doc = json.loads(core.checkpoint().dumps())
+    assert "policy" not in doc
+
+
+def test_run_job_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        run_job(_tasks(3), lambda t: 0, backend="threads", policy="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Per-policy dispatch semantics.
+# ---------------------------------------------------------------------------
+
+def _drain_log(core, worker="w0"):
+    log = []
+    while not core.done:
+        batch = core.next_batch(worker)
+        log.append([t.task_id for t in batch])
+        core.on_done(worker, [t.task_id for t in batch])
+    return log
+
+
+def test_fifo_selfsched_one_task_per_message_in_organizer_order():
+    tasks = _tasks(9)
+    core = SchedulerCore(tasks, organization="chronological",
+                         tasks_per_message=4, policy="fifo_selfsched")
+    log = _drain_log(core)
+    assert all(len(b) == 1 for b in log)
+    assert [b[0] for b in log] == [t.task_id for t in tasks]
+
+
+def test_sized_lpt_orders_by_cost_hint_over_bytes():
+    # cpu hints reverse the size order: the estimator must win.
+    tasks = [Task(task_id=f"t{i}", size_bytes=100 - i, timestamp=i,
+                  cpu_cost_hint=float(i)) for i in range(5)]
+    core = SchedulerCore(tasks, organization="chronological",
+                         tasks_per_message=1, policy="sized_lpt")
+    log = _drain_log(core)
+    assert [b[0] for b in log] == ["t4", "t3", "t2", "t1", "t0"]
+
+
+def test_adaptive_chunk_costs_budget_not_count():
+    """A task costing more than the round budget travels ALONE; the
+    cheap tail packs many-per-message; budgets shrink as the queue
+    drains (cost-keyed factoring)."""
+    giant = Task(task_id="giant", size_bytes=1, timestamp=0,
+                 cpu_cost_hint=1000.0)
+    minnows = [Task(task_id=f"m{i:03d}", size_bytes=1, timestamp=i + 1,
+                    cpu_cost_hint=1.0) for i in range(64)]
+    core = SchedulerCore([giant] + minnows, organization="chronological",
+                         tasks_per_message=1, policy="adaptive_chunk",
+                         n_workers=4)
+    first = core.next_batch("w0")
+    assert [t.task_id for t in first] == ["giant"]        # alone, first
+    second = core.next_batch("w1")
+    assert len(second) > 1                                # tail packs
+    sizes = [len(core.next_batch("w2")) for _ in range(6)]
+    sizes = [s for s in sizes if s]
+    assert sizes == sorted(sizes, reverse=True)           # shrinking
+
+
+def test_shard_affinity_keeps_worker_on_shard_and_steals_at_tail():
+    uri = "store:///data/st#shard={}&rows={}:{}"
+    tasks = []
+    for s in range(3):
+        for r in range(4):
+            tasks.append(Task(
+                task_id=f"store/s{s:05d}/r{r:05d}", size_bytes=10 - r,
+                timestamp=r * 3 + s,
+                payload=uri.format(f"s{s:05d}", r, r + 1)))
+    core = SchedulerCore(tasks, organization="chronological",
+                         tasks_per_message=1, policy="shard_affinity",
+                         n_workers=2)
+
+    def take(w):
+        batch = core.next_batch(w)
+        core.on_done(w, [t.task_id for t in batch])
+        return batch
+
+    # Chronological order interleaves shards; affinity must NOT.
+    w0_first, w1_first = take("w0")[0], take("w1")[0]
+    k0, k1 = locality_key(w0_first), locality_key(w1_first)
+    assert k0 != k1
+    # Each worker stays on its shard for the shard's remaining ranges.
+    for _ in range(3):
+        assert locality_key(take("w0")[0]) == k0
+        assert locality_key(take("w1")[0]) == k1
+    # Both drained their shards; the third shard goes to whoever asks,
+    # and a worker with nothing else left may steal from a bound run
+    # rather than starve — nobody blocks while work remains.
+    while not core.done:
+        assert take("w0") or take("w1"), "affinity starved a worker"
+    assert core.completed == {t.task_id for t in tasks}
+
+
+def test_shard_affinity_requeues_dead_workers_tasks_into_their_run():
+    tasks = [Task(task_id=f"g{i % 2}/t{i:04d}", size_bytes=5,
+                  timestamp=i) for i in range(8)]
+    core = SchedulerCore(tasks, organization="chronological",
+                         tasks_per_message=2, policy="shard_affinity",
+                         n_workers=2)
+    b0 = core.next_batch("w0")
+    assert {locality_key(t) for t in b0} == {"g0"}
+    core.mark_dead("w0")                    # re-queues b0 into run g0
+    # A new worker binding to g0 sees the re-queued tasks first.
+    b1 = core.next_batch("w1")
+    assert [t.task_id for t in b1] == [t.task_id for t in b0]
+
+
+def test_locality_key_forms():
+    t_shard = Task(task_id="x", payload="store:///r#rows=0:2&shard=s01")
+    assert locality_key(t_shard) == "/r#shard=s01"
+    t_track = Task(task_id="x", payload="store:///r#track=a/b.csv")
+    assert locality_key(t_track) == "/r"
+    t_dir = Task(task_id="fleet07/a123.zip")
+    assert locality_key(t_dir) == "fleet07"
+    t_flat = Task(task_id="plain")
+    assert locality_key(t_flat) == "plain"
+
+
+def test_explicit_policy_instance_keeps_its_tuning():
+    pol = AdaptiveChunkPolicy(alpha=4.0, cost_fn=default_task_cost,
+                              n_workers=2)
+    resolved = get_policy(pol, tasks_per_message=3, n_workers=8)
+    assert resolved is pol
+    assert resolved.alpha == 4.0
+    assert resolved.n_workers == 2          # constructor wins
+    assert resolved.tasks_per_message == 3  # unset -> filled from job
+
+
+# ---------------------------------------------------------------------------
+# Cost estimates.
+# ---------------------------------------------------------------------------
+
+def test_task_seconds_monotone_and_hint_aware():
+    m = PROCESS_PHASE
+    xs = [m.task_seconds(s, nppn=8) for s in (0, 10**6, 10**8, 10**9)]
+    assert xs == sorted(xs)
+    hinted = m.task_seconds(10**6, nppn=8, cpu_cost_hint=500.0)
+    assert hinted > m.task_seconds(10**6, nppn=8)
+
+
+def test_model_task_cost_matches_task_seconds():
+    cost = model_task_cost(PROCESS_PHASE, nppn=8, nodes=4)
+    t = Task(task_id="a", size_bytes=5 * 10**6, cpu_cost_hint=3.0)
+    assert cost(t) == PROCESS_PHASE.task_seconds(
+        5 * 10**6, nppn=8, cpu_cost_hint=3.0, nodes=4)
+
+
+def test_row_range_bytes_prorates_from_index(tmp_path):
+    from repro.store.format import ShardRecord, StoreManifest, TrackRecord
+
+    tracks = [TrackRecord(track_id=f"tr{r}", shard_id="s0", row=r,
+                          n_obs=obs, icao24="a", seg_knots=(obs,),
+                          seg_grid=(obs,))
+              for r, obs in enumerate((10, 30, 60))]
+    man = StoreManifest(
+        shards=[ShardRecord(shard_id="s0", filename="shards/s0.shard",
+                            n_tracks=3, n_points=100, size_bytes=1000,
+                            sha256="x")],
+        tracks=tracks)
+    assert man.row_range_bytes("s0") == 1000
+    assert man.row_range_bytes("s0", 0, 1) == 100      # 10/100 points
+    assert man.row_range_bytes("s0", 1, 3) == 900
+    with pytest.raises(ValueError):
+        man.row_range_bytes("s0", 2, 5)
+
+    # The rows-granularity task builder sizes tasks from exactly this
+    # estimate, without any shard payload on disk.
+    from repro.tracks.segments import segment_tasks_from_store
+    man.save(str(tmp_path))
+    tasks = segment_tasks_from_store(str(tmp_path), granularity="rows",
+                                     rows_per_task=2)
+    assert [t.task_id for t in tasks] == ["store/s0/r00000",
+                                          "store/s0/r00002"]
+    assert [t.size_bytes for t in tasks] == [400, 600]
+    assert all(t.payload.startswith("store://") and "rows=" in t.payload
+               for t in tasks)
+
+
+# ---------------------------------------------------------------------------
+# Wait attribution: worker take_wait_s -> DONE -> RunResult breakdown.
+# ---------------------------------------------------------------------------
+
+class _WaitingWorker:
+    """Worker fn reporting 10 ms of feed wait per task via take_wait_s."""
+
+    def __init__(self):
+        self._local = threading.local()
+
+    def __call__(self, task):
+        time.sleep(0.002)
+        self._local.wait = getattr(self._local, "wait", 0.0) + 0.01
+        return task.size_bytes
+
+    def take_wait_s(self):
+        w = getattr(self._local, "wait", 0.0)
+        self._local.wait = 0.0
+        return w
+
+
+def test_wait_seconds_surface_in_runresult_breakdown():
+    tasks = _tasks(12)
+    r = run_job(tasks, _WaitingWorker(), backend="threads", n_workers=2,
+                poll_interval=0.002)
+    assert abs(sum(r.worker_wait) - 0.12) < 1e-6
+    rec = r.to_record()
+    assert rec["wait_total_s"] == pytest.approx(0.12)
+    assert set(rec["worker_breakdown"]) == {"w0", "w1"}
+    for row in rec["worker_breakdown"].values():
+        assert set(row) == {"tasks", "busy_s", "idle_s", "wait_s"}
+    assert sum(row["wait_s"] for row in
+               rec["worker_breakdown"].values()) == pytest.approx(0.12)
+    assert rec["worker_wait_quantiles_s"]["p100"] > 0
+
+
+def test_sim_fills_wait_with_io_phase_seconds():
+    tasks = _tasks(30, sizes=[10**7] * 30)
+    r = run_job(tasks, None, backend="sim", n_workers=4)
+    assert sum(r.worker_wait) > 0
+    for s in r.worker_stats.values():
+        assert s.wait_seconds <= s.busy_seconds + 1e-9
+
+
+def test_to_record_omits_breakdown_for_big_fleets():
+    tasks = _tasks(80)
+    r = run_job(tasks, None, backend="sim", n_workers=65)
+    assert "worker_breakdown" not in r.to_record()
+    r = run_job(tasks, None, backend="sim", n_workers=64)
+    assert "worker_breakdown" in r.to_record()
+
+
+# ---------------------------------------------------------------------------
+# Policies behave across live backends through run_job.
+# ---------------------------------------------------------------------------
+
+def test_cost_aware_dispatch_identical_across_backends_with_hints():
+    """Regression: run_job must resolve ONE cost estimator for every
+    backend.  Tasks whose cpu-hint order disagrees with their byte-size
+    order previously made sized_lpt dispatch differently on sim (model
+    cost) vs threads (hint-or-bytes fallback)."""
+    tasks = [
+        Task(task_id="A", size_bytes=500_000_000, cpu_cost_hint=0.1),
+        Task(task_id="B", size_bytes=1_000, cpu_cost_hint=50.0),
+        Task(task_id="C", size_bytes=2_000, cpu_cost_hint=20.0),
+    ]
+    logs = {}
+    for backend in ("threads", "sim"):
+        r = run_job(tasks, _pickle_fn, backend=backend, n_workers=1,
+                    organization="chronological", policy="sized_lpt",
+                    poll_interval=0.002)
+        logs[backend] = r.batches
+    assert logs["threads"] == logs["sim"]
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_run_job_threads_all_policies_complete(policy):
+    tasks = [Task(task_id=f"g{i % 3}/t{i:04d}", size_bytes=(i * 13) % 7 + 1,
+                  timestamp=i) for i in range(25)]
+    r = run_job(tasks, _pickle_fn, backend="threads", n_workers=3,
+                tasks_per_message=2, policy=policy, poll_interval=0.002)
+    assert r.completed_ids == {t.task_id for t in tasks}
+    assert len(r.results) == len(tasks)
+
+
+def _pickle_fn(task):
+    return task.size_bytes
+
+
+def test_workflow_policy_flag_threads_through(tmp_path):
+    """TrackWorkflow(policy=...) validates and reaches run_job."""
+    from repro.tracks.workflow import TrackWorkflow
+
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        TrackWorkflow(str(tmp_path), policy="wat")
+    wf = TrackWorkflow(str(tmp_path), policy="sized_lpt", n_workers=2)
+    assert wf.policy == "sized_lpt"
