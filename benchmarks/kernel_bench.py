@@ -1,25 +1,167 @@
-"""Kernel-level BENCH artifact CLI (thin adapter).
+"""Canonical kernel benchmark entry point.
 
-Runs the fused segment pipeline against the unfused three-launch
-baseline over synthetic segment-length workloads and writes a
-schema-validated ``BENCH_kernels.json`` (``repro.bench.kernels/v1``)
-with throughput, padded-element fraction, intermediate host<->device
-transfer counts, and per-bucket compile cache hits.  Exits non-zero if
-any scenario misses its check (CI gates on the quick tier).
+Two roles in one module:
 
-    PYTHONPATH=src python benchmarks/kernel_bench.py --quick
-    PYTHONPATH=src python benchmarks/kernel_bench.py --out BENCH_kernels.json
+* **CLI** — runs the fused segment pipeline against the unfused
+  three-launch baseline over synthetic segment-length workloads and
+  writes a schema-validated ``BENCH_kernels.json``
+  (``repro.bench.kernels/v1``) with throughput, padded-element
+  fraction, intermediate host<->device transfer counts, and per-bucket
+  compile cache hits.  Exits non-zero if any scenario misses its check
+  (CI gates on the quick tier).
 
-The scenario declarations and record layout live in
-:mod:`repro.bench.kernels` (``python -m repro.bench.kernels`` is the
-same entry point).
+      PYTHONPATH=src python benchmarks/kernel_bench.py --quick
+      PYTHONPATH=src python benchmarks/kernel_bench.py --out BENCH_kernels.json
+
+  The scenario declarations and record layout live in
+  :mod:`repro.bench.kernels` (``python -m repro.bench.kernels`` is the
+  same entry point).
+
+* **CSV micro-benchmarks** (``ALL``, consumed by ``benchmarks/run.py``)
+  — Pallas (interpret) kernels vs their jnp oracles plus real
+  workflow-throughput figures.  On TPU the same harness times the
+  compiled kernels; here the derived column reports tracks/second of
+  the oracle path (the honest CPU number) plus the Pallas-vs-ref
+  agreement.
+
+``benchmarks/kernels_bench.py`` is a deprecated alias of this module.
 """
 
 from __future__ import annotations
 
 import sys
+import time
 
-from repro.bench.kernels import main
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time_call(fn, *args, iters=3, **kw):
+    fn(*args, **kw)                       # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def bench_track_interp() -> list[str]:
+    rng = np.random.default_rng(0)
+    B, N, C, M = 8, 512, 3, 1024
+    t_in = np.sort(rng.uniform(0, 900, (B, N)), axis=1).astype(np.float32)
+    v_in = rng.normal(size=(B, C, N)).astype(np.float32)
+    count = np.full((B,), N, np.int32)
+    t_out = np.sort(rng.uniform(0, 900, (B, M)), axis=1).astype(np.float32)
+    us_ref, out_ref = _time_call(ref.track_interp_ref, t_in, v_in,
+                                 count, t_out)
+    us_pal, out_pal = _time_call(ops.track_interp, t_in, v_in, count,
+                                 t_out)
+    err = float(np.abs(np.asarray(out_ref) - np.asarray(out_pal)).max())
+    return [
+        f"kernel_track_interp_ref_B{B}xN{N}xM{M},{us_ref:.0f},"
+        f"{B / (us_ref/1e6):.0f}tracks_per_s",
+        f"kernel_track_interp_pallas_interpret,{us_pal:.0f},maxerr={err:.1e}",
+    ]
+
+
+def bench_dynamic_rates() -> list[str]:
+    rng = np.random.default_rng(1)
+    B, M = 16, 1024
+    v = rng.normal(size=(B, 3, M)).astype(np.float32)
+    count = np.full((B,), M, np.int32)
+    us_ref, o1 = _time_call(ref.dynamic_rates_ref, v, count, 1.0)
+    us_pal, o2 = _time_call(ops.dynamic_rates, v, count, 1.0)
+    err = float(np.abs(np.asarray(o1) - np.asarray(o2)).max())
+    return [
+        f"kernel_dynamic_rates_ref_B{B}xM{M},{us_ref:.0f},"
+        f"{B*M/(us_ref/1e6)/1e6:.1f}Mpts_per_s",
+        f"kernel_dynamic_rates_pallas_interpret,{us_pal:.0f},maxerr={err:.1e}",
+    ]
+
+
+def bench_agl_lookup() -> list[str]:
+    rng = np.random.default_rng(2)
+    B, M, H, W = 8, 1024, 256, 512
+    dem = rng.uniform(0, 3000, (H, W)).astype(np.float32)
+    fi = rng.uniform(4, 100, (B, M)).astype(np.float32)
+    fj = rng.uniform(4, 200, (B, M)).astype(np.float32)
+    alt = rng.uniform(0, 4000, (B, M)).astype(np.float32)
+    us_ref, o1 = _time_call(ref.agl_lookup_ref, dem, fi, fj, alt)
+    us_pal, o2 = _time_call(ops.agl_lookup, dem, fi, fj, alt)
+    err = float(np.abs(np.asarray(o1) - np.asarray(o2)).max())
+    return [
+        f"kernel_agl_lookup_ref_B{B}xM{M},{us_ref:.0f},"
+        f"{B*M/(us_ref/1e6)/1e6:.1f}Mlookups_per_s",
+        f"kernel_agl_lookup_pallas_interpret,{us_pal:.0f},maxerr={err:.1e}",
+    ]
+
+
+def bench_flash_attention() -> list[str]:
+    rng = np.random.default_rng(3)
+    B, H, KV, T, hd = 1, 4, 2, 512, 64
+    q = rng.normal(size=(B, H, T, hd)).astype(np.float32)
+    k = rng.normal(size=(B, KV, T, hd)).astype(np.float32)
+    v = rng.normal(size=(B, KV, T, hd)).astype(np.float32)
+    us_ref, o1 = _time_call(ref.flash_attention_ref, q, k, v)
+    us_pal, o2 = _time_call(ops.flash_attention, q, k, v, iters=1)
+    err = float(np.abs(np.asarray(o1) - np.asarray(o2)).max())
+    return [
+        f"kernel_flash_attn_ref_B{B}H{H}T{T},{us_ref:.0f},"
+        f"{B*H*T*T*hd*4/(us_ref/1e6)/1e9:.1f}GFLOP_s",
+        f"kernel_flash_attn_pallas_interpret,{us_pal:.0f},maxerr={err:.1e}",
+    ]
+
+
+def bench_fused_segment_pipeline() -> list[str]:
+    """One fused ops.process_segments bucket vs the three separate ops
+    (the full fused-vs-unfused comparison is the CLI's BENCH artifact)."""
+    rng = np.random.default_rng(4)
+    B, N, K = 16, 128, 256
+    H, W = 209, 473
+    dem = rng.uniform(0, 2500, (H, W)).astype(np.float32)
+    grid = (24.0, 50.0, -125.0, -66.0, 8.0)
+    t_in = np.sort(rng.uniform(0, 250, (B, N)), axis=1).astype(np.float32)
+    v_in = np.stack([40 + rng.normal(0, .01, (B, N)),
+                     -100 + rng.normal(0, .01, (B, N)),
+                     1500 + rng.normal(0, 5, (B, N))],
+                    axis=1).astype(np.float32)
+    count_in = np.full((B,), N, np.int32)
+    t_out = np.tile(np.arange(K, dtype=np.float32), (B, 1))
+    count_out = np.full((B,), K, np.int32)
+
+    def unfused():
+        interp = np.asarray(ops.track_interp(t_in, v_in, count_in, t_out))
+        lat, lon, alt = interp[..., 0], interp[..., 1], interp[..., 2]
+        fi = (np.clip(lat, grid[0], grid[1]) - grid[0]) * grid[4]
+        fj = (np.clip(lon, grid[2], grid[3]) - grid[2]) * grid[4]
+        agl = np.asarray(ops.agl_lookup(dem, fi, fj, alt))
+        v_grid = np.stack([lat, lon, alt], axis=1).astype(np.float32)
+        return agl, np.asarray(ops.dynamic_rates(v_grid, count_out, 1.0))
+
+    def fused():
+        out = ops.process_segments(dem, t_in, v_in, count_in, t_out,
+                                   count_out, grid=grid)
+        # fetch once so the timing covers the device work (the unfused
+        # closure blocks on its np.asarray hops)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    us_unf, _ = _time_call(lambda: unfused())
+    us_fus, out = _time_call(lambda: fused())
+    return [
+        f"segment_pipeline_unfused_B{B}xK{K},{us_unf:.0f},"
+        f"{B / (us_unf/1e6):.0f}segs_per_s",
+        f"segment_pipeline_fused_B{B}xK{K},{us_fus:.0f},"
+        f"speedup={us_unf/us_fus:.2f}x",
+    ]
+
+
+ALL = [bench_track_interp, bench_dynamic_rates, bench_agl_lookup,
+       bench_flash_attention, bench_fused_segment_pipeline]
+
 
 if __name__ == "__main__":
+    from repro.bench.kernels import main
+
     sys.exit(main())

@@ -5,7 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
     numbers, reproduced by the calibrated full-scale simulator (scenario
     declarations live in repro.bench.paper);
   * beyond_paper: beyond-paper scenarios (stragglers, speculation, ...);
-  * kernels_bench: Pallas kernel micro-benchmarks vs jnp oracles;
+  * kernel_bench: Pallas kernel micro-benchmarks vs jnp oracles;
   * dispatch_bench: protocol-core dispatch throughput (deque vs the old
     O(n^2) list.pop(0) manager);
   * roofline_table: per-(arch x shape x mesh) roofline terms from the
@@ -81,13 +81,13 @@ def main() -> None:
     if args.backend:
         sys.exit(run_backend_smoke(args.backend, args.smoke_out))
 
-    from benchmarks import (beyond_paper, dispatch_bench, kernels_bench,
+    from benchmarks import (beyond_paper, dispatch_bench, kernel_bench,
                             paper_tables, roofline_table)
 
     print("name,us_per_call,derived")
     groups = [("paper", paper_tables.ALL),
               ("beyond", beyond_paper.ALL),
-              ("kernels", kernels_bench.ALL),
+              ("kernels", kernel_bench.ALL),
               ("dispatch", dispatch_bench.ALL),
               ("roofline", roofline_table.ALL)]
     failures = 0

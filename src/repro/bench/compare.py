@@ -10,10 +10,12 @@ BENCH kind the repo emits:
   * ``repro.bench.storage/v1`` — ``bytes_per_point`` (columnar-store
     encoding efficiency);
   * ``repro.bench.scheduling/v1`` — ``makespan_seconds`` (simulated
-    policy makespan), with non-gating busy-quantile delta rows
-    (``busy_p50_s``/``busy_p90_s``) printed alongside so a policy that
-    holds its makespan by burning worker-time imbalance is still
-    visible in the diff.
+    policy makespan), with non-gating delta rows for the busy
+    quantiles (``busy_p50_s``/``busy_p90_s``) and the per-manager
+    dispatch throughput (``dispatch_rate_msgs_per_s``) printed
+    alongside, so a policy that holds its makespan by burning
+    worker-time imbalance — or a change that quietly serializes the
+    manager — is still visible in the diff.
 
 All default metrics are lower-is-better and deterministic for a fixed
 seed; live wall-clock numbers live under ``measured`` and are
@@ -52,7 +54,8 @@ DEFAULT_METRICS = {
 #: schema -> informational secondary metrics: their deltas are printed
 #: but never gate (only the schema's DEFAULT metric regresses a run).
 INFO_METRICS = {
-    "repro.bench.scheduling/v1": ("busy_p50_s", "busy_p90_s"),
+    "repro.bench.scheduling/v1": ("busy_p50_s", "busy_p90_s",
+                                  "dispatch_rate_msgs_per_s"),
 }
 
 

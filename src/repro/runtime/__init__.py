@@ -19,19 +19,26 @@ from repro.runtime.result import RunResult, SimTaskRecord, WorkerStats
 from repro.runtime.policies import (
     POLICIES, POLICY_NAMES, SchedulingPolicy, get_policy)
 from repro.runtime.protocol import (
-    DEFAULT_POLL_INTERVAL_S, ManagerCheckpoint, SchedulerCore, drive)
+    DEFAULT_POLL_INTERVAL_S, ManagerCheckpoint, SchedulerCore, ShardedCore,
+    drive, manager_shard, partition_tasks_by_locality)
 from repro.runtime.transports import (
     ProcessTransport, ThreadTransport, Transport, worker_loop)
 from repro.runtime.sim import (
     DEFAULT_POLL_S, merge_tasks_per_message, simulate_self_scheduling,
     simulate_static)
 from repro.runtime.api import BACKENDS, run_job
+from repro.runtime.dag import (
+    DagCoordinator, DagResult, EdgeEmitter, PhaseNode, StreamingDAG,
+    run_dag)
 
 __all__ = [
     "BACKENDS", "DEFAULT_POLL_INTERVAL_S", "DEFAULT_POLL_S",
-    "ManagerCheckpoint", "POLICIES", "POLICY_NAMES", "ProcessTransport",
-    "RunResult", "SchedulerCore", "SchedulingPolicy", "SimTaskRecord",
-    "ThreadTransport", "Transport", "WorkerStats", "drive", "get_policy",
-    "merge_tasks_per_message", "run_job", "simulate_self_scheduling",
-    "simulate_static", "worker_loop",
+    "DagCoordinator", "DagResult", "EdgeEmitter", "ManagerCheckpoint",
+    "POLICIES", "POLICY_NAMES", "PhaseNode", "ProcessTransport",
+    "RunResult", "SchedulerCore", "SchedulingPolicy", "ShardedCore",
+    "SimTaskRecord", "StreamingDAG", "ThreadTransport", "Transport",
+    "WorkerStats", "drive", "get_policy", "manager_shard",
+    "merge_tasks_per_message", "partition_tasks_by_locality", "run_dag",
+    "run_job", "simulate_self_scheduling", "simulate_static",
+    "worker_loop",
 ]

@@ -29,7 +29,8 @@ from typing import Any, Callable, Optional, Sequence
 from repro.core.messages import Task
 from repro.runtime.policies import get_policy, model_task_cost
 from repro.runtime.protocol import (
-    DEFAULT_POLL_INTERVAL_S, ManagerCheckpoint, SchedulerCore, drive)
+    DEFAULT_POLL_INTERVAL_S, ManagerCheckpoint, SchedulerCore, ShardedCore,
+    drive)
 from repro.runtime.result import RunResult
 from repro.runtime.transports import TRANSPORTS
 from repro.runtime import sim as _sim
@@ -56,6 +57,7 @@ def run_job(tasks: Sequence[Task],
             organization: str = "largest_first",
             tasks_per_message: int = 1,
             policy: Optional[Any] = None,
+            n_manager_shards: int = 1,
             poll_interval: float = DEFAULT_POLL_INTERVAL_S,
             failure_timeout: Optional[float] = None,
             checkpoint: Optional[ManagerCheckpoint] = None,
@@ -102,6 +104,25 @@ def run_job(tasks: Sequence[Task],
     phase) at the job's topology — on EVERY backend, so a fixed job
     spec orders and chunks identically whether it runs live or
     simulated.
+
+    ``n_manager_shards`` > 1 partitions the pending queue by locality
+    run into N coordinator shards (:class:`ShardedCore`): each shard
+    owns a disjoint task partition and a contiguous block of workers,
+    with work-stealing from sibling tails once a shard drains.  On the
+    live backends the shards are N independent decision loops over one
+    transport; on the sim backend each shard gets its own message
+    clock, so ASSIGN throughput scales past the single-coordinator §V
+    wall.  Requires a policy *name* (each shard instantiates its own).
+
+    Streaming-task payload contract: tasks admitted mid-run (via
+    ``core.admit`` — the streaming DAG's edge emissions,
+    :mod:`repro.runtime.dag`) must carry everything the worker needs in
+    ``task_id`` / ``size_bytes`` / ``timestamp`` / ``payload`` /
+    ``cpu_cost_hint``, with ``payload`` a plain string: those five
+    fields are exactly what survives the checkpoint frontier
+    (``ManagerCheckpoint.frontier``) and every transport's message
+    path, so a resumed manager can re-admit the task bit-identically
+    without re-running its producer.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
@@ -129,12 +150,20 @@ def run_job(tasks: Sequence[Task],
         cost_model,
         nppn=nppn if nppn is not None else default_nppn,
         nodes=nodes if nodes is not None else default_nodes)
-    policy_obj = get_policy(policy, tasks_per_message=tasks_per_message,
-                            n_workers=n_workers, cost_fn=cost_fn)
-    core = SchedulerCore(tasks, organization=organization,
-                         tasks_per_message=tasks_per_message,
-                         checkpoint=checkpoint, organize_seed=organize_seed,
-                         policy=policy_obj, n_workers=n_workers)
+    if n_manager_shards > 1:
+        core: Any = ShardedCore(
+            tasks, n_shards=n_manager_shards, n_workers=n_workers,
+            organization=organization, tasks_per_message=tasks_per_message,
+            checkpoint=checkpoint, organize_seed=organize_seed,
+            policy=policy, cost_fn=cost_fn)
+    else:
+        policy_obj = get_policy(policy, tasks_per_message=tasks_per_message,
+                                n_workers=n_workers, cost_fn=cost_fn)
+        core = SchedulerCore(tasks, organization=organization,
+                             tasks_per_message=tasks_per_message,
+                             checkpoint=checkpoint,
+                             organize_seed=organize_seed,
+                             policy=policy_obj, n_workers=n_workers)
 
     if backend == "sim":
         result = _sim.simulate_self_scheduling(
@@ -150,7 +179,8 @@ def run_job(tasks: Sequence[Task],
             legacy_launch_penalty=legacy_launch_penalty,
             worker_speed=worker_speed,
             speculative=speculative,
-            core=core)
+            core=core,
+            n_manager_shards=n_manager_shards)
         # Same contract as the live backends: an incomplete job (e.g.
         # every simulated worker died) raises instead of returning a
         # silently partial result.

@@ -184,6 +184,26 @@ class SchedulingPolicy:
         sorted largest-first by the core) ahead of the rest."""
         self._q.extendleft(reversed(list(tasks)))
 
+    def admit(self, tasks: Sequence[Task]) -> None:
+        """Append tasks that arrive mid-run (streaming DAG emission,
+        work stolen from a sibling manager shard) at the queue tail, in
+        this policy's own order."""
+        self._q.extend(self.order(list(tasks)))
+
+    def steal(self, core, k: int) -> list[Task]:
+        """Pop up to ``k`` tasks off the queue TAIL for a sibling manager
+        shard (work-stealing never touches the head the owner is about
+        to dispatch).  Returns them in queue order; stale entries a late
+        DONE already completed are dropped, exactly as in :meth:`_pop`."""
+        out: list[Task] = []
+        while self._q and len(out) < k:
+            t = self._q.pop()
+            if t.task_id in core.completed:
+                continue
+            out.append(t)
+        out.reverse()
+        return out
+
     def _pop(self, core, k: int) -> list[Task]:
         """Pop up to ``k`` queue-head tasks, skipping stale entries that a
         late DONE already completed."""
@@ -292,6 +312,18 @@ class AdaptiveChunkPolicy(_CostSortedPolicy):
         cost = self.cost_fn or default_task_cost
         self._rem_cost += float(sum(cost(t) for t in tasks))
 
+    def admit(self, tasks: Sequence[Task]) -> None:
+        super().admit(tasks)
+        cost = self.cost_fn or default_task_cost
+        self._rem_cost += float(sum(cost(t) for t in tasks))
+
+    def steal(self, core, k: int) -> list[Task]:
+        out = super().steal(core, k)
+        cost = self.cost_fn or default_task_cost
+        self._rem_cost = max(
+            self._rem_cost - float(sum(cost(t) for t in out)), 0.0)
+        return out
+
     def select(self, core, worker) -> list[Task]:
         cost = self.cost_fn or default_task_cost
         if self._round_left <= 0 or self._budget is None:
@@ -369,6 +401,33 @@ class ShardAffinityPolicy(SchedulingPolicy):
                 self._order.append(key)
             self._runs[key].appendleft(t)
             self._count += 1
+
+    def admit(self, tasks: Sequence[Task]) -> None:
+        for t in tasks:
+            key = locality_key(t)
+            if key not in self._runs:
+                self._runs[key] = deque()
+                self._order.append(key)
+            self._runs[key].append(t)
+            self._count += 1
+
+    def steal(self, core, k: int) -> list[Task]:
+        # Steal the tail of the LAST nonempty run so the victim keeps
+        # its warm head runs; whole-run transfer preserves the
+        # single-run-per-ASSIGN invariant on the thief's side too.
+        out: list[Task] = []
+        for key in reversed(self._order):
+            run = self._runs[key]
+            while run and len(out) < k:
+                t = run.pop()
+                self._count -= 1
+                if t.task_id in core.completed:
+                    continue
+                out.append(t)
+            if out:
+                break
+        out.reverse()
+        return out
 
     def _pop_run(self, core, key: str) -> list[Task]:
         run = self._runs[key]

@@ -36,7 +36,8 @@ from repro.runtime.result import RunResult, WorkerStats
 DEFAULT_POLL_INTERVAL_S = 0.3
 
 __all__ = ["DEFAULT_POLL_INTERVAL_S", "ManagerCheckpoint", "SchedulerCore",
-           "drive"]
+           "ShardedCore", "drive", "manager_shard",
+           "partition_tasks_by_locality"]
 
 
 class ManagerCheckpoint:
@@ -48,30 +49,88 @@ class ManagerCheckpoint:
     scheduling policy's mid-run state — e.g. ``adaptive_chunk``'s open
     round — so a resume continues the chunk schedule instead of
     resetting it).  ``pending_ids`` is written for observability (how
-    much was left) — edits to it are not read back.  Checkpoints
-    written before the policy layer existed load fine (``policy_state``
-    defaults to None).
+    much was left) — edits to it are not read back.  ``frontier`` is
+    the streaming-DAG per-node frontier (:mod:`repro.runtime.dag`):
+    which original tasks each node has completed, which admitted tasks
+    are still outstanding (serialized in full, because streamed tasks
+    cannot be rebuilt from a static task list), and each streaming
+    edge's emitter state — enough to resume a DAG run mid-stream.
+    Checkpoints written before the policy/DAG layers existed load fine
+    (both fields default to None).
     """
 
     def __init__(self, completed: set, pending_ids: list,
-                 policy_state: Optional[dict] = None):
+                 policy_state: Optional[dict] = None,
+                 frontier: Optional[dict] = None):
         self.completed = set(completed)
         self.pending_ids = list(pending_ids)
         self.policy_state = (dict(policy_state)
                              if policy_state is not None else None)
+        self.frontier = dict(frontier) if frontier is not None else None
 
     def dumps(self) -> str:
         doc: dict = {"completed": sorted(self.completed),
                      "pending": self.pending_ids}
         if self.policy_state is not None:
             doc["policy"] = self.policy_state
+        if self.frontier is not None:
+            doc["frontier"] = self.frontier
         return json.dumps(doc)
 
     @classmethod
     def loads(cls, s: str) -> "ManagerCheckpoint":
         d = json.loads(s)
         return cls(set(d["completed"]), list(d["pending"]),
-                   policy_state=d.get("policy"))
+                   policy_state=d.get("policy"),
+                   frontier=d.get("frontier"))
+
+
+def manager_shard(worker: Any, n_workers: int, n_shards: int) -> int:
+    """Contiguous-block worker -> manager-shard map.
+
+    Shared by the live :class:`ShardedCore` facade and the sim's
+    per-shard message clocks so both backends agree which coordinator
+    a worker reports to.  Accepts the transports' ``"w<i>"`` string ids
+    and the sim's integer worker indices.
+    """
+    if n_shards <= 1:
+        return 0
+    if isinstance(worker, int):
+        i = worker
+    else:
+        digits = "".join(ch for ch in str(worker) if ch.isdigit())
+        i = int(digits) if digits else 0
+    n = max(int(n_workers), 1)
+    i = min(max(i, 0), n - 1)
+    return min(i * n_shards // n, n_shards - 1)
+
+
+def partition_tasks_by_locality(tasks: Sequence[Task],
+                                n_shards: int) -> list[list[Task]]:
+    """Split tasks into ``n_shards`` disjoint partitions by locality run.
+
+    Tasks are grouped into runs by
+    :func:`repro.runtime.policies.locality_key` in first-appearance
+    order, and whole runs are dealt round-robin across shards — a
+    locality run never splits across managers, so ``shard_affinity``'s
+    single-run-per-ASSIGN invariant survives manager sharding.  Order
+    within each partition preserves the input order.
+    """
+    if n_shards <= 1:
+        return [list(tasks)]
+    from repro.runtime.policies import locality_key
+    runs: dict[str, list[Task]] = {}
+    order: list[str] = []
+    for t in tasks:
+        key = locality_key(t)
+        if key not in runs:
+            runs[key] = []
+            order.append(key)
+        runs[key].append(t)
+    parts: list[list[Task]] = [[] for _ in range(n_shards)]
+    for i, key in enumerate(order):
+        parts[i % n_shards].extend(runs[key])
+    return parts
 
 
 class _PendingView:
@@ -130,7 +189,10 @@ class SchedulerCore:
         self.policy = get_policy(policy, tasks_per_message=tasks_per_message,
                                  n_workers=n_workers)
         self.policy.initialize(ordered)
-        if checkpoint is not None and checkpoint.policy_state is not None:
+        if checkpoint is not None and checkpoint.policy_state is not None \
+                and "shards" not in checkpoint.policy_state:
+            # A {"shards": [...]} state belongs to a ShardedCore; a plain
+            # core restoring such a checkpoint keeps its fresh schedule.
             self.policy.restore(checkpoint.policy_state)
         self.in_flight: dict[Any, set[str]] = {}
         self.dead: set = set()
@@ -181,9 +243,13 @@ class SchedulerCore:
         self.batches.append(ids)
         return tuple(batch)
 
-    def on_done(self, worker: Any, task_ids: Sequence[str]) -> list[str]:
+    def on_done(self, worker: Any, task_ids: Sequence[str],
+                results: Optional[Sequence[Any]] = None) -> list[str]:
         """Record a DONE message; returns the ids completed for the first
-        time (exactly-once: a late DONE from a 'dead' worker is a no-op)."""
+        time (exactly-once: a late DONE from a 'dead' worker is a no-op).
+        ``results`` (aligned with ``task_ids``) is ignored here — the
+        streaming-DAG coordinator overrides this hook and feeds them to
+        its edge emitters; the sim backend passes None."""
         fresh: list[str] = []
         fl = self.in_flight.get(worker)
         for tid in task_ids:
@@ -194,6 +260,33 @@ class SchedulerCore:
             self.completed.add(tid)
             fresh.append(tid)
         return fresh
+
+    def admit(self, tasks: Sequence[Task]) -> list[Task]:
+        """Register tasks that arrive after construction (streaming DAG
+        emission, work stolen from a sibling manager shard).  Ids already
+        known — pending, in flight, or completed — are dropped, so a
+        re-emitted duplicate is a no-op and exactly-once extends across
+        dynamic admission.  Returns the tasks actually admitted."""
+        fresh: list[Task] = []
+        for t in tasks:
+            if t.task_id in self._by_id or t.task_id in self.completed:
+                continue
+            self._by_id[t.task_id] = t
+            fresh.append(t)
+        if fresh:
+            self.policy.admit(fresh)
+        return fresh
+
+    def surrender(self, k: int) -> list[Task]:
+        """Give up to ``k`` pending queue-tail tasks to a sibling manager
+        shard (work-stealing).  Surrendered tasks leave this core's
+        ledger entirely — ``total`` shrinks — so per-shard exactly-once
+        accounting stays exact; the thief re-registers them via
+        :meth:`admit`."""
+        stolen = self.policy.steal(self, k)
+        for t in stolen:
+            del self._by_id[t.task_id]
+        return stolen
 
     def on_failed(self, worker: Any, task_ids: Sequence[str],
                   error: Optional[str] = None) -> None:
@@ -224,6 +317,229 @@ class SchedulerCore:
         return ManagerCheckpoint(
             set(self.completed), [t.task_id for t in self.pending],
             policy_state=self.policy.state())
+
+
+class _GroupPendingView:
+    """Union read view over several cores' pending queues."""
+
+    __slots__ = ("_cores",)
+
+    def __init__(self, cores: Sequence[SchedulerCore]):
+        self._cores = cores
+
+    def __len__(self) -> int:
+        return sum(len(c.pending) for c in self._cores)
+
+    def __bool__(self) -> bool:
+        return any(c.pending for c in self._cores)
+
+    def __iter__(self):
+        for c in self._cores:
+            yield from c.pending
+
+    def __repr__(self) -> str:
+        return f"<pending {len(self)} tasks over {len(self._cores)} shards>"
+
+
+class ShardedCore:
+    """N :class:`SchedulerCore` shards over disjoint task partitions,
+    behind the single-core facade every backend already drives.
+
+    The paper's §V scaling wall is ONE coordinator serializing every
+    ASSIGN — adding workers stops helping once the manager's message
+    rate saturates.  Sharding the manager splits the pending queue by
+    locality run (:func:`partition_tasks_by_locality`) into ``n_shards``
+    independent decision cores; workers map to shards in contiguous
+    blocks (:func:`manager_shard`), so each shard serves a fixed slice
+    of the fleet.
+
+    On the live backends all shards run inside the one :func:`drive`
+    loop: CPython threads would serialize the decision work on the GIL
+    anyway, so what sharding buys is *disjoint decision state* (no
+    shared queue, per-shard policy schedules) — the structure an
+    N-process manager deployment needs.  The sim backend models the
+    physics: each shard owns its own ``msg_overhead_s`` clock, so the
+    simulated dispatch rate genuinely scales past one coordinator
+    (``bench/scheduling.py``'s scaling-curve cells).
+
+    Work-stealing at the tail: a shard whose partition drains steals
+    the tail half of the heaviest sibling's queue
+    (:meth:`SchedulerCore.surrender` -> :meth:`SchedulerCore.admit`),
+    so a skewed partition never idles a block of workers.
+    """
+
+    def __init__(self, tasks: Sequence[Task], *,
+                 n_shards: int,
+                 n_workers: int,
+                 organization: str = "largest_first",
+                 tasks_per_message: int = 1,
+                 checkpoint: Optional[ManagerCheckpoint] = None,
+                 organize_seed: int = 0,
+                 policy: Union[str, None] = None,
+                 cost_fn: Optional[Callable[[Task], float]] = None):
+        from repro.runtime.policies import SchedulingPolicy, get_policy
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if isinstance(policy, SchedulingPolicy):
+            raise ValueError("pass a policy NAME with manager sharding; "
+                             "each shard needs its own policy instance")
+        self.n_shards = n_shards
+        self.n_workers = n_workers
+        self.tasks_per_message = tasks_per_message
+        shard_states: list = [None] * n_shards
+        if checkpoint is not None and checkpoint.policy_state is not None:
+            st = checkpoint.policy_state.get("shards")
+            if isinstance(st, list) and len(st) == n_shards:
+                shard_states = st
+        self.cores: list[SchedulerCore] = []
+        for part, pstate in zip(
+                partition_tasks_by_locality(list(tasks), n_shards),
+                shard_states):
+            ck = None
+            if checkpoint is not None:
+                # The global completed set intersects down to each
+                # shard's own tasks inside SchedulerCore.__init__.
+                ck = ManagerCheckpoint(checkpoint.completed, [],
+                                       policy_state=pstate)
+            self.cores.append(SchedulerCore(
+                part, organization=organization,
+                tasks_per_message=tasks_per_message, checkpoint=ck,
+                organize_seed=organize_seed,
+                policy=get_policy(policy,
+                                  tasks_per_message=tasks_per_message,
+                                  n_workers=n_workers, cost_fn=cost_fn),
+                n_workers=n_workers))
+        #: Global interleaved dispatch log (per-shard logs live on the
+        #: member cores).
+        self.batches: list[tuple[str, ...]] = []
+        # Streaming-admission routing: locality key -> owning shard,
+        # assigned round-robin on first appearance (sticky after).
+        self._key_shard: dict[str, int] = {}
+        self._next_key_shard = 0
+
+    # -- routing -----------------------------------------------------------
+
+    def shard_of(self, worker: Any) -> int:
+        return manager_shard(worker, self.n_workers, self.n_shards)
+
+    def admit(self, tasks: Sequence[Task]) -> list[Task]:
+        """Register tasks that arrive mid-run (streaming DAG emission),
+        routed to shards by locality key — keys are dealt round-robin on
+        first appearance and sticky afterwards, so one locality run
+        never splits across managers (the same invariant as the initial
+        :func:`partition_tasks_by_locality` cut).  Returns the tasks
+        actually admitted (per-shard dedup applies)."""
+        from repro.runtime.policies import locality_key
+        fresh: list[Task] = []
+        for t in tasks:
+            key = locality_key(t)
+            shard = self._key_shard.get(key)
+            if shard is None:
+                shard = self._next_key_shard
+                self._key_shard[key] = shard
+                self._next_key_shard = (shard + 1) % self.n_shards
+            fresh.extend(self.cores[shard].admit([t]))
+        return fresh
+
+    # -- aggregate queries -------------------------------------------------
+
+    @property
+    def pending(self) -> _GroupPendingView:
+        return _GroupPendingView(self.cores)
+
+    @property
+    def total(self) -> int:
+        return sum(c.total for c in self.cores)
+
+    @property
+    def completed(self) -> set:
+        out: set = set()
+        for c in self.cores:
+            out |= c.completed
+        return out
+
+    @property
+    def failures(self) -> dict:
+        out: dict = {}
+        for c in self.cores:
+            out.update(c.failures)
+        return out
+
+    @property
+    def dead(self) -> set:
+        out: set = set()
+        for c in self.cores:
+            out |= c.dead
+        return out
+
+    @property
+    def messages_sent(self) -> int:
+        return sum(c.messages_sent for c in self.cores)
+
+    @property
+    def shard_messages(self) -> list[int]:
+        """Per-manager-shard ASSIGN counts (RunResult dispatch rates)."""
+        return [c.messages_sent for c in self.cores]
+
+    @property
+    def reassigned(self) -> int:
+        return sum(c.reassigned for c in self.cores)
+
+    @property
+    def done(self) -> bool:
+        return all(c.done for c in self.cores)
+
+    def idle(self, worker: Any) -> bool:
+        return self.cores[self.shard_of(worker)].idle(worker)
+
+    def task(self, task_id: str) -> Task:
+        for c in self.cores:
+            try:
+                return c.task(task_id)
+            except KeyError:
+                continue
+        raise KeyError(task_id)
+
+    # -- protocol events ---------------------------------------------------
+
+    def next_batch(self, worker: Any) -> tuple[Task, ...]:
+        core = self.cores[self.shard_of(worker)]
+        batch = core.next_batch(worker)
+        if not batch and worker not in core.dead:
+            victim = max((c for c in self.cores if c is not core),
+                         key=lambda c: len(c.pending), default=None)
+            if victim is not None and victim.pending:
+                n_avail = len(victim.pending)
+                k = min(max(self.tasks_per_message, (n_avail + 1) // 2),
+                        n_avail)
+                core.admit(victim.surrender(k))
+                batch = core.next_batch(worker)
+        if batch:
+            self.batches.append(tuple(t.task_id for t in batch))
+        return batch
+
+    def on_done(self, worker: Any, task_ids: Sequence[str],
+                results: Optional[Sequence[Any]] = None) -> list[str]:
+        return self.cores[self.shard_of(worker)].on_done(
+            worker, task_ids, results)
+
+    def on_failed(self, worker: Any, task_ids: Sequence[str],
+                  error: Optional[str] = None) -> None:
+        self.cores[self.shard_of(worker)].on_failed(worker, task_ids, error)
+
+    def mark_dead(self, worker: Any) -> list[Task]:
+        return self.cores[self.shard_of(worker)].mark_dead(worker)
+
+    # -- checkpoint --------------------------------------------------------
+
+    def checkpoint(self) -> ManagerCheckpoint:
+        pending: list[str] = []
+        for c in self.cores:
+            pending.extend(t.task_id for t in c.pending)
+        return ManagerCheckpoint(
+            self.completed, pending,
+            policy_state={"shards": [c.policy.state()
+                                     for c in self.cores]})
 
 
 def drive(core: SchedulerCore, transport, *,
@@ -275,7 +591,8 @@ def drive(core: SchedulerCore, transport, *,
                 last_seen[msg.sender] = now
                 heard.add(msg.sender)
                 if msg.kind is MessageKind.DONE:
-                    fresh = set(core.on_done(msg.sender, msg.task_ids))
+                    fresh = set(core.on_done(msg.sender, msg.task_ids,
+                                             msg.results))
                     for tid, res in zip(msg.task_ids, msg.results):
                         if tid in fresh:
                             results[tid] = res
@@ -297,6 +614,17 @@ def drive(core: SchedulerCore, transport, *,
                     if msg.sender not in core.dead:
                         send(msg.sender)
                 # HEARTBEAT just refreshes last_seen.
+
+            if drained and core.pending:
+                # Streaming admissions (DAG edge emission during the
+                # DONEs above) may have refilled a queue that was empty
+                # when other workers went idle — kick them now instead
+                # of after a poll sleep.  For static task sets this
+                # never fires: a worker only idles once its shard's
+                # queue is empty for good.
+                for wid in worker_ids:
+                    if wid not in core.dead and core.idle(wid):
+                        send(wid)
 
             # Failure detection.  Two tiers:
             #  * hard death (always on): a worker whose thread/process is
@@ -364,4 +692,5 @@ def drive(core: SchedulerCore, transport, *,
         backend=backend,
         failures=dict(core.failures),
         batches=list(core.batches),
-        completed_ids=frozenset(core.completed))
+        completed_ids=frozenset(core.completed),
+        shard_messages=list(getattr(core, "shard_messages", []) or []))

@@ -79,6 +79,12 @@ class RunResult:
     # in send order.  Identical across backends for the same job spec.
     batches: list[tuple[str, ...]] = dataclasses.field(default_factory=list)
     completed_ids: frozenset = frozenset()
+    # Per-manager-shard ASSIGN counts (sharded-coordinator runs only;
+    # empty for the single-manager baseline).  Feeds the per-shard
+    # dispatch rates in to_record() that make the §V message-wall
+    # flatline — and its removal under sharding — observable in
+    # BENCH_scheduling.json.
+    shard_messages: list[int] = dataclasses.field(default_factory=list)
 
     # -- JobResult compatibility -------------------------------------------
 
@@ -176,14 +182,31 @@ class RunResult:
             }
             for s in self.worker_stats.values()}
 
+    @property
+    def dispatch_rate_msgs_per_s(self) -> float:
+        """Manager ASSIGN throughput over the whole job (the §V message
+        wall caps this at ``1 / msg_overhead_s`` per coordinator)."""
+        if self.job_seconds <= 0:
+            return 0.0
+        return self.messages_sent / self.job_seconds
+
+    @property
+    def shard_dispatch_rates_msgs_per_s(self) -> list[float]:
+        """Per-manager-shard ASSIGN throughput (empty unless the job ran
+        with a sharded coordinator)."""
+        if self.job_seconds <= 0:
+            return [0.0 for _ in self.shard_messages]
+        return [m / self.job_seconds for m in self.shard_messages]
+
     def to_record(self) -> dict[str, Any]:
         """Flat JSON-able summary of the run for BENCH artifacts.
 
         Everything here is deterministic for a fixed job spec on the sim
         backend.  On the live backends the counts and ``dispatch_digest``
         stay deterministic (fault-free), while ``job_seconds``, the busy
-        quantiles, and the per-worker aggregates are wall-clock
-        measurements — :mod:`repro.bench.engine` splits them accordingly.
+        quantiles, the dispatch rates, and the per-worker aggregates are
+        wall-clock measurements — :mod:`repro.bench.engine` splits them
+        accordingly.
         """
         return {
             "backend": self.backend,
@@ -205,6 +228,12 @@ class RunResult:
             "worker_busy_quantiles_s": self.busy_quantiles(),
             "wait_total_s": sum(self.worker_wait),
             "worker_wait_quantiles_s": self.wait_quantiles(),
+            "dispatch_rate_msgs_per_s": self.dispatch_rate_msgs_per_s,
+            **({"n_manager_shards": len(self.shard_messages),
+                "shard_messages": list(self.shard_messages),
+                "shard_dispatch_rates_msgs_per_s":
+                    self.shard_dispatch_rates_msgs_per_s}
+               if self.shard_messages else {}),
             # Full per-worker attribution only at benchmarkable worker
             # counts — a 2047-worker sim sweep would bloat every BENCH
             # record; the quantiles above always summarize the fleet.

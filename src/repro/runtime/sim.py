@@ -34,7 +34,8 @@ from repro.core.cost_model import PhaseCostModel
 from repro.core.distribution import (
     DistributionPolicy, block_distribution, cyclic_distribution)
 from repro.core.messages import Task
-from repro.runtime.protocol import DEFAULT_POLL_INTERVAL_S, SchedulerCore
+from repro.runtime.protocol import (
+    DEFAULT_POLL_INTERVAL_S, SchedulerCore, manager_shard)
 from repro.runtime.result import RunResult, SimTaskRecord, WorkerStats
 
 DEFAULT_POLL_S = DEFAULT_POLL_INTERVAL_S
@@ -59,7 +60,9 @@ class _Sim:
                  core: Optional[SchedulerCore] = None,
                  legacy_launch_penalty: float = 1.0,
                  worker_speed: Optional[Sequence[float]] = None,
-                 speculative: bool = False):
+                 speculative: bool = False,
+                 n_manager_shards: int = 1,
+                 model_fn=None):
         self.tasks = list(tasks)
         self.n_workers = n_workers
         self.nodes = max(nodes, 1)
@@ -97,8 +100,15 @@ class _Sim:
         self.io_heap: list[tuple[float, int, int]] = []  # (V_target, seq, worker)
         self.n_io = 0
 
-        # Manager (static jobs only; dynamic jobs use self.core).
-        self.mgr_free_at = 0.0
+        # Manager message clocks: ONE per coordinator shard.  Each send
+        # charges msg_overhead_s against its shard's clock — the single
+        # clock (n_manager_shards=1) is exactly the paper's §V message
+        # wall; N clocks model N coordinator entities each paying its
+        # own serial overhead, so dispatch throughput scales with N.
+        self.mgr_free_at = [0.0] * max(int(n_manager_shards), 1)
+        # Per-TASK cost-model override (streaming DAG: each phase node
+        # keeps its own PhaseCostModel); None = the job-wide model.
+        self.model_fn = model_fn
         self.static_reassigned = 0
 
         # Workers.
@@ -141,12 +151,30 @@ class _Sim:
 
     # -- manager -------------------------------------------------------------
 
+    def _task_model(self, idx: int):
+        """The cost model charged for one task (per-node in DAG runs)."""
+        if self.model_fn is None:
+            return self.model
+        return self.model_fn(self.tasks[idx]) or self.model
+
     def _send_indices(self, worker: int, batch: Sequence[int]) -> None:
-        """Serial manager send: one message, msg_overhead_s on the wire."""
-        send_start = max(self.now, self.mgr_free_at)
-        self.mgr_free_at = send_start + self.model.msg_overhead_s
-        self._push(self.mgr_free_at + self.latency, _RECV,
+        """Serial manager send: one message, msg_overhead_s charged to
+        the sending coordinator shard's clock."""
+        shard = manager_shard(worker, self.n_workers, len(self.mgr_free_at))
+        send_start = max(self.now, self.mgr_free_at[shard])
+        self.mgr_free_at[shard] = send_start + self.model.msg_overhead_s
+        self._push(self.mgr_free_at[shard] + self.latency, _RECV,
                    (worker, tuple(batch)))
+
+    def _register(self, task: Task) -> int:
+        """Index a task the core admitted mid-run (streaming DAG edges
+        emit tasks the sim never saw at construction)."""
+        i = self._index.get(task.task_id)
+        if i is None:
+            i = len(self.tasks)
+            self.tasks.append(task)
+            self._index[task.task_id] = i
+        return i
 
     def _mgr_send(self, worker: int) -> None:
         """Ask the shared protocol core for the next batch (same decision
@@ -160,7 +188,7 @@ class _Sim:
                 self._mgr_speculate(worker)
             return
         self._send_indices(
-            worker, [self._index[t.task_id] for t in batch_tasks])
+            worker, [self._register(t) for t in batch_tasks])
 
     def _mgr_speculate(self, worker: int) -> None:
         """Re-issue the longest-running in-flight task to an idle worker."""
@@ -194,7 +222,7 @@ class _Sim:
         self.task_start[worker] = self.now
         if self.first_start[worker] is None:
             self.first_start[worker] = self.now
-        demand = self.model.io_bytes(self.tasks[idx].size_bytes) \
+        demand = self._task_model(idx).io_bytes(self.tasks[idx].size_bytes) \
             * self.legacy / self.speed[worker]
         self.n_io += 1
         self.in_io[worker] = True
@@ -209,7 +237,8 @@ class _Sim:
         idx = self.cur_task[worker]
         assert idx is not None
         t = self.tasks[idx]
-        cpu = self.model.cpu_seconds(t.size_bytes, self.nppn, t.cpu_cost_hint)
+        cpu = self._task_model(idx).cpu_seconds(
+            t.size_bytes, self.nppn, t.cpu_cost_hint)
         self._push(self.now + cpu * self.legacy / self.speed[worker],
                    _CPU_DONE, worker)
 
@@ -341,6 +370,19 @@ class _Sim:
                 if not static:
                     self.core.on_done(w, done_ids)
                     self._mgr_send(w)
+                    # Streaming DAG: this DONE may have admitted fresh
+                    # downstream tasks while other workers sit idle
+                    # (they drained the queue before the admission).
+                    # Kick every both-views-idle worker, exactly like
+                    # the live drive loop's post-drain kick.
+                    if getattr(self.core, "streaming", False) \
+                            and self.core.pending:
+                        for w2 in range(self.n_workers):
+                            if not self.core.pending:
+                                break
+                            if (not self.dead[w2] and not self.inflight[w2]
+                                    and self.core.idle(w2)):
+                                self._mgr_send(w2)
             elif kind == _DEATH:
                 w = data  # type: ignore[assignment]
                 dead_workers.append(w)
@@ -425,7 +467,9 @@ class _Sim:
             failures=failures,
             task_records=self.records,
             batches=batches,
-            completed_ids=completed_ids)
+            completed_ids=completed_ids,
+            shard_messages=([] if static else list(
+                getattr(self.core, "shard_messages", []) or [])))
 
 
 # ---------------------------------------------------------------------------
@@ -448,13 +492,21 @@ def simulate_self_scheduling(
         speculative: bool = False,
         organize_seed: int = 0,
         policy: object = None,
-        core: Optional[SchedulerCore] = None) -> RunResult:
+        core: Optional[SchedulerCore] = None,
+        n_manager_shards: int = 1,
+        model_fn=None) -> RunResult:
     """Simulate a triples-mode self-scheduled job (the paper's §II.D).
 
     ``policy`` selects the scheduling policy (name or instance, see
     :mod:`repro.runtime.policies`); cost-aware policies estimate task
     seconds from ``model`` at this topology.  Ignored when an
     already-built ``core`` is supplied (run_job resolves it there).
+
+    ``n_manager_shards`` > 1 gives the sim that many coordinator clocks
+    (each paying its own ``msg_overhead_s``) — pair it with a
+    :class:`~repro.runtime.protocol.ShardedCore` supplied via ``core``
+    so decisions and clocks shard identically.  ``model_fn`` maps a task
+    to its phase's cost model (streaming DAG runs); None = ``model``.
     """
     if core is None:
         from repro.runtime.policies import get_policy, model_task_cost
@@ -469,7 +521,8 @@ def simulate_self_scheduling(
     sim = _Sim(tasks, n_workers, nodes, nppn, model,
                poll_interval, worker_death, failure_timeout, core=core,
                legacy_launch_penalty=legacy_launch_penalty,
-               worker_speed=worker_speed, speculative=speculative)
+               worker_speed=worker_speed, speculative=speculative,
+               n_manager_shards=n_manager_shards, model_fn=model_fn)
     return sim.run_self_scheduled()
 
 

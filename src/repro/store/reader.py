@@ -132,6 +132,24 @@ class TrackStore:
     def open(cls, root: str, **kw) -> "TrackStore":
         return cls(root, **kw)
 
+    def reload(self) -> None:
+        """Re-read the manifest and rebuild the index maps.
+
+        A streaming-DAG store grows while it is being read: shards are
+        committed to the manifest (:func:`repro.store.writer.commit_shard`)
+        while earlier shards are already being processed.  A reader that
+        opened the store mid-stream calls this when it misses a
+        track/shard that was committed after its manifest snapshot.
+        """
+        self.manifest = StoreManifest.load(self.root)
+        self._tracks_by_id = {t.track_id: t for t in self.manifest.tracks}
+        self._shards_by_id = {s.shard_id: s for s in self.manifest.shards}
+        self._rows_by_shard = {}
+        for t in self.manifest.tracks:
+            self._rows_by_shard.setdefault(t.shard_id, []).append(t)
+        for rows in self._rows_by_shard.values():
+            rows.sort(key=lambda t: t.row)
+
     def __len__(self) -> int:
         return len(self.manifest.tracks)
 

@@ -41,7 +41,8 @@ from repro.store.format import (
 
 __all__ = ["DEFAULT_TARGET_POINTS", "EST_BYTES_PER_OBS", "ShardPlan",
            "discover_sources", "plan_shards", "build_shard",
-           "ShardBuilder", "finalize_store", "build_store", "main"]
+           "ShardBuilder", "commit_shard", "finalize_manifest",
+           "finalize_store", "build_store", "main"]
 
 #: Default shard size in observation points.  At ~5-8 s between ADS-B
 #: observations this is a few hundred segments per shard — comfortably
@@ -200,6 +201,62 @@ class ShardBuilder:
                                   compression=self.compression)
         return {"shard": rec.to_doc(),
                 "tracks": [t.to_doc() for t in tracks]}
+
+
+def commit_shard(out_root: str, result: dict, *,
+                 compression: str = "zlib",
+                 target_points: int = DEFAULT_TARGET_POINTS
+                 ) -> ShardRecord:
+    """Incrementally append ONE built shard to the store manifest.
+
+    The streaming DAG commits shards as they complete (so downstream
+    process tasks can read them immediately) instead of waiting for
+    :func:`finalize_store`'s single end-of-phase merge.  ``result`` is a
+    :class:`ShardBuilder` return doc.  Idempotent by shard id: a
+    re-commit after a kill between manifest append and manager
+    checkpoint is a no-op (the shard file itself is deterministic and
+    atomically written, so re-running the build task is safe too) — the
+    manifest never duplicates or orphans a shard.  Single-writer: only
+    the manager calls this, so load-modify-save needs no lock.  Entries
+    are kept in the same sorted order as :func:`finalize_store`, so
+    after :func:`finalize_manifest` the manifest bytes are identical to
+    a barrier build's.
+    """
+    try:
+        manifest = StoreManifest.load(out_root)
+    except FileNotFoundError:
+        manifest = StoreManifest(compression=compression,
+                                 target_points=target_points,
+                                 meta={"partial": True})
+    rec = ShardRecord.from_doc(result["shard"])
+    if any(s.shard_id == rec.shard_id for s in manifest.shards):
+        return rec
+    manifest.shards = sorted(manifest.shards + [rec],
+                             key=lambda s: s.shard_id)
+    manifest.tracks = sorted(
+        manifest.tracks + [TrackRecord.from_doc(d)
+                           for d in result["tracks"]],
+        key=lambda t: (t.shard_id, t.row))
+    manifest.save(out_root)
+    return rec
+
+
+def finalize_manifest(out_root: str, *,
+                      compression: str = "zlib",
+                      target_points: int = DEFAULT_TARGET_POINTS,
+                      meta: Optional[dict] = None) -> StoreManifest:
+    """Seal an incrementally-committed store: replace the provisional
+    ``{"partial": True}`` meta and re-save.  The result is byte-identical
+    to :func:`finalize_store` over the same shard results."""
+    manifest = StoreManifest.load(out_root)
+    manifest.compression = compression
+    manifest.target_points = target_points
+    manifest.meta = meta or {}
+    manifest.shards = sorted(manifest.shards, key=lambda s: s.shard_id)
+    manifest.tracks = sorted(manifest.tracks,
+                             key=lambda t: (t.shard_id, t.row))
+    manifest.save(out_root)
+    return manifest
 
 
 def finalize_store(out_root: str, results: Sequence[dict], *,

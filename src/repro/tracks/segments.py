@@ -221,7 +221,8 @@ class SegmentProcessor:
                 raise ValueError(
                     f"read_observations needs a single track; {path!r} "
                     f"selects a shard (use process_file/process_batch)")
-            return self._store(root).read_track(sel["track"])
+            return self._store_read(
+                root, lambda st: st.read_track(sel["track"]))
         return read_observations(path)
 
     # -- store-backed input ----------------------------------------------
@@ -234,10 +235,22 @@ class SegmentProcessor:
             store = self._stores[root] = TrackStore(root)
         return store
 
+    def _store_read(self, root: str, fn):
+        """Run one read against the cached store, retrying once after a
+        manifest reload on a missed track/shard — a streaming-DAG store
+        grows while it is being processed, so a worker's index snapshot
+        can predate the shard its task names."""
+        store = self._store(root)
+        try:
+            return fn(store)
+        except KeyError:
+            store.reload()
+            return fn(store)
+
     def _store_items(self, uri: str) -> list[tuple[str, dict, list[slice]]]:
         """store:// URI -> [(track_id, obs, segs)] for its selection."""
         root, sel = _parse_store_uri(uri)
-        return self._store(root).read_selection(sel)
+        return self._store_read(root, lambda st: st.read_selection(sel))
 
     def process_store(self, root: str, *, prefetch: int = 1,
                       plans=None) -> dict[str, "ProcessedSegments"]:

@@ -17,8 +17,19 @@ store, and the process phase then reads ``store://`` shard tasks
 through the prefetching :class:`repro.store.TrackStore` instead of
 re-parsing CSV text out of zip members.
 
+``--pipeline dag`` replaces the barrier sequence with the streaming
+phase DAG (:func:`repro.runtime.run_dag`): each completed archive feeds
+the shard planner (:class:`_ShardPlanEmitter`), which cuts a
+store-build task the moment enough consecutive archives exist; each
+committed shard (:class:`_ShardCommitEmitter` appends it to the
+manifest incrementally) immediately emits its process task.  No phase
+waits for the slowest task of the previous one, and the final store is
+byte-identical to a barrier run.  ``--manager-shards N`` splits the
+coordinator into N shard queues (paper §V's message-rate wall).
+
 CLI:  PYTHONPATH=src python -m repro.tracks.workflow --backend processes
       PYTHONPATH=src python -m repro.tracks.workflow --input store
+      PYTHONPATH=src python -m repro.tracks.workflow --pipeline dag
 """
 
 from __future__ import annotations
@@ -29,11 +40,16 @@ import json
 import os
 from typing import Optional
 
+from repro.core.messages import Task
 from repro.core.triples import TriplesConfig
 from repro.geometry.aerodromes import synthetic_aerodromes
 from repro.geometry.dem import SyntheticGlobeDEM
-from repro.runtime import ManagerCheckpoint, RunResult, run_job
+from repro.runtime import (
+    EdgeEmitter, ManagerCheckpoint, RunResult, StreamingDAG, run_dag,
+    run_job)
+from repro.store import writer as store_writer
 from repro.store.format import MANIFEST_NAME
+from repro.store.reader import make_store_uri
 from repro.tracks.archive import Archiver, archive_tasks_from_tree
 from repro.tracks.datasets import ScaledDatasetSpec, write_scaled_dataset
 from repro.tracks.organize import Organizer, organize_tasks_from_dir
@@ -58,6 +74,130 @@ class PhaseReport:
                    workers=workers, messages=r.messages_sent)
 
 
+class _ShardPlanEmitter(EdgeEmitter):
+    """archive -> store-build streaming edge: cut shard plans as soon as
+    enough *consecutive* archives exist.
+
+    :func:`repro.store.writer.plan_shards` assigns tracks to shards in
+    sorted-id order, so the plan for shard k depends only on the sizes
+    of the first tracks in that order.  The emitter is primed with the
+    archive node's task ids (the expected zip set), buffers sizes as
+    archives complete out of order, and consumes the contiguous sorted
+    prefix through the same greedy cut — the resulting partition (and
+    shard numbering) is identical to the barrier build's, it just
+    doesn't wait for the last archive before planning the first shard.
+    """
+
+    def __init__(self, archive_root: str, target_points: int):
+        self.archive_root = archive_root
+        self.target_points = target_points
+        self.expected: list[str] = []       # sorted zip ids, set by prime
+        self.idx = 0                        # consumed contiguous prefix
+        self.sizes: dict[str, int] = {}     # zip id -> bytes (fed)
+        self.cur: list[str] = []            # open shard's zip ids
+        self.cur_points = 0
+        self.n_shards = 0
+
+    def prime(self, src_task_ids) -> None:
+        # Archive task id '<y>/<t>/<s>/<b>/<icao>' -> zip id '<...>.zip',
+        # the same root-relative id discover_sources would assign.
+        self.expected = sorted(f"{tid}.zip" for tid in src_task_ids)
+
+    def _cut(self) -> Task:
+        plan = store_writer.ShardPlan(
+            f"s{self.n_shards:05d}",
+            tuple((rel, os.path.join(self.archive_root, rel))
+                  for rel in self.cur))
+        self.n_shards += 1
+        size = sum(self.sizes.pop(rel) for rel in self.cur)
+        self.cur, self.cur_points = [], 0
+        return Task(task_id=f"store/{plan.shard_id}", size_bytes=size,
+                    payload=plan.dumps())
+
+    def _drain(self, skip_missing: bool = False) -> list[Task]:
+        out: list[Task] = []
+        while self.idx < len(self.expected):
+            rel = self.expected[self.idx]
+            if rel not in self.sizes:
+                if not skip_missing:
+                    break
+                # Failed archive: leave the hole, store what exists.
+                self.idx += 1
+                continue
+            est = max(self.sizes[rel] // store_writer.EST_BYTES_PER_OBS, 1)
+            if self.cur and self.cur_points + est > self.target_points:
+                out.append(self._cut())
+            self.cur.append(rel)
+            self.cur_points += est
+            self.idx += 1
+        return out
+
+    def feed(self, task: Task, result) -> list[Task]:
+        rel = f"{task.task_id}.zip"
+        size = getattr(result, "bytes_out", None)
+        if size is None and isinstance(result, dict):
+            size = result.get("bytes_out")
+        if size is None:
+            # Resumed/sim completion without a live result doc: the zip
+            # is on disk (archives commit atomically), measure it.
+            path = os.path.join(self.archive_root, rel)
+            try:
+                size = os.path.getsize(path)
+            except OSError:
+                size = max(task.size_bytes, 1)
+        self.sizes[rel] = int(size)
+        return self._drain()
+
+    def finish(self) -> list[Task]:
+        out = self._drain(skip_missing=True)
+        if self.cur:
+            out.append(self._cut())
+        return out
+
+    def state(self) -> dict:
+        return {"expected": self.expected, "idx": self.idx,
+                "sizes": self.sizes, "cur": self.cur,
+                "cur_points": self.cur_points, "n_shards": self.n_shards}
+
+    def restore(self, state: dict) -> None:
+        self.expected = list(state["expected"])
+        self.idx = int(state["idx"])
+        self.sizes = {k: int(v) for k, v in state["sizes"].items()}
+        self.cur = list(state["cur"])
+        self.cur_points = int(state["cur_points"])
+        self.n_shards = int(state["n_shards"])
+
+
+class _ShardCommitEmitter(EdgeEmitter):
+    """store-build -> process streaming edge: append each built shard to
+    the manifest (:func:`repro.store.writer.commit_shard`, idempotent by
+    shard id) and immediately emit its process task — the same id /
+    size / ``store://`` payload :func:`segment_tasks_from_store` would
+    produce, so processing starts while later shards are still building.
+    Stateless: the manifest on disk IS the commit ledger, and a kill
+    between manifest append and manager checkpoint just re-commits
+    (no-op) on the re-run.
+    """
+
+    def __init__(self, store_dir: str, target_points: int):
+        self.store_dir = store_dir
+        self.target_points = target_points
+
+    def feed(self, task: Task, result) -> list[Task]:
+        from repro.tracks.segments import _STORE_BYTES_PER_POINT
+        if result is None:
+            # DONE without a result doc (e.g. resumed completion whose
+            # records died with a worker): shard builds are
+            # deterministic and atomically committed — redo it here.
+            result = store_writer.ShardBuilder(self.store_dir)(task)
+        rec = store_writer.commit_shard(self.store_dir, result,
+                                        target_points=self.target_points)
+        return [Task(task_id=f"store/{rec.shard_id}",
+                     size_bytes=rec.n_points * _STORE_BYTES_PER_POINT,
+                     payload=make_store_uri(self.store_dir,
+                                            shard=rec.shard_id))]
+
+
 class TrackWorkflow:
     """organize -> archive -> process with self-scheduling + checkpoints."""
 
@@ -73,6 +213,8 @@ class TrackWorkflow:
                  triple: Optional[TriplesConfig] = None,
                  input: str = "zip",
                  store_target_points: Optional[int] = None,
+                 mode: str = "barrier",
+                 n_manager_shards: int = 1,
                  seed: int = 0):
         if exec_backend not in ("threads", "processes"):
             raise ValueError(
@@ -83,6 +225,12 @@ class TrackWorkflow:
             raise ValueError(f"unknown input {input!r}; 'zip' processes "
                              f"archives directly, 'store' inserts a "
                              f"store-build phase")
+        if mode not in ("barrier", "dag"):
+            raise ValueError(f"unknown pipeline mode {mode!r}; 'barrier' "
+                             f"runs the phases sequentially, 'dag' "
+                             f"streams tasks between them")
+        if n_manager_shards < 1:
+            raise ValueError("n_manager_shards must be >= 1")
         from repro.runtime.policies import POLICY_NAMES
         if policy not in POLICY_NAMES:
             raise ValueError(f"unknown scheduling policy {policy!r}; "
@@ -94,6 +242,8 @@ class TrackWorkflow:
         self.store_dir = os.path.join(root, "store")
         self.input = input
         self.store_target_points = store_target_points
+        self.mode = mode
+        self.n_manager_shards = n_manager_shards
         self.ckpt_path = os.path.join(root, "workflow_ckpt.json")
         self.n_workers = (max(triple.worker_processes, 1)
                           if triple is not None else n_workers)
@@ -174,9 +324,6 @@ class TrackWorkflow:
 
     def _run_store_build(self) -> None:
         """Self-scheduled shard ingest: archives -> columnar store."""
-        from repro.store import writer as store_writer
-        from repro.core.messages import Task
-
         sources = store_writer.discover_sources(self.archive_dir)
         sizes = {track_id: size for track_id, _p, size in sources}
         target = (self.store_target_points
@@ -202,7 +349,169 @@ class TrackWorkflow:
             self.store_dir, results, target_points=target,
             meta={"source_root": os.path.abspath(self.archive_dir)})
 
+    def _run_dag(self) -> None:
+        """Streaming-DAG pipeline (``mode='dag'``): one coordinator, no
+        phase barriers — archive completions cut shard plans, shard
+        commits emit process tasks (see the emitters above).  The DAG
+        frontier rides the same workflow checkpoint as the barrier
+        phases, so a mid-stream kill resumes mid-stream."""
+        state = self._load_ckpt()
+        ck = None
+        if state.get("manager") and state.get("manager_phase") == "dag":
+            ck = ManagerCheckpoint.loads(state["manager"])
+
+        # Phases a previous run (barrier OR dag) already completed stay
+        # done: re-running the append-mode Organizer over an organized
+        # tree would double every track, so completed phases are simply
+        # absent from the node graph.
+        done = set(state["phases_done"])
+        if self.input == "store" and "store-build" in done and \
+                not os.path.exists(os.path.join(self.store_dir,
+                                                MANIFEST_NAME)):
+            done.discard("store-build")
+        run_organize = "organize" not in done
+        run_archive = "archive" not in done
+        run_store = self.input == "store" and "store-build" not in done
+        run_process = "process" not in done
+
+        target = (self.store_target_points
+                  or store_writer.DEFAULT_TARGET_POINTS)
+        dag = StreamingDAG()
+        if run_organize:
+            dag.add_node("organize",
+                         fn=Organizer(self.organized_dir, self.registry),
+                         tasks=organize_tasks_from_dir(self.raw_dir))
+        if run_archive:
+            arch = Archiver(self.organized_dir, self.archive_dir)
+            if run_organize:
+                dag.add_node("archive", fn=arch)
+                # Barrier edge: archive-task discovery scans the
+                # organized tree, which is only final once every
+                # organize task has landed.
+                dag.add_edge("organize", "archive",
+                             on_complete=lambda: archive_tasks_from_tree(
+                                 self.organized_dir))
+            else:
+                dag.add_node("archive", fn=arch,
+                             tasks=archive_tasks_from_tree(
+                                 self.organized_dir))
+        if run_process:
+            process_tasks = None
+            if not run_store and not run_archive:
+                process_tasks = (
+                    segment_tasks_from_store(self.store_dir,
+                                             granularity="shard")
+                    if self.input == "store" else
+                    segment_tasks_from_archive_tree(self.archive_dir))
+            dag.add_node("process", fn=SegmentProcessor(
+                dem=SyntheticGlobeDEM(),
+                aerodromes=synthetic_aerodromes(n=64),
+                backend=self.backend, pipeline=self.pipeline),
+                tasks=process_tasks)
+        store_tasks = None
+        if run_store:
+            if run_archive:
+                dag.add_node("store-build",
+                             fn=store_writer.ShardBuilder(self.store_dir))
+                dag.add_edge("archive", "store-build",
+                             emitter=_ShardPlanEmitter(self.archive_dir,
+                                                       target))
+            else:
+                # Archives already on disk — plan the shards up front,
+                # exactly like the barrier store-build phase.
+                sources = store_writer.discover_sources(self.archive_dir)
+                sizes = {tid: size for tid, _p, size in sources}
+                plans = store_writer.plan_shards(sources,
+                                                 target_points=target)
+                store_tasks = [
+                    Task(task_id=f"store/{p.shard_id}",
+                         size_bytes=sum(sizes[t] for t, _ in p.sources),
+                         payload=p.dumps())
+                    for p in plans]
+                dag.add_node(
+                    "store-build",
+                    fn=store_writer.ShardBuilder(self.store_dir),
+                    tasks=store_tasks)
+            if run_process:
+                dag.add_edge("store-build", "process",
+                             emitter=_ShardCommitEmitter(self.store_dir,
+                                                         target))
+        elif self.input != "store" and run_process and run_archive:
+            archive_root = self.archive_dir
+
+            def zip_process_task(task: Task, result) -> list[Task]:
+                # 1:1 expansion matching segment_tasks_from_archive_tree.
+                rel = f"{task.task_id}.zip"
+                path = os.path.join(archive_root, rel)
+                size = getattr(result, "bytes_out", None)
+                if size is None:
+                    size = (os.path.getsize(path)
+                            if os.path.exists(path) else task.size_bytes)
+                return [Task(task_id=rel, size_bytes=int(size),
+                             payload=path)]
+
+            dag.add_edge("archive", "process", expand=zip_process_task)
+
+        if not dag.nodes:
+            state["phases_done"].append("dag")
+            self._save_ckpt(state)
+            return
+
+        def save_mid_stream(c: ManagerCheckpoint) -> None:
+            mid = dict(state)
+            mid["manager"] = c.dumps()
+            mid["manager_phase"] = "dag"
+            self._save_ckpt(mid)
+
+        result = run_dag(
+            dag,
+            backend=self.exec_backend,
+            n_workers=self.n_workers,
+            n_manager_shards=self.n_manager_shards,
+            organization=self.organization,
+            tasks_per_message=self.tasks_per_message,
+            policy=self.policy,
+            poll_interval=self.poll_interval,
+            checkpoint=ck,
+            on_checkpoint=save_mid_stream,
+            checkpoint_interval_s=self.checkpoint_interval_s)
+        if run_store:
+            if store_tasks is not None:
+                # No process edge to stream commits through (a prior run
+                # already processed): commit the built shards here.
+                # commit_shard is idempotent, and builds completed before
+                # a checkpoint kill are deterministic — just redo them.
+                builder = store_writer.ShardBuilder(self.store_dir)
+                docs = result.node_results.get("store-build", {})
+                for task in store_tasks:
+                    doc = docs.get(task.task_id)
+                    if doc is None:
+                        doc = builder(task)
+                    store_writer.commit_shard(self.store_dir, doc,
+                                              target_points=target)
+            # Seal the incrementally-committed manifest; byte-identical
+            # to the barrier build's finalize_store output.
+            store_writer.finalize_manifest(
+                self.store_dir, target_points=target,
+                meta={"source_root": os.path.abspath(self.archive_dir)})
+        # Node names double as the barrier-phase names: record them so
+        # switching back to mode="barrier" later never re-runs them.
+        state["phases_done"].extend(dag.nodes)
+        state["phases_done"].append("dag")
+        state["manager"] = None
+        state["manager_phase"] = None
+        self._save_ckpt(state)
+        n_tasks = sum(len(c) for c in result.node_completed.values())
+        self.reports.append(PhaseReport(
+            phase="dag", job_seconds=result.job_seconds, tasks=n_tasks,
+            workers=self.n_workers, messages=result.run.messages_sent))
+
     def run(self) -> list[PhaseReport]:
+        if self.mode == "dag":
+            state = self._load_ckpt()
+            if "dag" not in set(state["phases_done"]):
+                self._run_dag()
+            return self.reports
         state = self._load_ckpt()
         done = set(state["phases_done"])
         if self.input == "store" and "store-build" in done and \
@@ -261,11 +570,22 @@ def main() -> None:
                     help="scheduling policy for every self-scheduled "
                          "phase (static | fifo_selfsched | sized_lpt | "
                          "adaptive_chunk | shard_affinity)")
-    ap.add_argument("--pipeline", default="fused",
+    ap.add_argument("--pipeline", default="barrier",
+                    choices=["barrier", "dag"],
+                    help="phase pipelining: 'barrier' runs organize/"
+                         "archive/store-build/process as sequential "
+                         "self-scheduled phases; 'dag' streams tasks "
+                         "between phases as dependencies resolve "
+                         "(run_dag)")
+    ap.add_argument("--kernel-pipeline", default="fused",
                     choices=["fused", "unfused"],
                     help="segment hot path: fused device-resident "
                          "bucketed pipeline, or the legacy three-launch "
                          "baseline")
+    ap.add_argument("--manager-shards", type=int, default=1,
+                    help="coordinator shards for --pipeline dag (>1 "
+                         "splits the pending queue by locality and "
+                         "work-steals at the tail)")
     ap.add_argument("--input", default="zip", choices=["zip", "store"],
                     help="process-phase input: re-parse CSV text from "
                          "zip archives, or insert a store-build phase "
@@ -280,12 +600,14 @@ def main() -> None:
         triple = TriplesConfig(nodes=args.nodes, nppn=args.nppn or 8)
     wf = TrackWorkflow(args.root, n_workers=args.workers,
                        exec_backend=args.backend,
-                       pipeline=args.pipeline,
+                       pipeline=args.kernel_pipeline,
                        tasks_per_message=args.tasks_per_message,
                        policy=args.policy,
                        poll_interval=0.005, triple=triple,
                        input=args.input,
-                       store_target_points=args.store_target_points)
+                       store_target_points=args.store_target_points,
+                       mode=args.pipeline,
+                       n_manager_shards=args.manager_shards)
     if not os.path.isdir(wf.raw_dir):
         n = wf.generate_raw(n_files=args.files, scale=args.scale)
         print(f"generated {n} raw files under {wf.raw_dir}")

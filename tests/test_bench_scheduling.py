@@ -1,10 +1,13 @@
 """Tests for the scheduling-policy benchmark matrix + artifact tooling.
 
-The quick tier IS the ISSUE-5 acceptance cell set, so running it here
-(and asserting every cell passes) keeps the CI gate honest locally:
-adaptive_chunk and sized_lpt >= 1.3x static makespan on the heavy-tail
-dataset under 20 % worker deaths, and shard_affinity cutting measured
-prefetch wait vs fifo_selfsched on the store-backed feed.  Also covers
+The quick tier IS the acceptance cell set (ISSUE-5 policy cells plus
+the ISSUE-6 streaming-DAG cells), so running it here (and asserting
+every cell passes) keeps the CI gate honest locally: adaptive_chunk
+and sized_lpt >= 1.3x static makespan on the heavy-tail dataset under
+20 % worker deaths, shard_affinity cutting measured prefetch wait vs
+fifo_selfsched on the store-backed feed, the pipelined DAG >= 1.5x
+over the 3-phase barrier run, and 4 manager shards >= 1.3x
+single-manager dispatch at 1024 workers.  Also covers
 schema validation, deterministic re-runs of the sim cells, and the
 compare CLI's schema dispatch (makespan_seconds gated, schema mismatch
 exit-1).
@@ -31,7 +34,10 @@ def test_quick_tier_is_the_acceptance_cells(quick_doc):
     names = {r["name"] for r in quick_doc["scenarios"]}
     assert names == {"sched_heavy_tail_deaths20_adaptive_chunk",
                      "sched_heavy_tail_deaths20_sized_lpt",
-                     "sched_store_affinity_prefetch_wait"}
+                     "sched_store_affinity_prefetch_wait",
+                     "sched_dag_stream_vs_barrier_heavy_tail",
+                     "sched_msgwall_shards4_w256",
+                     "sched_msgwall_shards4_w1024"}
 
 
 def test_quick_tier_passes_and_validates(quick_doc):
@@ -150,4 +156,4 @@ def test_campaign_cli_flag_lists_scheduling_scenarios():
     names = [sc.name for sc in sched.scheduling_scenarios()]
     assert len(names) == len(set(names))
     assert sum(1 for sc in sched.scheduling_scenarios()
-               if sc.tier == "quick") == 3
+               if sc.tier == "quick") == 6

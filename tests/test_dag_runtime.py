@@ -1,0 +1,237 @@
+"""Streaming-DAG runtime invariants.
+
+Extends the exactly-once and dispatch-determinism properties of
+``tests/test_scheduler_properties.py`` from the flat ``run_job`` path to
+:func:`repro.runtime.dag.run_dag`: every (node, original-id) pair must
+complete exactly once across all three backends and across manager
+sharding, dynamically admitted downstream tasks included, and the sim
+dispatch log must be bitwise repeatable.  The hypothesis test below
+additionally kills a :class:`DagCoordinator` mid-stream at a random
+point, serializes its frontier through ``ManagerCheckpoint`` text, and
+resumes into a *fresh* DAG instance — the union of fresh completions
+before and after the restart must cover every task exactly once.
+"""
+
+from __future__ import annotations
+
+import random
+import time
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cost_model import PhaseCostModel
+from repro.core.messages import Task
+from repro.runtime.dag import DagCoordinator, StreamingDAG, run_dag
+from repro.runtime.protocol import ManagerCheckpoint
+
+FAST = dict(poll_interval=0.002)
+BACKENDS = ("threads", "processes", "sim")
+
+SIM_MODEL = PhaseCostModel(
+    name="t", r_process=1e6, b_node=8e6, b_global=64e6,
+    cpu_rate=50e6, contention_alpha=0.001, task_overhead_s=0.01,
+    msg_overhead_s=0.001)
+
+
+def _tasks(n, size_fn=lambda i: (i * 37) % 23 + 1):
+    return [Task(task_id=f"t{i:04d}", size_bytes=size_fn(i), timestamp=i)
+            for i in range(n)]
+
+
+def _double(task):            # module-level: picklable for processes
+    return task.size_bytes * 2
+
+
+def _size(task):
+    return task.size_bytes
+
+
+def _slow_double(task):
+    time.sleep(0.005)
+    return task.size_bytes * 2
+
+
+def _slow_size(task):
+    time.sleep(0.005)
+    return task.size_bytes
+
+
+def _fanout(task, _result):
+    """Stateless 1:2 streaming expansion (downstream sizes preserved)."""
+    return [Task(task_id=f"{task.task_id}/{suffix}",
+                 size_bytes=task.size_bytes, timestamp=task.timestamp)
+            for suffix in ("x", "y")]
+
+
+def _make_dag(n, *, a_fn=_double, b_fn=_size, size_fn=None):
+    """Source node ``a`` (n seeded tasks) streaming 1:2 into node ``b``.
+
+    StreamingDAG instances are single-use — callers build a fresh one
+    per run (the module docstring of repro.runtime.dag requires it).
+    """
+    tasks = _tasks(n) if size_fn is None else _tasks(n, size_fn=size_fn)
+    dag = StreamingDAG()
+    dag.add_node("a", fn=a_fn, tasks=tasks)
+    dag.add_node("b", fn=b_fn)
+    dag.add_edge("a", "b", expand=_fanout)
+    return dag
+
+
+def _expected_ids(n):
+    a_ids = {f"t{i:04d}" for i in range(n)}
+    b_ids = {f"{t}/{s}" for t in a_ids for s in ("x", "y")}
+    return a_ids, b_ids
+
+
+# -- exactly-once across backends and manager shards --------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("shards", (1, 2))
+def test_dag_exactly_once_across_backends(backend, shards):
+    n = 18
+    dres = run_dag(_make_dag(n), backend=backend, n_workers=4,
+                   n_manager_shards=shards, tasks_per_message=2,
+                   cost_model=SIM_MODEL, **FAST)
+    a_ids, b_ids = _expected_ids(n)
+    assert dres.node_completed["a"] == a_ids
+    assert dres.node_completed["b"] == b_ids
+    assert dres.run.completed_ids == (
+        {f"a:{t}" for t in a_ids} | {f"b:{t}" for t in b_ids})
+    # Fault-free: the dispatch log covers every namespaced id once.
+    flat = [tid for batch in dres.run.batches for tid in batch]
+    assert len(flat) == len(set(flat)) == 3 * n
+    if backend != "sim":
+        for i in range(n):
+            oid = f"t{i:04d}"
+            assert dres.node_results["a"][oid] == 2 * ((i * 37) % 23 + 1)
+
+
+# -- exactly-once under 20% worker deaths -------------------------------
+
+
+@pytest.mark.parametrize("backend", ["threads", "processes"])
+def test_dag_exactly_once_under_live_worker_death(backend):
+    # 1 of 5 workers (20%) dies on its 3rd task; enough aggregate work
+    # (60 executions x 5ms) that w0 is guaranteed to reach its fatal
+    # task even with spawn-staggered worker boot.
+    n = 20
+    dres = run_dag(_make_dag(n, a_fn=_slow_double, b_fn=_slow_size),
+                   backend=backend, n_workers=5, tasks_per_message=2,
+                   worker_fail_after={"w0": 3}, failure_timeout=0.5,
+                   **FAST)
+    a_ids, b_ids = _expected_ids(n)
+    assert dres.run.failed_workers == ["w0"]
+    assert dres.run.reassigned_tasks >= 1
+    assert dres.node_completed["a"] == a_ids
+    assert dres.node_completed["b"] == b_ids
+    assert dres.run.completed_ids == (
+        {f"a:{t}" for t in a_ids} | {f"b:{t}" for t in b_ids})
+
+
+@pytest.mark.parametrize("shards", (1, 2))
+def test_dag_exactly_once_under_sim_worker_deaths(shards):
+    # 2 of 10 workers (20%) die mid-run (10 MB tasks take ~10 s of sim
+    # time each, so t=5/9 s lands inside the job); their in-flight
+    # tasks must be re-queued and every node still completes fully.
+    n = 40
+    dres = run_dag(_make_dag(n, size_fn=lambda i: 10_000_000),
+                   backend="sim", n_workers=10, n_manager_shards=shards,
+                   worker_death={0: 5.0, 1: 9.0}, failure_timeout=2.0,
+                   cost_model=SIM_MODEL, **FAST)
+    a_ids, b_ids = _expected_ids(n)
+    assert set(dres.run.failed_workers) == {0, 1}
+    assert dres.run.reassigned_tasks >= 1
+    assert dres.node_completed["a"] == a_ids
+    assert dres.node_completed["b"] == b_ids
+
+
+# -- dispatch determinism ------------------------------------------------
+
+
+def test_dag_sim_dispatch_is_deterministic():
+    n = 30
+    runs = [run_dag(_make_dag(n), backend="sim", n_workers=6,
+                    tasks_per_message=3, cost_model=SIM_MODEL, **FAST)
+            for _ in range(2)]
+    assert runs[0].run.batches == runs[1].run.batches
+    assert runs[0].run.job_seconds == runs[1].run.job_seconds
+    assert runs[0].run.dispatch_digest == runs[1].run.dispatch_digest
+
+
+@pytest.mark.parametrize("shards", (2, 3))
+def test_dag_sharded_sim_deterministic_and_equivalent(shards):
+    n = 30
+    base = run_dag(_make_dag(n), backend="sim", n_workers=6,
+                   cost_model=SIM_MODEL, **FAST)
+    first, second = [
+        run_dag(_make_dag(n), backend="sim", n_workers=6,
+                n_manager_shards=shards, cost_model=SIM_MODEL, **FAST)
+        for _ in range(2)]
+    # Sharded dispatch is repeatable bit-for-bit ...
+    assert first.run.batches == second.run.batches
+    assert first.run.job_seconds == second.run.job_seconds
+    # ... splits the ASSIGN load across all shards ...
+    assert len(first.run.shard_messages) == shards
+    assert all(m > 0 for m in first.run.shard_messages)
+    # ... and completes the same work as the single-manager baseline.
+    assert first.run.completed_ids == base.run.completed_ids
+
+
+# -- mid-stream kill / resume -------------------------------------------
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 3),
+       st.integers(0, 80))
+@settings(max_examples=25, deadline=None)
+def test_dag_mid_stream_kill_resume_exactly_once(opseed, per_msg, steps):
+    """Kill the coordinator at a random mid-stream point and resume.
+
+    Drives a DagCoordinator by hand for a random number of dispatch /
+    partial-DONE operations, then 'kills' it: the frontier checkpoint is
+    serialized to text (anything in flight at that instant is lost) and
+    restored into a coordinator over a FRESH DAG instance.  Fresh
+    completions before the kill plus fresh completions after the resume
+    must cover every (node, id) pair exactly once — nothing re-runs,
+    nothing is dropped, streamed ``b`` tasks included.
+    """
+    n = 10
+    workers = ["w0", "w1", "w2"]
+    coord = DagCoordinator(_make_dag(n), n_workers=len(workers),
+                           tasks_per_message=per_msg)
+    rng = random.Random(opseed)
+    inflight = {w: [] for w in workers}
+    fresh: list[str] = []
+    for _ in range(steps):
+        if coord.done:
+            break
+        w = rng.choice(workers)
+        if rng.random() < 0.6:
+            inflight[w].extend(t.task_id for t in coord.next_batch(w))
+        elif inflight[w]:
+            take = rng.randint(1, len(inflight[w]))
+            done_ids, inflight[w] = inflight[w][:take], inflight[w][take:]
+            fresh.extend(coord.on_done(w, done_ids))
+
+    ck = ManagerCheckpoint.loads(coord.checkpoint().dumps())
+    coord2 = DagCoordinator(_make_dag(n), n_workers=len(workers),
+                            tasks_per_message=per_msg, checkpoint=ck)
+
+    guard = 0
+    while not coord2.done:
+        guard += 1
+        assert guard < 10_000, "resumed DAG coordinator made no progress"
+        for w in workers:
+            batch = coord2.next_batch(w)
+            if batch:
+                fresh.extend(
+                    coord2.on_done(w, [t.task_id for t in batch]))
+
+    a_ids, b_ids = _expected_ids(n)
+    expected = sorted({f"a:{t}" for t in a_ids}
+                      | {f"b:{t}" for t in b_ids})
+    assert sorted(fresh) == expected
+    assert coord2.node_completed["a"] == a_ids
+    assert coord2.node_completed["b"] == b_ids

@@ -377,6 +377,88 @@ def test_workflow_store_build_resumes_past_checkpointed_shards(tmp_path):
         [p.shard_id for p in plans]
 
 
+def test_commit_shard_recommit_is_idempotent(golden):
+    """A worker killed between the per-shard manifest append and the
+    manager checkpoint save is re-dispatched the same shard task on
+    resume: the second ``commit_shard`` of the same shard_id must not
+    duplicate the manifest row, orphan a shard file, or change bytes."""
+    from repro.store.writer import (
+        ShardBuilder, commit_shard, finalize_manifest)
+
+    sources = discover_sources(golden["arc"])
+    plans = plan_shards(sources, target_points=1)
+    assert len(plans) >= 2
+    store_dir = os.path.join(golden["root"], "store_recommit")
+    build = ShardBuilder(store_dir)
+    results = [build(Task(task_id=f"store/{p.shard_id}",
+                          payload=p.dumps())) for p in plans]
+    for r in results:
+        commit_shard(store_dir, r, target_points=1)
+    first = StoreManifest.load(store_dir)
+    shard0 = os.path.join(store_dir, first.shards[0].filename)
+    blob0 = open(shard0, "rb").read()
+    # the re-dispatched task rebuilds AND re-commits shard 0
+    commit_shard(store_dir, build(
+        Task(task_id=f"store/{plans[0].shard_id}",
+             payload=plans[0].dumps())), target_points=1)
+    again = StoreManifest.load(store_dir)
+    assert [s.shard_id for s in again.shards] == \
+        [p.shard_id for p in plans]                  # no duplicate row
+    assert open(shard0, "rb").read() == blob0        # no byte churn
+    on_disk = sorted(
+        os.path.relpath(os.path.join(d, f), store_dir).replace(os.sep, "/")
+        for d, _dirs, files in os.walk(store_dir) for f in files)
+    assert on_disk == sorted(
+        ["store_manifest.json"] + [s.filename for s in again.shards])
+    manifest = finalize_manifest(store_dir, target_points=1)
+    clean = build_store(golden["arc"],
+                        os.path.join(golden["root"], "store_clean1"),
+                        target_points=1)
+    assert [s.to_doc() for s in manifest.shards] == \
+        [s.to_doc() for s in clean.shards]
+    assert [t.to_doc() for t in manifest.tracks] == \
+        [t.to_doc() for t in clean.tracks]
+
+
+def test_dag_store_build_recommits_unckpted_shard(tmp_path):
+    """Workflow-level twin of the recommit test: a shard file + partial
+    manifest row exist on disk but the (lost) checkpoint never recorded
+    the task, so the streaming DAG re-runs it end to end.  The sealed
+    store must equal a clean single-shot build — no duplicated or
+    orphaned shard."""
+    from repro.store.writer import ShardBuilder, commit_shard
+    from repro.tracks.workflow import TrackWorkflow
+
+    wfz = TrackWorkflow(str(tmp_path), n_workers=2, poll_interval=0.003)
+    wfz.generate_raw(n_files=3, scale=2e4)
+    wfz.run()                      # organize + archive + (zip) process
+    sources = discover_sources(wfz.archive_dir)
+    plans = plan_shards(sources, target_points=1)
+    assert len(plans) >= 2
+    store_dir = str(tmp_path / "store")
+    commit_shard(store_dir, ShardBuilder(store_dir)(
+        Task(task_id=f"store/{plans[0].shard_id}",
+             payload=plans[0].dumps())), target_points=1)
+
+    wfd = TrackWorkflow(str(tmp_path), n_workers=2, poll_interval=0.003,
+                        input="store", store_target_points=1, mode="dag")
+    reports = wfd.run()
+    assert [r.phase for r in reports] == ["dag"]
+    manifest = StoreManifest.load(store_dir)
+    assert manifest.meta.get("partial") is None      # sealed
+    clean = build_store(wfz.archive_dir, str(tmp_path / "store_clean"),
+                        target_points=1)
+    assert [s.to_doc() for s in manifest.shards] == \
+        [s.to_doc() for s in clean.shards]
+    assert [t.to_doc() for t in manifest.tracks] == \
+        [t.to_doc() for t in clean.tracks]
+    for s in manifest.shards:
+        with open(os.path.join(store_dir, s.filename), "rb") as a, \
+                open(os.path.join(str(tmp_path / "store_clean"),
+                                  s.filename), "rb") as b:
+            assert a.read() == b.read()
+
+
 # ---------------------------------------------------------------------------
 # Archiver crash-safety (satellite).
 # ---------------------------------------------------------------------------
