@@ -1,0 +1,29 @@
+"""Continuous-ingest serving BENCH artifact CLI (thin adapter).
+
+Benchmarks the serving mode (:mod:`repro.serving.ingest` /
+:mod:`repro.serving.service`): an :class:`~repro.serving.IngestService`
+tails a synthetic feed into the columnar store while a
+:class:`~repro.serving.StoreFrontEnd` answers tiny ``latest``/``nearest``
+lookups and generation-pinned snapshot reads, and writes a
+schema-validated ``BENCH_serving.json`` (``repro.bench.serving/v1``).
+Exits non-zero if any scenario misses its check (CI gates on the quick
+tier: live-ingested store byte-identical to a batch build of the same
+observations, tiny-query p99 under concurrent ingest <= 3x idle p99,
+ingest backlog bounded by the shard target).
+
+    PYTHONPATH=src python benchmarks/serving_bench.py --quick
+    PYTHONPATH=src python benchmarks/serving_bench.py --out BENCH_serving.json
+
+The scenario declarations and record layout live in
+:mod:`repro.bench.serving` (``python -m repro.bench.serving`` is the
+same entry point).
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.bench.serving import main
+
+if __name__ == "__main__":
+    sys.exit(main())

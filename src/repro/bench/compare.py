@@ -15,7 +15,13 @@ BENCH kind the repo emits:
     dispatch throughput (``dispatch_rate_msgs_per_s``) printed
     alongside, so a policy that holds its makespan by burning
     worker-time imbalance — or a change that quietly serializes the
-    manager — is still visible in the diff.
+    manager — is still visible in the diff;
+  * ``repro.bench.serving/v1`` — ``ingest_lag_max_points`` (worst
+    accepted-but-uncommitted backlog during continuous ingest; only
+    the deterministic inline-mode cells publish it under ``metrics``),
+    with non-gating rows for ``shards_committed``/``points_ingested``
+    so a cut-rule change that silently re-shards the same feed is
+    visible.
 
 All default metrics are lower-is-better and deterministic for a fixed
 seed; live wall-clock numbers live under ``measured`` and are
@@ -49,6 +55,7 @@ DEFAULT_METRICS = {
     "repro.bench.kernels/v1": "padded_fraction",
     "repro.bench.storage/v1": "bytes_per_point",
     "repro.bench.scheduling/v1": "makespan_seconds",
+    "repro.bench.serving/v1": "ingest_lag_max_points",
 }
 
 #: schema -> informational secondary metrics: their deltas are printed
@@ -56,6 +63,7 @@ DEFAULT_METRICS = {
 INFO_METRICS = {
     "repro.bench.scheduling/v1": ("busy_p50_s", "busy_p90_s",
                                   "dispatch_rate_msgs_per_s"),
+    "repro.bench.serving/v1": ("shards_committed", "points_ingested"),
 }
 
 

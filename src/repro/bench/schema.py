@@ -25,6 +25,13 @@ Three artifact kinds share the scenario-record shape:
     fault-profile x backend, and prefetch-wait attribution for the
     store-backed shard-affinity cells.  Scheduling records use a
     policy x dataset x fault-profile x backend ``spec.run`` shape.
+  * ``BENCH_serving.json`` (``repro.bench.serving/v1``) — continuous-
+    ingest serving records from ``benchmarks/serving_bench.py``:
+    snapshot byte-identity of the live-appended store vs a batch
+    build, tiny-query p50/p99 latency idle vs under concurrent
+    ingest, and maximum accepted-but-uncommitted ingest backlog.
+    Serving records use a mode x feed-shape x shard-target
+    ``spec.run`` shape.
 
 Scenario record layout::
 
@@ -52,11 +59,12 @@ import json
 from typing import Any
 
 __all__ = ["CAMPAIGN_SCHEMA", "SMOKE_SCHEMA", "KERNELS_SCHEMA",
-           "STORAGE_SCHEMA", "SCHEDULING_SCHEMA", "SCHEMA_VERSION",
+           "STORAGE_SCHEMA", "SCHEDULING_SCHEMA", "SERVING_SCHEMA",
+           "SCHEMA_VERSION",
            "NONDETERMINISTIC_RECORD_KEYS", "NONDETERMINISTIC_DOC_KEYS",
            "validate_record", "validate_campaign", "validate_smoke",
            "validate_kernels", "validate_storage", "validate_scheduling",
-           "canonical_bytes"]
+           "validate_serving", "canonical_bytes"]
 
 SCHEMA_VERSION = 1
 CAMPAIGN_SCHEMA = "repro.bench.campaign/v1"
@@ -64,6 +72,7 @@ SMOKE_SCHEMA = "repro.bench.smoke/v1"
 KERNELS_SCHEMA = "repro.bench.kernels/v1"
 STORAGE_SCHEMA = "repro.bench.storage/v1"
 SCHEDULING_SCHEMA = "repro.bench.scheduling/v1"
+SERVING_SCHEMA = "repro.bench.serving/v1"
 
 NONDETERMINISTIC_RECORD_KEYS = ("measured", "timing")
 NONDETERMINISTIC_DOC_KEYS = ("created_at", "environment", "timing")
@@ -95,6 +104,15 @@ _SCHEDULING_SPEC_REQUIRED = ("policy", "dataset", "backend", "n_workers",
                              "fault_profile", "seed")
 _SCHEDULING_METRICS_REQUIRED = ("tasks_completed", "messages_sent",
                                 "makespan_seconds")
+# Serving-bench records describe a continuous-ingest cell: mode x feed
+# shape x shard target.  Latency quantiles live under ``measured``
+# (wall-clock); the required metrics are the deterministic counters plus
+# the byte-identity flag the acceptance gate reads.
+_SERVING_SPEC_REQUIRED = ("mode", "n_files", "obs_per_file",
+                          "feed_batch", "target_points", "tiny_queries",
+                          "seed")
+_SERVING_METRICS_REQUIRED = ("shards_committed", "points_ingested",
+                             "snapshot_identical")
 
 
 def _num(x: Any) -> bool:
@@ -265,6 +283,14 @@ def validate_scheduling(doc: Any) -> list[str]:
         doc, label="scheduling", schema=SCHEDULING_SCHEMA,
         spec_required=_SCHEDULING_SPEC_REQUIRED,
         required_metrics=_SCHEDULING_METRICS_REQUIRED)
+
+
+def validate_serving(doc: Any) -> list[str]:
+    """Structural validation of a BENCH_serving.json artifact."""
+    return _validate_matrix_doc(
+        doc, label="serving", schema=SERVING_SCHEMA,
+        spec_required=_SERVING_SPEC_REQUIRED,
+        required_metrics=_SERVING_METRICS_REQUIRED)
 
 
 def validate_smoke(doc: Any) -> list[str]:

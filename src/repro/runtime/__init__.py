@@ -29,7 +29,7 @@ from repro.runtime.sim import (
 from repro.runtime.api import BACKENDS, run_job
 from repro.runtime.dag import (
     DagCoordinator, DagResult, EdgeEmitter, PhaseNode, StreamingDAG,
-    run_dag)
+    run_dag, run_service)
 
 __all__ = [
     "BACKENDS", "DEFAULT_POLL_INTERVAL_S", "DEFAULT_POLL_S",
@@ -39,6 +39,6 @@ __all__ = [
     "SimTaskRecord", "StreamingDAG", "ThreadTransport", "Transport",
     "WorkerStats", "drive", "get_policy", "manager_shard",
     "merge_tasks_per_message", "partition_tasks_by_locality", "run_dag",
-    "run_job", "simulate_self_scheduling", "simulate_static",
-    "worker_loop",
+    "run_job", "run_service", "simulate_self_scheduling",
+    "simulate_static", "worker_loop",
 ]

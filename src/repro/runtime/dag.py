@@ -60,7 +60,7 @@ from repro.runtime.transports import TRANSPORTS
 from repro.runtime import sim as _sim
 
 __all__ = ["PhaseNode", "StreamingDAG", "EdgeEmitter", "DagCoordinator",
-           "DagResult", "run_dag"]
+           "DagResult", "run_dag", "run_service"]
 
 #: Separator between node name and original task id on the wire.
 _SEP = ":"
@@ -82,6 +82,12 @@ class PhaseNode:
     tasks: Optional[Sequence[Task]] = None
     batch_fn: Optional[Callable[[list[Task]], dict]] = None
     cost_model: Optional[Any] = None
+    #: An *open* node never seals on its own: external callers keep
+    #: admitting tasks mid-run (:meth:`DagCoordinator.admit_node`) until
+    #: :meth:`DagCoordinator.close_node` declares the stream finished.
+    #: This is what turns a batch DAG into a service (see
+    #: :func:`run_service`).
+    open: bool = False
 
     def __post_init__(self) -> None:
         if not self.name or _SEP in self.name:
@@ -249,6 +255,10 @@ class DagCoordinator:
         self.node_failed: dict[str, set[str]] = {n: set() for n in self.topo}
         self.sealed: set[str] = set()
         self.complete: set[str] = set()
+        #: Open nodes (live admission) and the subset already closed.
+        self.open_nodes: set[str] = {n for n in self.topo
+                                     if dag.nodes[n].open}
+        self._closed: set[str] = set()
         # Edge runtime flags live here (not on the shared _Edge objects).
         self._edge_primed = [False] * len(dag.edges)
         self._edge_finished = [False] * len(dag.edges)
@@ -258,6 +268,7 @@ class DagCoordinator:
                   else None)
         if checkpoint is not None and checkpoint.frontier:
             fr = checkpoint.frontier
+            self._closed = set(fr.get("closed", [])) & self.open_nodes
             for name, doc in fr.get("nodes", {}).items():
                 if name not in self.node_admitted:
                     continue
@@ -340,7 +351,33 @@ class DagCoordinator:
         return fresh
 
     def _is_sealed(self, name: str) -> bool:
+        if name in self.open_nodes and name not in self._closed:
+            return False
         return all(e.src in self.complete for e in self.in_edges[name])
+
+    # -- live admission (open nodes) ---------------------------------------
+
+    def admit_node(self, name: str, tasks: Sequence[Task]) -> int:
+        """Externally admit tasks to an open node mid-run (a service's
+        ingest loop calling in from :func:`run_service`'s ``tick``).
+        Deduped exactly-once like every other admission; returns the
+        number actually admitted.  Raises once the node is sealed —
+        admission after :meth:`close_node` is a caller bug."""
+        if name not in self.node_admitted:
+            raise KeyError(f"unknown node {name!r}")
+        if name in self.sealed:
+            raise RuntimeError(
+                f"node {name!r} is sealed; no further admission")
+        return len(self._admit(name, tasks))
+
+    def close_node(self, name: str) -> None:
+        """Declare an open node's external stream finished: the node can
+        now seal (priming out-edge emitters) and complete once its
+        admitted tasks resolve.  Idempotent."""
+        if name not in self.open_nodes:
+            raise KeyError(f"node {name!r} is not open")
+        self._closed.add(name)
+        self._cascade()
 
     def _is_complete(self, name: str) -> bool:
         comp, fail = self.node_completed[name], self.node_failed[name]
@@ -494,7 +531,8 @@ class DagCoordinator:
         return ManagerCheckpoint(
             completed, inner_ck.pending_ids,
             policy_state=inner_ck.policy_state,
-            frontier={"nodes": nodes, "edges": edges})
+            frontier={"nodes": nodes, "edges": edges,
+                      "closed": sorted(self._closed)})
 
 
 class _DagRouter:
@@ -674,6 +712,113 @@ def run_dag(dag: StreamingDAG, *,
                     raise_on_failure=raise_on_failure,
                     backend=backend)
 
+    node_results: dict[str, dict[str, Any]] = {n: {} for n in coord.topo}
+    for tid, res in run.results.items():
+        name, oid = coord.split_id(tid)
+        node_results.setdefault(name, {})[oid] = res
+    return DagResult(
+        job_seconds=run.job_seconds,
+        run=run,
+        node_results=node_results,
+        node_completed={n: frozenset(coord.node_completed[n])
+                        for n in coord.topo})
+
+
+class _TickingCore:
+    """Facade that interleaves a service ``tick`` with the existing
+    :func:`~repro.runtime.protocol.drive` loop.
+
+    ``drive`` polls ``core.done`` once per iteration; this wrapper runs
+    the tick there — so admission, failure detection, checkpointing and
+    worker accounting all stay in the one battle-tested loop instead of
+    a second hand-rolled one.  When ``tick`` returns ``False`` the
+    service enters shutdown: every still-open node is closed, and
+    ``drive`` drains the frontier to completion as for a batch DAG.
+    """
+
+    streaming = True
+
+    def __init__(self, coord: DagCoordinator,
+                 tick: Callable[[DagCoordinator], Any]):
+        self._coord = coord
+        self._tick = tick
+        self._closing = False
+
+    def __getattr__(self, name):
+        return getattr(self._coord, name)
+
+    @property
+    def done(self) -> bool:
+        if not self._closing:
+            if self._tick(self._coord) is False:
+                self._closing = True
+                for n in sorted(self._coord.open_nodes
+                                - self._coord._closed):
+                    self._coord.close_node(n)
+        return self._coord.done
+
+
+def run_service(dag: StreamingDAG, *,
+                tick: Callable[[DagCoordinator], Any],
+                backend: str = "threads",
+                n_workers: int = 2,
+                n_manager_shards: int = 1,
+                organization: str = "largest_first",
+                tasks_per_message: int = 1,
+                policy: Optional[Any] = None,
+                poll_interval: float = DEFAULT_POLL_INTERVAL_S,
+                failure_timeout: Optional[float] = None,
+                checkpoint: Optional[ManagerCheckpoint] = None,
+                on_checkpoint: Optional[Callable[[ManagerCheckpoint],
+                                                 None]] = None,
+                checkpoint_interval_s: float = 1.0,
+                organize_seed: int = 0,
+                raise_on_failure: bool = True,
+                worker_fail_after: Optional[dict[str, int]] = None,
+                mp_context: Optional[str] = None) -> DagResult:
+    """Run a :class:`StreamingDAG` with *open* nodes as a live service.
+
+    Unlike :func:`run_dag`, the task set is not known up front: the DAG
+    must contain at least one :class:`PhaseNode` with ``open=True``, and
+    ``tick(coord)`` — called once per manager loop iteration, on the
+    manager thread — feeds it via :meth:`DagCoordinator.admit_node`
+    (e.g. an ingest scan cutting new store shards).  Return ``False``
+    from ``tick`` to begin shutdown: open nodes are closed and the loop
+    drains outstanding work exactly like a batch DAG run.
+
+    Live backends only (a *service* has no simulated clock to live on);
+    everything else — exactly-once, checkpoint/resume, two-tier failure
+    detection, streaming re-kicks — is inherited from ``drive``.
+    """
+    if backend not in TRANSPORTS:
+        raise ValueError(
+            f"run_service needs a live backend {sorted(TRANSPORTS)}, "
+            f"got {backend!r}")
+    if not any(dag.nodes[n].open for n in dag.order):
+        raise ValueError("run_service needs at least one open node "
+                         "(otherwise use run_dag)")
+    coord = DagCoordinator(
+        dag, n_workers=n_workers, n_manager_shards=n_manager_shards,
+        organization=organization, tasks_per_message=tasks_per_message,
+        policy=policy, organize_seed=organize_seed,
+        checkpoint=checkpoint)
+    router = _DagRouter({n: dag.nodes[n].fn for n in coord.topo})
+    heartbeat = (failure_timeout / 3 if failure_timeout is not None
+                 else None)
+    kwargs: dict[str, Any] = {}
+    if backend == "processes" and mp_context is not None:
+        kwargs["mp_context"] = mp_context
+    transport = TRANSPORTS[backend](
+        n_workers, router, batch_fn=router.process_batch,
+        poll_interval=poll_interval, heartbeat_interval=heartbeat,
+        worker_fail_after=worker_fail_after, **kwargs)
+    run = drive(_TickingCore(coord, tick), transport,
+                poll_interval=poll_interval,
+                failure_timeout=failure_timeout,
+                on_checkpoint=on_checkpoint,
+                checkpoint_interval_s=checkpoint_interval_s,
+                raise_on_failure=raise_on_failure,
+                backend=backend)
     node_results: dict[str, dict[str, Any]] = {n: {} for n in coord.topo}
     for tid, res in run.results.items():
         name, oid = coord.split_id(tid)

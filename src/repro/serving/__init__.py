@@ -1,5 +1,20 @@
-"""Batched serving: prefill + cached decode with request batching."""
+"""Serving: batched decode requests and continuous-ingest store queries.
+
+Two front ends share the fixed-slot admission discipline:
+
+* :class:`BatchedServer` — prefill + cached decode with request
+  batching (``server.py``).
+* :class:`StoreFrontEnd` — tiny ``latest``/``nearest`` lookups and
+  generation-pinned bulk snapshot reads over a store that
+  :class:`IngestService` is appending to live (``ingest.py`` /
+  ``service.py``).
+"""
 
 from repro.serving.server import BatchedServer, Request
+from repro.serving.ingest import (
+    FeedSpec, IngestService, ServiceKilled, SyntheticFeed)
+from repro.serving.service import Query, StoreFrontEnd, snapshot_digest
 
-__all__ = ["BatchedServer", "Request"]
+__all__ = ["BatchedServer", "FeedSpec", "IngestService", "Query",
+           "Request", "ServiceKilled", "StoreFrontEnd", "SyntheticFeed",
+           "snapshot_digest"]

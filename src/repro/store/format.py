@@ -126,6 +126,13 @@ class StoreManifest:
 
     compression: str = "zlib"
     target_points: int = 0          # writer's shard-sizing knob, recorded
+    #: Monotonic append counter: bumped by every
+    #: :func:`repro.store.writer.commit_shard`, normalized to
+    #: ``len(shards)`` when the store is sealed — so an incremental
+    #: build and a batch build of the same inputs stay byte-identical,
+    #: while readers can detect any post-open append by comparing
+    #: generations alone.
+    generation: int = 0
     shards: list[ShardRecord] = dataclasses.field(default_factory=list)
     tracks: list[TrackRecord] = dataclasses.field(default_factory=list)
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -137,6 +144,7 @@ class StoreManifest:
             "format": STORE_FORMAT,
             "compression": self.compression,
             "target_points": self.target_points,
+            "generation": self.generation,
             "shards": [s.to_doc() for s in self.shards],
             "tracks": [t.to_doc() for t in self.tracks],
             "meta": self.meta,
@@ -150,6 +158,7 @@ class StoreManifest:
         return cls(
             compression=doc.get("compression", "zlib"),
             target_points=int(doc.get("target_points", 0)),
+            generation=int(doc.get("generation", 0)),
             shards=[ShardRecord.from_doc(d) for d in doc["shards"]],
             tracks=[TrackRecord.from_doc(d) for d in doc["tracks"]],
             meta=doc.get("meta", {}))

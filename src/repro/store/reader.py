@@ -114,10 +114,36 @@ class TrackStore:
 
     def __init__(self, root: str, *,
                  manifest: Optional[StoreManifest] = None,
-                 prefetch: int = 1):
+                 prefetch: int = 1,
+                 clock=None):
         self.root = root
         self.manifest = manifest or StoreManifest.load(root)
         self.prefetch = prefetch
+        #: Monotonic time source for the ``decode_s``/``wait_s`` stats.
+        #: Injectable so tests assert exact attribution instead of
+        #: flaky wall-time ratios.
+        self._clock = clock if clock is not None else time.perf_counter
+        #: Optional test/service instrumentation for the prefetch
+        #: thread: ``{"queued": fn(kind, shard_id), "blocked": fn(kind)}``
+        #: — ``queued`` fires after an event lands in the queue,
+        #: ``blocked`` every time a put finds the queue full.  Lets a
+        #: deterministic test drive producer/consumer interleavings with
+        #: events instead of sleeps.
+        self.prefetch_hooks: Optional[dict] = None
+        self._reindex()
+        self.stats = {"shards_read": 0, "bytes_read": 0,
+                      "decode_s": 0.0, "wait_s": 0.0, "stale_drops": 0}
+
+    @classmethod
+    def open(cls, root: str, **kw) -> "TrackStore":
+        return cls(root, **kw)
+
+    @property
+    def generation(self) -> int:
+        """The loaded manifest's append generation (invalidation key)."""
+        return self.manifest.generation
+
+    def _reindex(self) -> None:
         self._tracks_by_id = {t.track_id: t for t in self.manifest.tracks}
         self._shards_by_id = {s.shard_id: s for s in self.manifest.shards}
         self._rows_by_shard: dict[str, list[TrackRecord]] = {}
@@ -125,30 +151,24 @@ class TrackStore:
             self._rows_by_shard.setdefault(t.shard_id, []).append(t)
         for rows in self._rows_by_shard.values():
             rows.sort(key=lambda t: t.row)
-        self.stats = {"shards_read": 0, "bytes_read": 0,
-                      "decode_s": 0.0, "wait_s": 0.0}
 
-    @classmethod
-    def open(cls, root: str, **kw) -> "TrackStore":
-        return cls(root, **kw)
-
-    def reload(self) -> None:
+    def reload(self) -> bool:
         """Re-read the manifest and rebuild the index maps.
 
         A streaming-DAG store grows while it is being read: shards are
         committed to the manifest (:func:`repro.store.writer.commit_shard`)
         while earlier shards are already being processed.  A reader that
         opened the store mid-stream calls this when it misses a
-        track/shard that was committed after its manifest snapshot.
+        track/shard that was committed after its manifest snapshot; the
+        continuous-ingest service calls it after every commit.  Returns
+        True when the manifest generation actually advanced — a live
+        ``iter_batches`` iteration observes that through
+        :attr:`generation` and invalidates its warm prefetch.
         """
+        old_gen = self.manifest.generation
         self.manifest = StoreManifest.load(self.root)
-        self._tracks_by_id = {t.track_id: t for t in self.manifest.tracks}
-        self._shards_by_id = {s.shard_id: s for s in self.manifest.shards}
-        self._rows_by_shard = {}
-        for t in self.manifest.tracks:
-            self._rows_by_shard.setdefault(t.shard_id, []).append(t)
-        for rows in self._rows_by_shard.values():
-            rows.sort(key=lambda t: t.row)
+        self._reindex()
+        return self.manifest.generation != old_gen
 
     def __len__(self) -> int:
         return len(self.manifest.tracks)
@@ -209,7 +229,7 @@ class TrackStore:
         from repro.tracks.segments import split_segments
 
         rec = plan.shard
-        t0 = time.perf_counter()
+        t0 = self._clock()
         path = os.path.join(self.root, rec.filename)
         cols, meta = codec.read_shard(path)
         offsets = cols["offsets"]
@@ -234,7 +254,7 @@ class TrackStore:
             track_ids.append(t.track_id)
         self.stats["shards_read"] += 1
         self.stats["bytes_read"] += rec.size_bytes
-        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_s"] += self._clock() - t0
         return ShardBatch(shard_id=rec.shard_id, track_ids=track_ids,
                           items=items)
 
@@ -287,33 +307,75 @@ class TrackStore:
         accumulates how long the consumer actually blocked — the number
         the storage bench uses to show the decode hiding behind the
         fused pipeline's device time.
+
+        With explicit ``plans`` the selection is pinned: exactly those
+        plans stream, in order, regardless of appends.  With
+        ``plans=None`` the iteration is *live*: it follows the loaded
+        manifest, so when :meth:`reload` advances the generation
+        mid-stream (a :func:`~repro.store.writer.commit_shard` append),
+        warm in-flight prefetch buffers planned under the old generation
+        are dropped (counted in ``stats['stale_drops']``), the remainder
+        is re-planned from the fresh index, and newly committed shards
+        stream out before the iterator finishes.  Each shard is yielded
+        at most once.
         """
-        if plans is None:
-            plans = self.plan()
         k = self.prefetch if prefetch is None else prefetch
+        if plans is not None:
+            yield from self._iter_round(plans, k, gen=None)
+            return
+        delivered: set[str] = set()
+        while True:
+            gen = self.manifest.generation
+            round_plans = [p for p in self.plan()
+                           if p.shard.shard_id not in delivered]
+            for batch in self._iter_round(round_plans, k, gen=gen):
+                delivered.add(batch.shard_id)
+                yield batch
+            if self.manifest.generation == gen:
+                return
+
+    def _iter_round(self, plans: Sequence[ReadPlan], k: int, *,
+                    gen: Optional[int]) -> Iterator[ShardBatch]:
+        """One streaming pass over ``plans``.  When ``gen`` is given the
+        round is generation-pinned: it aborts as soon as the loaded
+        manifest's generation moves past ``gen`` — the producer stops
+        decoding and the consumer drops (instead of yields) any buffer
+        already decoded under the stale generation."""
         if k <= 0:
             for plan in plans:
+                if gen is not None and self.manifest.generation != gen:
+                    return
                 yield self._decode_shard(plan)
             return
 
         q: queue.Queue = queue.Queue(maxsize=k)
         stop = threading.Event()
+        hooks = self.prefetch_hooks or {}
 
         def put(event: tuple) -> bool:
             """Blocking put that gives up only when the consumer left.
             Every event — including the terminal "err"/"end" — must
             retry indefinitely, or the consumer deadlocks on q.get()."""
+            blocked = hooks.get("blocked")
             while not stop.is_set():
                 try:
                     q.put(event, timeout=0.1)
-                    return True
                 except queue.Full:
+                    if blocked is not None:
+                        blocked(event[0])
                     continue
+                queued = hooks.get("queued")
+                if queued is not None:
+                    batch = event[1]
+                    queued(event[0], getattr(batch, "shard_id", None))
+                return True
             return False
 
         def produce() -> None:
             try:
                 for plan in plans:
+                    if gen is not None and self.manifest.generation != gen:
+                        break               # rest of the round is stale
                     if not put(("ok", self._decode_shard(plan))):
                         return
                 put(("end", None))
@@ -325,13 +387,17 @@ class TrackStore:
         worker.start()
         try:
             while True:
-                t0 = time.perf_counter()
+                t0 = self._clock()
                 kind, val = q.get()
-                self.stats["wait_s"] += time.perf_counter() - t0
+                self.stats["wait_s"] += self._clock() - t0
                 if kind == "end":
                     break
                 if kind == "err":
                     raise val
+                if gen is not None and self.manifest.generation != gen:
+                    # Decoded under a superseded manifest: invalidate.
+                    self.stats["stale_drops"] += 1
+                    continue
                 yield val
         finally:
             stop.set()

@@ -237,6 +237,9 @@ def commit_shard(out_root: str, result: dict, *,
         manifest.tracks + [TrackRecord.from_doc(d)
                            for d in result["tracks"]],
         key=lambda t: (t.shard_id, t.row))
+    # Every real append advances the generation (re-commits above do
+    # not), so readers detect growth by comparing generations alone.
+    manifest.generation += 1
     manifest.save(out_root)
     return rec
 
@@ -255,6 +258,9 @@ def finalize_manifest(out_root: str, *,
     manifest.shards = sorted(manifest.shards, key=lambda s: s.shard_id)
     manifest.tracks = sorted(manifest.tracks,
                              key=lambda t: (t.shard_id, t.row))
+    # Normalize so a resumed incremental build (whose re-commits did not
+    # bump the counter) seals byte-identically to a batch build.
+    manifest.generation = len(manifest.shards)
     manifest.save(out_root)
     return manifest
 
@@ -271,6 +277,7 @@ def finalize_store(out_root: str, results: Sequence[dict], *,
         key=lambda t: (t.shard_id, t.row))
     manifest = StoreManifest(compression=compression,
                              target_points=target_points,
+                             generation=len(shards),
                              shards=shards, tracks=tracks,
                              meta=meta or {})
     manifest.save(out_root)

@@ -27,9 +27,18 @@ waits for the slowest task of the previous one, and the final store is
 byte-identical to a barrier run.  ``--manager-shards N`` splits the
 coordinator into N shard queues (paper §V's message-rate wall).
 
+``--serve`` switches from batch to continuous-ingest mode
+(:func:`run_serve`): a synthetic live feed lands observation files in a
+watch directory, :class:`repro.serving.IngestService` tails it through
+the open-node service DAG (:func:`repro.runtime.run_service`),
+appending store shards as they cut, and a
+:class:`repro.serving.StoreFrontEnd` answers live ``nearest`` and
+snapshot queries against the growing store before sealing it.
+
 CLI:  PYTHONPATH=src python -m repro.tracks.workflow --backend processes
       PYTHONPATH=src python -m repro.tracks.workflow --input store
       PYTHONPATH=src python -m repro.tracks.workflow --pipeline dag
+      PYTHONPATH=src python -m repro.tracks.workflow --serve --files 12
 """
 
 from __future__ import annotations
@@ -550,6 +559,47 @@ class TrackWorkflow:
         return self.reports
 
 
+def run_serve(root: str, *, n_files: int = 12, obs_per_file: int = 64,
+              seed: int = 0, n_workers: int = 4,
+              target_points: int = 2048, backend: str = "threads",
+              feed_batch: int = 3) -> dict:
+    """Continuous-ingest serving demo: live feed -> service DAG ->
+    queries -> sealed store.  Returns a JSON-able summary (also the CI
+    smoke surface)."""
+    from repro.serving import (
+        FeedSpec, IngestService, Query, StoreFrontEnd, SyntheticFeed)
+
+    feed_dir = os.path.join(root, "feed")
+    store_dir = os.path.join(root, "store_live")
+    os.makedirs(feed_dir, exist_ok=True)
+    feed = SyntheticFeed(feed_dir, FeedSpec(
+        n_files=n_files, obs_per_file=obs_per_file, seed=seed))
+    svc = IngestService(feed_dir, store_dir, target_points=target_points)
+
+    def stop_when() -> bool:
+        if not feed.exhausted:
+            feed.emit(feed_batch)
+            return False
+        return not svc.scan()
+
+    result = svc.run_service(backend=backend, n_workers=n_workers,
+                             stop_when=stop_when)
+    front = StoreFrontEnd(svc)
+    queries = [Query(1, "nearest", {"lat": 39.0, "lon": -98.0}),
+               Query(2, "snapshot", {"digest": True})]
+    done = {q.query_id: q for q in front.serve(queries)}
+    return {
+        "files_ingested": svc.stats["files_accepted"],
+        "shards_committed": svc.stats["shards_committed"],
+        "points_ingested": svc.stats["points_ingested"],
+        "generation": svc.generation,
+        "retained_tracks": len(svc.retained),
+        "nearest_track": (done[1].result or {}).get("track_id"),
+        "snapshot": done[2].result,
+        "job_seconds": result.job_seconds,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description="Run the organize->archive->process track workflow "
@@ -593,7 +643,28 @@ def main() -> None:
     ap.add_argument("--store-target-points", type=int, default=None,
                     help="observation points per store shard (store "
                          "input only)")
+    ap.add_argument("--serve", action="store_true",
+                    help="continuous-ingest mode: tail a synthetic live "
+                         "feed into the store via the service DAG and "
+                         "answer queries against the growing store")
     args = ap.parse_args()
+
+    if args.serve:
+        summary = run_serve(args.root, n_files=args.files,
+                            n_workers=args.workers,
+                            backend=args.backend,
+                            target_points=(args.store_target_points
+                                           or 2048))
+        print(f"serve: ingested {summary['files_ingested']} files into "
+              f"{summary['shards_committed']} shards "
+              f"({summary['points_ingested']} points, generation "
+              f"{summary['generation']}) in "
+              f"{summary['job_seconds']:.2f}s; "
+              f"{summary['retained_tracks']} tracks retained")
+        print(f"serve: nearest(39,-98) -> {summary['nearest_track']}, "
+              f"snapshot digest {summary['snapshot']['digest'][:16]}... "
+              f"({summary['snapshot']['n_tracks']} tracks)")
+        return
 
     triple = None
     if args.nodes is not None:

@@ -1,0 +1,82 @@
+"""BENCH_serving artifact: schema, acceptance gates, reproducibility."""
+
+import copy
+import json
+
+import pytest
+
+from repro.bench import serving
+from repro.bench.compare import compare_docs
+from repro.bench.schema import (
+    SERVING_SCHEMA, canonical_bytes, validate_serving)
+
+
+@pytest.fixture(scope="module")
+def quick_doc():
+    return serving.run_serving_campaign(quick=True)
+
+
+def test_quick_campaign_is_schema_valid_and_passes(quick_doc):
+    assert quick_doc["schema"] == SERVING_SCHEMA
+    assert validate_serving(quick_doc) == []
+    assert quick_doc["summary"]["fail"] == 0
+    assert quick_doc["summary"]["error"] == 0
+    rec = quick_doc["scenarios"][0]
+    m = rec["metrics"]
+    # The ISSUE-7 acceptance surface, straight off the record.
+    assert m["snapshot_identical"] == 1.0
+    assert m["ingest_lag_max_points"] <= rec["spec"]["run"]["target_points"]
+    assert rec["measured"]["tiny_p99_ratio"] <= 3.0
+    assert m["shards_committed"] >= 2
+    assert m["generation"] == m["shards_committed"]
+
+
+def test_serving_canonical_bytes_reproducible(quick_doc):
+    """Same-seed reruns agree byte-for-byte on the deterministic
+    surface.  Like the storage artifact, the latency checks record
+    measured actuals, so ``checks``/``status`` are stripped —
+    ``metrics`` is the reproducible surface."""
+
+    def strip_checks(blob):
+        doc = json.loads(blob)
+        for rec in doc["scenarios"]:
+            rec.pop("checks", None)
+            rec.pop("status", None)
+        return json.dumps(doc, sort_keys=True)
+
+    again = serving.run_serving_campaign(quick=True)
+    assert strip_checks(canonical_bytes(quick_doc)) == \
+        strip_checks(canonical_bytes(again))
+
+
+def test_validator_catches_missing_required_metric(quick_doc):
+    doc = copy.deepcopy(quick_doc)
+    doc["scenarios"][0]["metrics"].pop("snapshot_identical")
+    assert any("snapshot_identical" in p for p in validate_serving(doc))
+
+
+def test_compare_gates_on_ingest_lag(quick_doc):
+    """Schema dispatch picks ingest_lag_max_points; inflating it beyond
+    the threshold regresses, equal artifacts do not."""
+    rows, regressions = compare_docs(quick_doc, quick_doc)
+    assert rows and not regressions
+    assert rows[0]["metric"] == "ingest_lag_max_points"
+    worse = copy.deepcopy(quick_doc)
+    worse["scenarios"][0]["metrics"]["ingest_lag_max_points"] *= 2
+    _rows, regressions = compare_docs(quick_doc, worse, threshold=0.10)
+    assert len(regressions) == 1
+
+
+def test_dag_cell_runs_and_matches_batch():
+    doc = serving.run_serving_campaign(filters=["serving_dag_fleet"])
+    rec = doc["scenarios"][0]
+    assert rec["status"] == "pass"
+    assert rec["metrics"]["snapshot_identical"] == 1.0
+    # DAG-mode lag depends on worker timing => measured, not metrics.
+    assert "ingest_lag_max_points" not in rec["metrics"]
+    assert "ingest_lag_max_points" in rec["measured"]
+
+
+def test_spec_validation_rejects_bad_mode():
+    with pytest.raises(ValueError):
+        serving.ServingSpec(mode="batch")

@@ -70,6 +70,31 @@ def test_storage_canonical_bytes_reproducible(storage_doc):
         strip_checks(canonical_bytes(again))
 
 
+def test_prefetch_wait_attribution_fake_clock(storage_doc):
+    """The quantity behind ``prefetch_wait_frac`` must be exact under an
+    injected monotonic clock — attribution is asserted on fake-clock
+    units, never on wall-time ratios (which flake on loaded machines)."""
+    from repro.store.reader import TrackStore
+
+    fx = storage._fixture(storage.StorageSpec())
+
+    class Tick:
+        t = 0.0
+
+        def __call__(self):
+            self.t += 1.0
+            return self.t
+
+    store = TrackStore(fx["store_root"], clock=Tick())
+    n = len(list(store.iter_batches(prefetch=0)))
+    assert n == fx["n_shards"] > 0
+    assert store.stats["decode_s"] == n          # one tick per decode
+    assert store.stats["wait_s"] == 0.0
+    frozen = TrackStore(fx["store_root"], clock=lambda: 0.0)
+    assert len(list(frozen.iter_batches(prefetch=2))) == n
+    assert frozen.stats["wait_s"] == 0.0         # no wall-time leaks
+
+
 def test_spec_validation():
     with pytest.raises(ValueError):
         storage.StorageSpec(source="tape")

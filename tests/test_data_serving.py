@@ -81,3 +81,104 @@ def test_server_eos_stops_early():
     r = Request(0, np.array([1, 2, 3]), max_new_tokens=50)
     server.serve([r])
     assert r.done and len(r.tokens_out) <= 50
+
+
+@pytest.fixture(scope="module")
+def server_env():
+    """One reduced-arch param set shared by the slot-semantics tests."""
+    import jax
+    from repro.configs import get_arch
+    from repro.models import model as M
+
+    cfg = get_arch("minicpm-2b", reduced=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_admit_full_returns_false_without_cache_corruption(server_env):
+    """With every slot occupied, ``admit`` returns False and leaves NO
+    trace: the KV cache, the last-token buffer, and the slot table are
+    bitwise what they were, and the rejected request is untouched — so
+    re-offering it later decodes exactly as if it had been first in
+    line."""
+    import jax
+    from repro.serving.server import BatchedServer, Request
+
+    cfg, params = server_env
+    server = BatchedServer(cfg, params, slots=2, prompt_len=8,
+                           cache_len=64)
+    occupants = [Request(i, np.arange(1, 5 + i), max_new_tokens=40)
+                 for i in range(2)]
+    for r in occupants:
+        assert server.admit(r)
+    cache_before = jax.tree_util.tree_map(np.asarray, server.cache)
+    last_before = server._last_token.copy()
+    slots_before = list(server.slot_req)
+
+    late = Request(9, np.array([7, 8, 9]), max_new_tokens=4)
+    assert not server.admit(late)
+    assert not late.tokens_out and not late.done
+    assert server.slot_req == slots_before
+    assert np.array_equal(server._last_token, last_before)
+    for a, b in zip(jax.tree_util.tree_leaves(cache_before),
+                    jax.tree_util.tree_leaves(server.cache)):
+        assert np.array_equal(a, np.asarray(b))
+
+    # Once a slot frees, the same request object admits and completes.
+    server.serve([late])
+    assert late.done and all(r.done for r in occupants)
+
+
+def test_slot_frees_on_eos_and_on_max_new_tokens(server_env):
+    """Both completion paths release the slot: max_new_tokens yields
+    exactly that many tokens, and an EOS hit stops at the EOS token —
+    earlier than the budget — with the slot back in the free list."""
+    from repro.serving.server import BatchedServer, Request
+
+    cfg, params = server_env
+    prompt = np.array([3, 1, 4, 1, 5])
+
+    # Budget path: 1 prefill token + (max-1) decode steps, slot free.
+    server = BatchedServer(cfg, params, slots=2, prompt_len=8,
+                           cache_len=64)
+    capped = Request(0, prompt, max_new_tokens=3)
+    server.serve([capped])
+    assert capped.done and len(capped.tokens_out) == 3
+    assert server.slot_req == [None, None]
+
+    # EOS path: replay greedily, declaring the recorded first decode
+    # token as EOS — the rerun must stop right there.
+    eos_id = capped.tokens_out[1]
+    server2 = BatchedServer(cfg, params, slots=2, prompt_len=8,
+                            cache_len=64)
+    eased = Request(1, prompt, max_new_tokens=50, eos_id=eos_id)
+    server2.serve([eased])
+    assert eased.done
+    assert eased.tokens_out[-1] == eos_id
+    assert len(eased.tokens_out) == 2 < eased.max_new_tokens
+    assert server2.slot_req == [None, None]
+
+
+def test_request_order_determinism_under_greedy_decode(server_env):
+    """Greedy decode + fixed admission order => two fresh servers fed
+    the same request list emit identical token streams per request,
+    even with more requests than slots (continuous batching reuses
+    slots in a deterministic order)."""
+    from repro.serving.server import BatchedServer, Request
+
+    cfg, params = server_env
+
+    def run():
+        rng = np.random.default_rng(42)
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(3, 8))),
+                        max_new_tokens=int(rng.integers(2, 5)))
+                for i in range(5)]
+        server = BatchedServer(cfg, params, slots=2, prompt_len=8,
+                               cache_len=64)
+        server.serve(reqs)
+        return {r.request_id: list(r.tokens_out) for r in reqs}
+
+    first, second = run(), run()
+    assert first == second
+    assert all(out for out in first.values())

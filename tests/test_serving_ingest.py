@@ -1,0 +1,297 @@
+"""Continuous-ingest serving: scripted interleavings + kill/resume.
+
+Zero sleeps anywhere: :class:`~repro.serving.IngestService` is
+synchronously drivable and fires named lifecycle hooks (``scan``,
+``cut``, ``pre_build``, ``post_build``, ``pre_commit``, ``post_commit``,
+``seal``), so tests interleave reader checks, front-end queries, and
+kills at *exact* points in the ingest cycle.  The hypothesis test
+mirrors ``test_dag_runtime``'s kill/resume pattern: die at a random
+lifecycle event, construct a fresh service over the same roots, and the
+sealed store must be byte-identical to an uninterrupted batch build of
+the same source files.
+"""
+
+import os
+import random
+import shutil
+import tempfile
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving import (
+    FeedSpec, IngestService, Query, ServiceKilled, StoreFrontEnd,
+    SyntheticFeed)
+from repro.serving.service import snapshot_digest
+from repro.store.format import StoreManifest
+from repro.store.reader import TrackStore
+from repro.store.writer import build_store
+
+# Small shard target so a dozen ~2 KB feed files (~25 estimated points
+# each) cut several shards before seal.
+TARGET = 96
+SPEC = FeedSpec(n_files=12, obs_per_file=48, seed=3)
+
+
+def _roots(tmp_path):
+    feed_dir = str(tmp_path / "feed")
+    store_dir = str(tmp_path / "store")
+    os.makedirs(feed_dir)
+    return feed_dir, store_dir
+
+
+def _read_all(store_dir, manifest=None):
+    """Full decode of a store -> [(track_id, obs)...] in plan order."""
+    store = TrackStore(store_dir, manifest=manifest, prefetch=0)
+    items = []
+    for plan in store.plan():
+        batch = store.read_shard_batch(plan.shard.shard_id)
+        items.extend(
+            (tid, obs) for tid, (obs, _s) in zip(batch.track_ids,
+                                                 batch.items))
+    return items
+
+
+def _store_bytes(root, manifest):
+    blobs = [open(os.path.join(root, "store_manifest.json"), "rb").read()]
+    for s in manifest.shards:
+        blobs.append(open(os.path.join(root, s.filename), "rb").read())
+    return blobs
+
+
+# -- no reader ever observes a partially-committed shard ----------------
+
+
+def test_reader_never_observes_partial_shard(tmp_path):
+    """At EVERY lifecycle point — including ``post_build``, where the
+    new shard file is already on disk but the manifest does not name it
+    yet — a reader opening the store sees a fully-consistent prefix:
+    every manifest-named shard file exists, decodes, and yields exactly
+    the manifest's track count."""
+    feed_dir, store_dir = _roots(tmp_path)
+    checks = {"n": 0, "max_gap": 0}
+
+    def check_consistent(**_info):
+        checks["n"] += 1
+        try:
+            manifest = StoreManifest.load(store_dir)
+        except FileNotFoundError:
+            return                       # no store yet: trivially clean
+        on_disk = {f for f in os.listdir(os.path.join(store_dir, "shards"))
+                   } if os.path.isdir(os.path.join(store_dir, "shards")) \
+            else set()
+        extra = on_disk - {os.path.basename(s.filename)
+                           for s in manifest.shards}
+        checks["max_gap"] = max(checks["max_gap"], len(extra))
+        items = _read_all(store_dir, manifest=manifest)
+        assert len(items) == len(manifest.tracks)
+        assert sum(len(obs["time"]) for _t, obs in items) \
+            == manifest.n_points
+
+    hooks = {name: check_consistent
+             for name in ("scan", "cut", "pre_build", "post_build",
+                          "pre_commit", "post_commit", "seal")}
+    feed = SyntheticFeed(feed_dir, SPEC)
+    svc = IngestService(feed_dir, store_dir, target_points=TARGET,
+                        hooks=hooks)
+    while not feed.exhausted:
+        feed.emit(2)
+        svc.poll_once()
+    manifest = svc.seal()
+    assert checks["n"] > 10
+    # The interesting window really occurred: at some point a built
+    # shard file existed on disk ahead of the manifest naming it.
+    assert checks["max_gap"] >= 1
+    assert len(manifest.shards) >= 2     # the scenario cut several
+
+
+# -- snapshot reads are manifest-generation-consistent ------------------
+
+
+def test_snapshot_reads_pin_their_generation(tmp_path):
+    """A snapshot admitted at generation G returns exactly generation
+    G's store even when commits land between its steps; tiny queries
+    issued during the same window see the NEW generation."""
+    feed_dir, store_dir = _roots(tmp_path)
+    feed = SyntheticFeed(feed_dir, SPEC)
+    svc = IngestService(feed_dir, store_dir, target_points=TARGET)
+    feed.emit(6)
+    svc.poll_once()
+    pinned = StoreManifest.load(store_dir)
+    assert pinned.generation >= 1
+
+    front = StoreFrontEnd(svc)
+    snap = Query(1, "snapshot")
+    assert front.admit(snap)
+    assert snap.generation == pinned.generation
+
+    # Interleave: one shard decode, then let ingest advance the store.
+    front.step()
+    feed.emit_all()
+    svc.poll_once()
+    svc.seal()
+    after = StoreManifest.load(store_dir)
+    assert after.generation > pinned.generation
+
+    tiny = Query(2, "latest",
+                 {"track_id": sorted(svc.retained)[-1]})
+    assert front.admit(tiny)
+    while not (snap.done and tiny.done):
+        front.step()
+    # Tiny query observed the advanced store...
+    assert tiny.generation == after.generation
+    # ...while the snapshot returned exactly the pinned generation.
+    got = {tid for tid, _obs in snap.result}
+    assert got == {t.track_id for t in pinned.tracks}
+    assert snapshot_digest(sorted(snap.result, key=lambda kv: kv[0])) \
+        == snapshot_digest(sorted(_read_all(store_dir, manifest=pinned),
+                                  key=lambda kv: kv[0]))
+
+
+def test_front_end_rejects_without_trace(tmp_path):
+    """Admission with all slots of a class full returns False and leaves
+    no partial state (no pinned manifest entry, stats intact); tiny and
+    bulk slot classes do not contend."""
+    feed_dir, store_dir = _roots(tmp_path)
+    feed = SyntheticFeed(feed_dir, SPEC)
+    svc = IngestService(feed_dir, store_dir, target_points=TARGET)
+    feed.emit_all()
+    svc.poll_once()
+    svc.seal()
+
+    front = StoreFrontEnd(svc, tiny_slots=1, bulk_slots=1)
+    first = Query(1, "snapshot")
+    assert front.admit(first)
+    second = Query(2, "snapshot")
+    assert not front.admit(second)
+    assert second.generation is None         # nothing was pinned
+    assert second.query_id not in front._bulk_reads
+    assert front.stats["rejected"] == 1
+    # A tiny query still admits: separate slot class, no starvation.
+    tiny = Query(3, "nearest", {"lat": 40.0, "lon": -100.0})
+    assert front.admit(tiny)
+    while not first.done:
+        front.step()
+    assert tiny.done
+    # The rejected query re-offers cleanly once the slot frees.
+    assert front.admit(second)
+    while not second.done:
+        front.step()
+    assert {t for t, _o in first.result} == {t for t, _o in second.result}
+
+
+# -- mid-append kill + restart converges to identical bytes -------------
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 60))
+@settings(max_examples=10, deadline=None)
+def test_mid_append_kill_resume_byte_identical(opseed, kill_at):
+    """Kill the service at a random lifecycle event mid-append; a fresh
+    service over the same roots resumes, and seal converges to a store
+    byte-identical (manifest AND every shard file) to an uninterrupted
+    batch build of the same source directory.  Exercises every window:
+    after a cut, between build and commit (orphan shard file on disk),
+    between commit and the next scan, and during seal."""
+    rng = random.Random(opseed)
+    tmp = tempfile.mkdtemp(prefix="repro-serving-kill-")
+    try:
+        feed_dir = os.path.join(tmp, "feed")
+        store_dir = os.path.join(tmp, "store")
+        batch_dir = os.path.join(tmp, "batch")
+        os.makedirs(feed_dir)
+        feed = SyntheticFeed(feed_dir, SPEC)
+        events = {"n": 0}
+
+        def bomb(**_info):
+            events["n"] += 1
+            if events["n"] == kill_at:
+                raise ServiceKilled(f"scripted kill at event {kill_at}")
+
+        hooks = {name: bomb
+                 for name in ("scan", "cut", "pre_build", "post_build",
+                              "pre_commit", "post_commit", "seal")}
+        svc = IngestService(feed_dir, store_dir, target_points=TARGET,
+                            hooks=hooks)
+        try:
+            while not feed.exhausted:
+                feed.emit(rng.randint(1, 3))
+                svc.poll_once()
+            svc.seal()
+        except ServiceKilled:
+            pass
+
+        # Restart: all durable state reloads from the manifest alone.
+        feed.emit_all()
+        svc2 = IngestService(feed_dir, store_dir, target_points=TARGET)
+        if svc2.sealed:
+            manifest = StoreManifest.load(store_dir)
+        else:
+            svc2.poll_once()
+            manifest = svc2.seal()
+
+        build_store(feed_dir, batch_dir, target_points=TARGET)
+        assert _store_bytes(store_dir, manifest) \
+            == _store_bytes(batch_dir, StoreManifest.load(batch_dir))
+        # The resumed retained snapshot covers every track exactly.
+        svc3 = IngestService(feed_dir, store_dir, target_points=TARGET)
+        assert svc3.sealed
+        assert set(svc3.retained) == {t.track_id for t in manifest.tracks}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def test_resumed_service_does_not_reingest_committed(tmp_path):
+    """After a restart no committed file is re-accepted: the second
+    service's scan over an unchanged tree is empty, and poll_once is a
+    no-op (commit idempotence at the service level)."""
+    feed_dir, store_dir = _roots(tmp_path)
+    feed = SyntheticFeed(feed_dir, SPEC)
+    svc = IngestService(feed_dir, store_dir, target_points=TARGET)
+    feed.emit(8)
+    svc.poll_once()
+    gen = svc.generation
+    committed = svc.stats["shards_committed"]
+    assert committed >= 1
+
+    svc2 = IngestService(feed_dir, store_dir, target_points=TARGET)
+    fresh = svc2.scan()
+    # Only the sub-target remainder (never committed) reappears.
+    assert {t for t, _p, _s in fresh} \
+        == {t for t, _p, _s in svc._pending}
+    assert svc2.poll_once() == 0         # remainder stays pending
+    assert svc2.generation == gen
+    assert svc2.stats["shards_committed"] == 0
+
+
+def test_ingest_service_dag_mode_matches_batch(tmp_path):
+    """The fleet path — open build node, parallel workers, ordered
+    commits — seals to the same bytes as the batch build."""
+    feed_dir, store_dir = _roots(tmp_path)
+    batch_dir = str(tmp_path / "batch")
+    feed = SyntheticFeed(feed_dir, SPEC)
+    svc = IngestService(feed_dir, store_dir, target_points=TARGET)
+
+    def stop_when():
+        if not feed.exhausted:
+            feed.emit(3)
+            return False
+        return not svc.scan()
+
+    svc.run_service(backend="threads", n_workers=2, stop_when=stop_when)
+    assert svc.sealed
+    manifest = StoreManifest.load(store_dir)
+    build_store(feed_dir, batch_dir, target_points=TARGET)
+    assert _store_bytes(store_dir, manifest) \
+        == _store_bytes(batch_dir, StoreManifest.load(batch_dir))
+
+
+def test_sealed_service_rejects_new_accepts(tmp_path):
+    feed_dir, store_dir = _roots(tmp_path)
+    feed = SyntheticFeed(feed_dir, FeedSpec(n_files=3, obs_per_file=16))
+    svc = IngestService(feed_dir, store_dir, target_points=TARGET)
+    feed.emit_all()
+    svc.poll_once()
+    svc.seal()
+    with pytest.raises(RuntimeError, match="sealed"):
+        svc.accept(svc.scan())
