@@ -1,0 +1,29 @@
+"""Encounter-screening BENCH artifact CLI (thin adapter).
+
+Benchmarks the spatial-hash + fused-kernel encounter screen
+(:mod:`repro.geometry.gridhash`, :mod:`repro.kernels.encounter_screen`)
+across density x backend x policy cells — candidate-set exactness
+against the numpy brute-force all-pairs reference, live fused-kernel
+speedup at aerodrome density, and simulated policy makespan on the
+quadratic per-cell cost skew — and writes a schema-validated
+``BENCH_encounters.json`` (``repro.bench.encounters/v1``).  Exits
+non-zero if any scenario misses its check (CI gates on the quick tier:
+exact candidates on dense jit AND pallas cells, kernel >= 5x brute at
+aerodrome density, sized_lpt/adaptive_chunk >= 1.3x static makespan).
+
+    PYTHONPATH=src python benchmarks/encounters_bench.py --quick
+    PYTHONPATH=src python benchmarks/encounters_bench.py --out BENCH_encounters.json
+
+The scenario declarations and record layout live in
+:mod:`repro.bench.encounters` (``python -m repro.bench.encounters`` is
+the same entry point).
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.bench.encounters import main
+
+if __name__ == "__main__":
+    sys.exit(main())

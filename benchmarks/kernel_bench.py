@@ -23,8 +23,6 @@ Two roles in one module:
   compiled kernels; here the derived column reports tracks/second of
   the oracle path (the honest CPU number) plus the Pallas-vs-ref
   agreement.
-
-``benchmarks/kernels_bench.py`` is a deprecated alias of this module.
 """
 
 from __future__ import annotations

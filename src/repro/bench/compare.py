@@ -22,6 +22,13 @@ BENCH kind the repo emits:
     with non-gating rows for ``shards_committed``/``points_ingested``
     so a cut-rule change that silently re-shards the same feed is
     visible.
+  * ``repro.bench.encounters/v1`` — ``screen_seconds_per_candidate``
+    (modeled screen wall-clock per emitted candidate encounter; only
+    the screen-kind cells publish it — policy sim cells gate through
+    their own checks), with non-gating rows for ``cells``,
+    ``candidates``, and ``max_cell_occupancy`` so a binning change
+    that silently reshapes the spatial hash (more cells, fewer
+    candidates, flattened occupancy skew) is visible in the diff.
 
 All default metrics are lower-is-better and deterministic for a fixed
 seed; live wall-clock numbers live under ``measured`` and are
@@ -56,6 +63,7 @@ DEFAULT_METRICS = {
     "repro.bench.storage/v1": "bytes_per_point",
     "repro.bench.scheduling/v1": "makespan_seconds",
     "repro.bench.serving/v1": "ingest_lag_max_points",
+    "repro.bench.encounters/v1": "screen_seconds_per_candidate",
 }
 
 #: schema -> informational secondary metrics: their deltas are printed
@@ -64,6 +72,8 @@ INFO_METRICS = {
     "repro.bench.scheduling/v1": ("busy_p50_s", "busy_p90_s",
                                   "dispatch_rate_msgs_per_s"),
     "repro.bench.serving/v1": ("shards_committed", "points_ingested"),
+    "repro.bench.encounters/v1": ("cells", "candidates",
+                                  "max_cell_occupancy"),
 }
 
 

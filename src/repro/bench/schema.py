@@ -32,6 +32,15 @@ Three artifact kinds share the scenario-record shape:
     ingest, and maximum accepted-but-uncommitted ingest backlog.
     Serving records use a mode x feed-shape x shard-target
     ``spec.run`` shape.
+  * ``BENCH_encounters.json`` (``repro.bench.encounters/v1``) —
+    encounter-screening records from ``benchmarks/encounters_bench.py``:
+    spatial-hash + fused-kernel candidate exactness vs the brute-force
+    all-pairs reference, kernel speedup at aerodrome density, and
+    scheduling-policy makespan on the genuinely quadratic per-cell
+    cost skew.  Encounter records use a kind x dataset x backend x
+    policy ``spec.run`` shape; the deterministic gating metric is
+    ``screen_seconds_per_candidate`` (modeled screen cost per emitted
+    candidate).
 
 Scenario record layout::
 
@@ -60,11 +69,11 @@ from typing import Any
 
 __all__ = ["CAMPAIGN_SCHEMA", "SMOKE_SCHEMA", "KERNELS_SCHEMA",
            "STORAGE_SCHEMA", "SCHEDULING_SCHEMA", "SERVING_SCHEMA",
-           "SCHEMA_VERSION",
+           "ENCOUNTERS_SCHEMA", "SCHEMA_VERSION",
            "NONDETERMINISTIC_RECORD_KEYS", "NONDETERMINISTIC_DOC_KEYS",
            "validate_record", "validate_campaign", "validate_smoke",
            "validate_kernels", "validate_storage", "validate_scheduling",
-           "validate_serving", "canonical_bytes"]
+           "validate_serving", "validate_encounters", "canonical_bytes"]
 
 SCHEMA_VERSION = 1
 CAMPAIGN_SCHEMA = "repro.bench.campaign/v1"
@@ -73,6 +82,7 @@ KERNELS_SCHEMA = "repro.bench.kernels/v1"
 STORAGE_SCHEMA = "repro.bench.storage/v1"
 SCHEDULING_SCHEMA = "repro.bench.scheduling/v1"
 SERVING_SCHEMA = "repro.bench.serving/v1"
+ENCOUNTERS_SCHEMA = "repro.bench.encounters/v1"
 
 NONDETERMINISTIC_RECORD_KEYS = ("measured", "timing")
 NONDETERMINISTIC_DOC_KEYS = ("created_at", "environment", "timing")
@@ -113,6 +123,14 @@ _SERVING_SPEC_REQUIRED = ("mode", "n_files", "obs_per_file",
                           "seed")
 _SERVING_METRICS_REQUIRED = ("shards_committed", "points_ingested",
                              "snapshot_identical")
+# Encounter-bench records describe either a live screen cell (spatial
+# hash + fused kernel vs brute force) or a scheduling-policy sim cell
+# over screen tasks.  The shared requirement is the deterministic cell
+# count; the gating ``screen_seconds_per_candidate`` metric only exists
+# on screen-kind records (compare.py skips records without it).
+_ENCOUNTERS_SPEC_REQUIRED = ("kind", "dataset", "backend", "policy",
+                             "n_workers", "fault_profile", "seed")
+_ENCOUNTERS_METRICS_REQUIRED = ("cells",)
 
 
 def _num(x: Any) -> bool:
@@ -291,6 +309,14 @@ def validate_serving(doc: Any) -> list[str]:
         doc, label="serving", schema=SERVING_SCHEMA,
         spec_required=_SERVING_SPEC_REQUIRED,
         required_metrics=_SERVING_METRICS_REQUIRED)
+
+
+def validate_encounters(doc: Any) -> list[str]:
+    """Structural validation of a BENCH_encounters.json artifact."""
+    return _validate_matrix_doc(
+        doc, label="encounters", schema=ENCOUNTERS_SCHEMA,
+        spec_required=_ENCOUNTERS_SPEC_REQUIRED,
+        required_metrics=_ENCOUNTERS_METRICS_REQUIRED)
 
 
 def validate_smoke(doc: Any) -> list[str]:

@@ -181,8 +181,30 @@ RADAR_PHASE = PhaseCostModel(
     msg_overhead_s=0.002,
 )
 
+# Encounter screening — pairwise miss distances within spatial-hash
+# cells.  Input bytes are small (segment rows re-read from the columnar
+# store) but CPU demand is *quadratic in cell occupancy*: the task
+# generator (tracks/workflow.py, bench/encounters.py) sets
+# ``cpu_cost_hint = geometry.gridhash.cell_cost(occupancy)``, so
+# ``task_seconds`` exposes the genuine quadratic skew that sized_lpt /
+# adaptive_chunk exist to handle.  The preset's own rates only cover
+# the hint-less fallback and the (cheap) store re-read I/O.
+SCREEN_PHASE = PhaseCostModel(
+    name="screen",
+    r_process=3 * MB,
+    b_node=40 * MB,
+    b_global=900 * MB,
+    cpu_rate=2.4 * MB,
+    contention_alpha=0.0024,
+    io_multiplier=1.0,
+    cpu_multiplier=1.0,
+    task_overhead_s=0.02,       # kernel dispatch; no archive open
+    msg_overhead_s=0.002,
+)
+
 PHASES = {m.name: m for m in
-          (ORGANIZE_PHASE, ARCHIVE_PHASE, PROCESS_PHASE, RADAR_PHASE)}
+          (ORGANIZE_PHASE, ARCHIVE_PHASE, PROCESS_PHASE, RADAR_PHASE,
+           SCREEN_PHASE)}
 
 # Slowdown of the pre-triples launcher (no EPPAC placement/affinity on the
 # xeon64c core mesh). Calibrated so that self-scheduling + triples-mode

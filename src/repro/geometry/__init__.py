@@ -3,6 +3,9 @@
 from repro.geometry.aerodromes import (
     Aerodrome, synthetic_aerodromes)
 from repro.geometry.dem import SyntheticGlobeDEM
+from repro.geometry.gridhash import (
+    GridSpec, bin_samples, cell_cost, cell_id, cells_for_samples,
+    occupancy_stats, wrap_lon)
 from repro.geometry.queries import (
     BoundingBox, Query, generate_queries, make_bounding_boxes)
 from repro.geometry.rectilinear import (
@@ -11,6 +14,8 @@ from repro.geometry.rectilinear import (
 __all__ = [
     "Aerodrome", "synthetic_aerodromes",
     "SyntheticGlobeDEM",
+    "GridSpec", "bin_samples", "cell_cost", "cell_id",
+    "cells_for_samples", "occupancy_stats", "wrap_lon",
     "BoundingBox", "Query", "generate_queries", "make_bounding_boxes",
     "decompose_mask_into_rectangles", "rasterize_circles",
     "split_large_rectangles",

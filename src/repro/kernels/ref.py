@@ -106,6 +106,50 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return jnp.einsum("bhts,bhsd->bhtd", p, vv.astype(jnp.float32))
 
 
+_SCREEN_BIG = jnp.float32(1e30)
+
+
+def encounter_screen_ref(lat: jax.Array, lon: jax.Array, alt: jax.Array,
+                         valid: jax.Array, *, h_thresh_m: float,
+                         v_thresh_m: float):
+    """Pairwise miss-distance screen over time-aligned rows (one cell).
+
+    Args:
+      lat, lon, alt: (K, T) f32 — samples on a common 1-sample grid.
+      valid: (K, T) f32 0/1 — sample presence mask.
+      h_thresh_m / v_thresh_m: candidate thresholds (meters).
+    Returns:
+      ``(hit, min_dh, min_dv, t_idx)``, each (K, K) f32, populated on
+      the strict upper triangle (i < j) only.  ``hit[i, j]`` is 1.0
+      when rows i and j are simultaneously within *both* thresholds at
+      some jointly valid instant; ``min_dh``/``min_dv`` are the minima
+      of horizontal/vertical separation over those hit instants (1e30
+      where no hit); ``t_idx`` is the first time index attaining
+      ``min_dh``.  Local-tangent metric: 1 deg = 111_111 m, east
+      meters scaled by cos of the pair's mean latitude — matching
+      :func:`dynamic_rates_ref`.
+    """
+    K, T = lat.shape
+    m_per_deg = jnp.float32(111_111.0)
+    li, lj = lat[:, None, :], lat[None, :, :]
+    dn = (li - lj) * m_per_deg
+    de = ((lon[:, None, :] - lon[None, :, :]) * m_per_deg
+          * jnp.cos(jnp.deg2rad(jnp.float32(0.5) * (li + lj))))
+    dh = jnp.sqrt(dn * dn + de * de)
+    dv = jnp.abs(alt[:, None, :] - alt[None, :, :])
+    both = (valid[:, None, :] * valid[None, :, :]) > 0.5
+    tri = (jnp.arange(K)[:, None] < jnp.arange(K)[None, :])[:, :, None]
+    hit_t = both & tri & (dh <= jnp.float32(h_thresh_m)) \
+        & (dv <= jnp.float32(v_thresh_m))
+    dh_m = jnp.where(hit_t, dh, _SCREEN_BIG)
+    dv_m = jnp.where(hit_t, dv, _SCREEN_BIG)
+    hit = jnp.max(hit_t.astype(jnp.float32), axis=-1)
+    min_dh = jnp.min(dh_m, axis=-1)
+    min_dv = jnp.min(dv_m, axis=-1)
+    t_idx = jnp.argmin(dh_m, axis=-1).astype(jnp.float32)
+    return hit, min_dh, min_dv, t_idx
+
+
 def agl_lookup_ref(dem: jax.Array, fi: jax.Array, fj: jax.Array,
                    alt_msl: jax.Array) -> jax.Array:
     """AGL altitude: MSL altitude minus bilinear DEM elevation.

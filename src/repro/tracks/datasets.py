@@ -238,6 +238,142 @@ def tiny_task_manifest(n: int = 131_400, seed: int = 0) -> list[Task]:
 
 
 # ---------------------------------------------------------------------------
+# Encounter-screening density manifests (beyond-paper).
+# ---------------------------------------------------------------------------
+
+#: Modeled store re-read bytes per cell row (one resampled segment's
+#: lat/lon/alt planes).  Screen-cell task sizes are
+#: ``occupancy * SCREEN_ROW_BYTES``, so goldens and cost models can
+#: recover occupancy from ``size_bytes`` exactly.
+SCREEN_ROW_BYTES = 12_000
+
+_SCREEN_REGION = (24.0, 48.0, -125.0, -67.0)       # lat/lon box (CONUS)
+
+# Eight busy terminal areas; the paper's dataset #2 is aerodrome-anchored
+# bounding-box queries, so density concentrates at a handful of hotspots.
+_SCREEN_HOTSPOTS = [
+    (33.64, -84.43), (32.90, -97.04), (39.86, -104.67), (41.98, -87.90),
+    (33.94, -118.41), (40.64, -73.78), (37.62, -122.38), (47.45, -122.31),
+]
+
+
+#: Screen-trail sample spacing (seconds).  Trail start times snap to
+#: this grid so pair placement on a shared time grid is independent of
+#: the grid anchor (cell minimum vs global minimum) — the property the
+#: grid-vs-brute-force exactness gate in ``repro.bench.encounters``
+#: relies on.
+SCREEN_TRAIL_DT_S = 15.0
+
+
+def screen_density_trails(kind: str, n_aircraft: int, seed: int, *,
+                          cell_t_s: float = 3600.0) -> list[tuple]:
+    """Synthetic aircraft sample trails for the screening manifests.
+
+    Each aircraft contributes one short straight trail (8 samples at
+    ``SCREEN_TRAIL_DT_S``): ``(aircraft_id, times, lat, lon, alt)``.
+    ``kind='dense'`` concentrates traffic at eight terminal hotspots
+    plus inter-hotspot corridors at low altitude; ``kind='sparse'``
+    spreads cruise-altitude overflights across the whole region.
+    """
+    rng = np.random.default_rng(seed)
+    lat_lo, lat_hi, lon_lo, lon_hi = _SCREEN_REGION
+    hot = np.array(_SCREEN_HOTSPOTS)
+    rows = []
+    for i in range(n_aircraft):
+        if kind == "dense":
+            if rng.random() < 0.7:      # terminal-area traffic
+                c = hot[rng.integers(len(hot))]
+                lat0 = c[0] + rng.normal(0.0, 0.05)
+                lon0 = c[1] + rng.normal(0.0, 0.05)
+            else:                        # inter-hotspot corridor
+                a, b = hot[rng.choice(len(hot), 2, replace=False)]
+                f = rng.random()
+                lat0 = a[0] + f * (b[0] - a[0]) + rng.normal(0.0, 0.03)
+                lon0 = a[1] + f * (b[1] - a[1]) + rng.normal(0.0, 0.03)
+            alt0 = float(rng.lognormal(np.log(450.0), 0.5))
+            speed = rng.uniform(60.0, 120.0)
+        else:                            # "sparse": en-route overflights
+            a = np.array([rng.uniform(lat_lo, lat_hi),
+                          rng.uniform(lon_lo, lon_hi)])
+            b = np.array([rng.uniform(lat_lo, lat_hi),
+                          rng.uniform(lon_lo, lon_hi)])
+            f = rng.random()
+            lat0, lon0 = a + f * (b - a) + rng.normal(0.0, 0.15, 2)
+            alt0 = rng.uniform(7_000.0, 12_000.0)
+            speed = rng.uniform(180.0, 260.0)
+        hdg = rng.uniform(0.0, 2.0 * np.pi)
+        ns, dt = 8, SCREEN_TRAIL_DT_S
+        t0 = round(float(rng.uniform(0.0, cell_t_s / 2)) / dt) * dt
+        ts = t0 + np.arange(ns) * dt
+        step = speed * dt / 111_111.0
+        la = lat0 + np.cos(hdg) * step * np.arange(ns)
+        lo = lon0 + np.sin(hdg) * step * np.arange(ns) \
+            / max(np.cos(np.deg2rad(lat0)), 0.2)
+        al = np.full(ns, alt0) + rng.normal(0.0, 5.0, ns).cumsum()
+        rows.append((f"a{i:05d}", ts, la, lo, al))
+    return rows
+
+
+def _density_screen_tasks(kind: str, n_aircraft: int, seed: int, *,
+                          cell_deg: float = 0.25, cell_alt_m: float = 300.0,
+                          cell_t_s: float = 3600.0) -> list[Task]:
+    """Screen-cell tasks from a real spatial-hash binning of the
+    :func:`screen_density_trails` trails.
+
+    Trails are binned through
+    :func:`repro.geometry.gridhash.bin_samples` with the default
+    screening-threshold halo, and every multi-occupancy cell becomes
+    one task (singleton cells never reach the kernel, so they are not
+    workload).  ``cpu_cost_hint = cell_cost(occupancy)`` — quadratic —
+    and timestamps are a random permutation, so chronological arrival
+    models an unordered cell stream.
+    """
+    from repro.geometry import gridhash
+    rng = np.random.default_rng(seed + 101)
+    spec = gridhash.GridSpec(cell_deg=cell_deg, cell_alt_m=cell_alt_m,
+                             cell_t_s=cell_t_s)
+    rows = screen_density_trails(kind, n_aircraft, seed,
+                                 cell_t_s=cell_t_s)
+    bins = gridhash.bin_samples(rows, spec=spec, h_pad_m=926.0,
+                                v_pad_m=152.4)
+    cells = sorted((key, len(ids)) for key, ids in bins.items()
+                   if len(ids) >= 2)
+    order = rng.permutation(len(cells))
+    return [Task(task_id=f"screen/{kind}/{gridhash.cell_id(key)}",
+                 size_bytes=occ * SCREEN_ROW_BYTES,
+                 timestamp=float(order[k]),
+                 cpu_cost_hint=gridhash.cell_cost(occ))
+            for k, (key, occ) in enumerate(cells)]
+
+
+def aerodrome_dense_manifest(n_aircraft: int = 3000,
+                             seed: int = 11) -> list[Task]:
+    """Aerodrome-dense screening cells (paper dataset #2 regime).
+
+    Traffic concentrates at eight terminal hotspots plus the corridors
+    between them, so a few cells hold hundreds of rows while the bulk
+    hold a handful — with quadratic per-cell cost, the resulting skew
+    is far beyond any size-linear manifest and is the acceptance
+    workload for ``sized_lpt``/``adaptive_chunk`` in
+    ``repro.bench.encounters``.
+    """
+    return _density_screen_tasks("dense", n_aircraft, seed)
+
+
+def enroute_sparse_manifest(n_aircraft: int = 900,
+                            seed: int = 12) -> list[Task]:
+    """En-route-sparse screening cells (paper dataset #1 regime).
+
+    Overflights spread across the whole region at cruise altitudes:
+    almost every occupied cell holds one or two rows, so max-cell
+    occupancy stays an order of magnitude below the aerodrome-dense
+    manifest (asserted by the dataset goldens) and screening cost is
+    dominated by per-task overhead, not pair count.
+    """
+    return _density_screen_tasks("sparse", n_aircraft, seed)
+
+
+# ---------------------------------------------------------------------------
 # Manifest registry — the declarative handle the bench subsystem uses.
 # ---------------------------------------------------------------------------
 
@@ -250,6 +386,8 @@ MANIFESTS = {
     "smoke": smoke_manifest,
     "heavy_tail": heavy_tail_manifest,
     "tiny": tiny_task_manifest,
+    "aerodrome_dense": aerodrome_dense_manifest,
+    "enroute_sparse": enroute_sparse_manifest,
 }
 
 _manifest_cache: dict[tuple, list[Task]] = {}

@@ -27,6 +27,17 @@ waits for the slowest task of the previous one, and the final store is
 byte-identical to a barrier run.  ``--manager-shards N`` splits the
 coordinator into N shard queues (paper §V's message-rate wall).
 
+``--screen`` (requires ``--input store``) appends an encounter-screen
+phase: processed segment rows are binned into a halo-padded spatial
+hash (:mod:`repro.geometry.gridhash`) and every multi-row cell becomes
+a self-scheduled task running the fused pairwise miss-distance kernel
+(:mod:`repro.kernels.encounter_screen`), with the deduplicated
+candidate encounters written canonically to ``candidates.json``.
+Under ``--pipeline dag`` the process -> screen edge streams: cells
+admit incremental *generations* as the shards feeding them commit
+(:class:`_CellBinEmitter`), and the candidate file is byte-identical
+to the barrier run's.
+
 ``--serve`` switches from batch to continuous-ingest mode
 (:func:`run_serve`): a synthetic live feed lands observation files in a
 watch directory, :class:`repro.serving.IngestService` tails it through
@@ -53,6 +64,10 @@ from repro.core.messages import Task
 from repro.core.triples import TriplesConfig
 from repro.geometry.aerodromes import synthetic_aerodromes
 from repro.geometry.dem import SyntheticGlobeDEM
+from repro.geometry.gridhash import GridSpec, cell_cost, cell_id
+from repro.kernels.encounter_screen import (
+    ScreenConfig, bin_screen_rows, dedup_candidates, rows_from_track,
+    screen_cells)
 from repro.runtime import (
     EdgeEmitter, ManagerCheckpoint, RunResult, StreamingDAG, run_dag,
     run_job)
@@ -60,12 +75,13 @@ from repro.store import writer as store_writer
 from repro.store.format import MANIFEST_NAME
 from repro.store.reader import make_store_uri
 from repro.tracks.archive import Archiver, archive_tasks_from_tree
-from repro.tracks.datasets import ScaledDatasetSpec, write_scaled_dataset
+from repro.tracks.datasets import (
+    SCREEN_ROW_BYTES, ScaledDatasetSpec, write_scaled_dataset)
 from repro.tracks.organize import Organizer, organize_tasks_from_dir
 from repro.tracks.registry import synthetic_registry
 from repro.tracks.segments import (
     SegmentProcessor, segment_tasks_from_archive_tree,
-    segment_tasks_from_store)
+    segment_tasks_from_store, split_segments)
 
 
 @dataclasses.dataclass
@@ -207,6 +223,156 @@ class _ShardCommitEmitter(EdgeEmitter):
                                             shard=rec.shard_id))]
 
 
+def _screen_rows_for_uri(proc: SegmentProcessor, uri: str) -> list:
+    """Multi-track ``store://`` selection -> ScreenRows, via the same
+    fused segment pipeline the process phase runs (so screening sees
+    byte-identical resampled planes)."""
+    items = proc._store_items(uri)
+    procd = proc._process_triples(items)
+    rows = []
+    for tid, obs, segs in items:
+        if segs:
+            rows.extend(rows_from_track(tid, obs, segs, procd[tid]))
+    return rows
+
+
+class ScreenWorker:
+    """Self-scheduled encounter-screen task: one spatial-hash cell.
+
+    The task payload is a JSON doc ``{"cell", "all", "new"}`` naming the
+    cell and its member row ids.  The worker re-reads each member track
+    from the columnar store (``store://...#track=<id>``), re-derives its
+    ScreenRows through the fused segment pipeline (deterministic, so
+    recomputation after a checkpoint kill is exact), screens the single
+    cell with the fused kernel, and returns the candidate dicts.  With
+    ``new != all`` (a streaming-DAG generation) only pairs touching a
+    new row are emitted.  Picklable for the processes backend; the
+    SegmentProcessor is built lazily per process.
+    """
+
+    def __init__(self, store_dir: str, *, h_thresh_m: float,
+                 v_thresh_m: float, backend: str = "pallas",
+                 pipeline: str = "fused"):
+        self.store_dir = store_dir
+        self.h_thresh_m = h_thresh_m
+        self.v_thresh_m = v_thresh_m
+        self.backend = backend
+        self.pipeline = pipeline
+        self._proc: Optional[SegmentProcessor] = None
+
+    def __getstate__(self) -> dict:
+        state = dict(self.__dict__)
+        state["_proc"] = None
+        return state
+
+    def _processor(self) -> SegmentProcessor:
+        if self._proc is None:
+            self._proc = SegmentProcessor(
+                dem=SyntheticGlobeDEM(),
+                aerodromes=synthetic_aerodromes(n=64),
+                backend=self.backend, pipeline=self.pipeline)
+        return self._proc
+
+    def _config(self) -> ScreenConfig:
+        return ScreenConfig(h_thresh_m=self.h_thresh_m,
+                            v_thresh_m=self.v_thresh_m)
+
+    def __call__(self, task: Task) -> dict:
+        doc = json.loads(task.payload)
+        wanted = set(doc["all"])
+        tracks = sorted({rid.rsplit("#", 1)[0] for rid in wanted})
+        proc = self._processor()
+        rows = []
+        for tid in tracks:
+            uri = make_store_uri(self.store_dir, track=tid)
+            obs = proc.read_observations(uri)
+            segs = split_segments(obs["time"])
+            if not segs:
+                continue
+            ps = proc.process_arrays(obs, segs)
+            rows.extend(r for r in rows_from_track(tid, obs, segs, ps)
+                        if r.row_id in wanted)
+        new = set(doc["new"])
+        cands, stats = screen_cells(
+            {doc["cell"]: rows}, config=self._config(),
+            new_ids=None if new >= wanted else {doc["cell"]: new})
+        return {"candidates": cands, "stats": stats}
+
+
+class _CellBinEmitter(EdgeEmitter):
+    """process -> screen streaming edge: admit screen cells as upstream
+    shards commit.
+
+    Each completed process task covers one committed store shard; the
+    emitter re-derives that shard's ScreenRows from the store (never
+    from the in-flight result object, so live runs, sim runs, and
+    post-checkpoint resumes all emit identical tasks), bins them into
+    the halo-padded spatial hash, and — whenever a cell holds >= 2 rows
+    with unscreened members — cuts a *generation* task
+    ``screen/<cell>/g<n>`` carrying the cell's full membership plus the
+    newly-arrived rows.  Workers screen only pairs touching a new row,
+    so the union over generations is exactly the barrier run's pair set
+    (each track lives in exactly one shard, so a row arrives once).
+    ``cpu_cost_hint`` uses the incremental quadratic cost
+    :func:`repro.geometry.gridhash.cell_cost`, giving sized_lpt /
+    adaptive_chunk real occupancy skew to schedule against.
+    """
+
+    def __init__(self, store_dir: str, grid: GridSpec,
+                 config: ScreenConfig, *, backend: str = "pallas",
+                 pipeline: str = "fused"):
+        self.store_dir = store_dir
+        self.grid = grid
+        self.config = config
+        self.backend = backend
+        self.pipeline = pipeline
+        self.members: dict[str, list[str]] = {}   # cell -> all row ids
+        self.pending: dict[str, list[str]] = {}   # cell -> unscreened ids
+        self.gen: dict[str, int] = {}             # cell -> generations cut
+        self._proc: Optional[SegmentProcessor] = None
+
+    def _processor(self) -> SegmentProcessor:
+        if self._proc is None:
+            self._proc = SegmentProcessor(
+                dem=SyntheticGlobeDEM(),
+                aerodromes=synthetic_aerodromes(n=64),
+                backend=self.backend, pipeline=self.pipeline)
+        return self._proc
+
+    def feed(self, task: Task, result) -> list[Task]:
+        rows = _screen_rows_for_uri(self._processor(), task.payload)
+        bins = bin_screen_rows(rows, grid=self.grid, config=self.config)
+        out: list[Task] = []
+        for key in sorted(bins):
+            cid = cell_id(key)
+            arrived = sorted(bins[key])
+            self.members.setdefault(cid, []).extend(arrived)
+            self.pending.setdefault(cid, []).extend(arrived)
+            if len(self.members[cid]) < 2 or not self.pending[cid]:
+                continue
+            g = self.gen.get(cid, 0) + 1
+            self.gen[cid] = g
+            all_ids = sorted(self.members[cid])
+            new_ids = sorted(self.pending[cid])
+            self.pending[cid] = []
+            out.append(Task(
+                task_id=f"screen/{cid}/g{g}",
+                size_bytes=len(all_ids) * SCREEN_ROW_BYTES,
+                payload=json.dumps({"cell": cid, "all": all_ids,
+                                    "new": new_ids}, sort_keys=True),
+                cpu_cost_hint=cell_cost(len(all_ids), len(new_ids))))
+        return out
+
+    def state(self) -> dict:
+        return {"members": self.members, "pending": self.pending,
+                "gen": self.gen}
+
+    def restore(self, state: dict) -> None:
+        self.members = {k: list(v) for k, v in state["members"].items()}
+        self.pending = {k: list(v) for k, v in state["pending"].items()}
+        self.gen = {k: int(v) for k, v in state["gen"].items()}
+
+
 class TrackWorkflow:
     """organize -> archive -> process with self-scheduling + checkpoints."""
 
@@ -224,6 +390,10 @@ class TrackWorkflow:
                  store_target_points: Optional[int] = None,
                  mode: str = "barrier",
                  n_manager_shards: int = 1,
+                 screen: bool = False,
+                 screen_h_m: float = 926.0,
+                 screen_v_m: float = 152.4,
+                 screen_cell_deg: float = 0.25,
                  seed: int = 0):
         if exec_backend not in ("threads", "processes"):
             raise ValueError(
@@ -240,6 +410,10 @@ class TrackWorkflow:
                              f"streams tasks between them")
         if n_manager_shards < 1:
             raise ValueError("n_manager_shards must be >= 1")
+        if screen and input != "store":
+            raise ValueError("--screen needs --input store: screening "
+                             "re-reads segment rows from the columnar "
+                             "store (store:// track selections)")
         from repro.runtime.policies import POLICY_NAMES
         if policy not in POLICY_NAMES:
             raise ValueError(f"unknown scheduling policy {policy!r}; "
@@ -254,6 +428,11 @@ class TrackWorkflow:
         self.mode = mode
         self.n_manager_shards = n_manager_shards
         self.ckpt_path = os.path.join(root, "workflow_ckpt.json")
+        self.screen = screen
+        self.screen_grid = GridSpec(cell_deg=screen_cell_deg)
+        self.screen_config = ScreenConfig(h_thresh_m=screen_h_m,
+                                          v_thresh_m=screen_v_m)
+        self.candidates_path = os.path.join(root, "candidates.json")
         self.n_workers = (max(triple.worker_processes, 1)
                           if triple is not None else n_workers)
         self.organization = organization
@@ -358,6 +537,79 @@ class TrackWorkflow:
             self.store_dir, results, target_points=target,
             meta={"source_root": os.path.abspath(self.archive_dir)})
 
+    # -- encounter screening ---------------------------------------------
+
+    def _screen_worker(self) -> ScreenWorker:
+        return ScreenWorker(self.store_dir,
+                            h_thresh_m=self.screen_config.h_thresh_m,
+                            v_thresh_m=self.screen_config.v_thresh_m,
+                            backend=self.backend, pipeline=self.pipeline)
+
+    def _screen_tasks_full(self) -> list[Task]:
+        """One task per multi-row cell over the *finished* store — the
+        barrier screen plan (``new == all``: every pair screened)."""
+        proc = SegmentProcessor(
+            dem=SyntheticGlobeDEM(),
+            aerodromes=synthetic_aerodromes(n=64),
+            backend=self.backend, pipeline=self.pipeline)
+        rows = []
+        for t in segment_tasks_from_store(self.store_dir,
+                                          granularity="shard"):
+            rows.extend(_screen_rows_for_uri(proc, t.payload))
+        bins = bin_screen_rows(rows, grid=self.screen_grid,
+                               config=self.screen_config)
+        tasks = []
+        for key in sorted(bins):
+            ids = sorted(bins[key])
+            if len(ids) < 2:
+                continue
+            cid = cell_id(key)
+            tasks.append(Task(
+                task_id=f"screen/{cid}/g1",
+                size_bytes=len(ids) * SCREEN_ROW_BYTES,
+                payload=json.dumps({"cell": cid, "all": ids, "new": ids},
+                                   sort_keys=True),
+                cpu_cost_hint=cell_cost(len(ids))))
+        return tasks
+
+    def _write_candidates(self, cands) -> str:
+        """Canonical candidate file: deduped, (a, b)-sorted, sorted
+        keys — byte-identical across barrier and DAG runs."""
+        doc = {
+            "schema": "repro.encounters/v1",
+            "thresholds": {"h_m": self.screen_config.h_thresh_m,
+                           "v_m": self.screen_config.v_thresh_m},
+            "grid": {"cell_deg": self.screen_grid.cell_deg,
+                     "cell_alt_m": self.screen_grid.cell_alt_m,
+                     "cell_t_s": self.screen_grid.cell_t_s},
+            "candidates": dedup_candidates(cands),
+        }
+        tmp = self.candidates_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, sort_keys=True, indent=1)
+            f.write("\n")
+        os.replace(tmp, self.candidates_path)
+        return self.candidates_path
+
+    def _run_screen_barrier(self) -> None:
+        tasks = self._screen_tasks_full()
+        worker = self._screen_worker()
+        cands: list = []
+        if tasks:
+            result = self._run_phase("screen", tasks, worker)
+            for task in tasks:
+                doc = result.results.get(task.task_id)
+                if doc is None:
+                    # Completed before a mid-phase checkpoint kill;
+                    # screening is deterministic — just redo the cell.
+                    doc = worker(task)
+                cands.extend(doc["candidates"])
+        else:
+            state = self._load_ckpt()
+            state["phases_done"].append("screen")
+            self._save_ckpt(state)
+        self._write_candidates(cands)
+
     def _run_dag(self) -> None:
         """Streaming-DAG pipeline (``mode='dag'``): one coordinator, no
         phase barriers — archive completions cut shard plans, shard
@@ -378,10 +630,14 @@ class TrackWorkflow:
                 not os.path.exists(os.path.join(self.store_dir,
                                                 MANIFEST_NAME)):
             done.discard("store-build")
+        if self.screen and "screen" in done and \
+                not os.path.exists(self.candidates_path):
+            done.discard("screen")
         run_organize = "organize" not in done
         run_archive = "archive" not in done
         run_store = self.input == "store" and "store-build" not in done
         run_process = "process" not in done
+        run_screen = self.screen and "screen" not in done
 
         target = (self.store_target_points
                   or store_writer.DEFAULT_TARGET_POINTS)
@@ -445,7 +701,24 @@ class TrackWorkflow:
                 dag.add_edge("store-build", "process",
                              emitter=_ShardCommitEmitter(self.store_dir,
                                                          target))
-        elif self.input != "store" and run_process and run_archive:
+        screen_tasks = None
+        screen_emitter = None
+        if run_screen:
+            if run_process:
+                # Streaming edge: cells admit generations as the shards
+                # feeding them commit and process.
+                screen_emitter = _CellBinEmitter(
+                    self.store_dir, self.screen_grid, self.screen_config,
+                    backend=self.backend, pipeline=self.pipeline)
+                dag.add_node("screen", fn=self._screen_worker())
+                dag.add_edge("process", "screen", emitter=screen_emitter)
+            else:
+                # Store already processed by a prior run: plan the cells
+                # up front, exactly like the barrier screen phase.
+                screen_tasks = self._screen_tasks_full()
+                dag.add_node("screen", fn=self._screen_worker(),
+                             tasks=screen_tasks)
+        if self.input != "store" and run_process and run_archive:
             archive_root = self.archive_dir
 
             def zip_process_task(task: Task, result) -> list[Task]:
@@ -503,6 +776,30 @@ class TrackWorkflow:
             store_writer.finalize_manifest(
                 self.store_dir, target_points=target,
                 meta={"source_root": os.path.abspath(self.archive_dir)})
+        if run_screen:
+            worker = self._screen_worker()
+            docs = result.node_results.get("screen", {})
+            by_id = {t.task_id: t for t in (screen_tasks or [])}
+            cands: list = []
+            for tid in sorted(result.node_completed.get("screen", [])):
+                doc = docs.get(tid)
+                if doc is None:
+                    # Completed before a checkpoint kill: rebuild the
+                    # task.  Emitter-cut generations rebuild from the
+                    # (restored + re-fed) full cell membership — a
+                    # superset of the lost generation's pairs, which
+                    # the canonical dedup collapses back exactly.
+                    task = by_id.get(tid)
+                    if task is None:
+                        cid = tid.split("/")[1]
+                        ids = sorted(screen_emitter.members.get(cid, []))
+                        task = Task(task_id=tid,
+                                    payload=json.dumps(
+                                        {"cell": cid, "all": ids,
+                                         "new": ids}, sort_keys=True))
+                    doc = worker(task)
+                cands.extend(doc["candidates"])
+            self._write_candidates(cands)
         # Node names double as the barrier-phase names: record them so
         # switching back to mode="barrier" later never re-runs them.
         state["phases_done"].extend(dag.nodes)
@@ -518,7 +815,10 @@ class TrackWorkflow:
     def run(self) -> list[PhaseReport]:
         if self.mode == "dag":
             state = self._load_ckpt()
-            if "dag" not in set(state["phases_done"]):
+            done = set(state["phases_done"])
+            if "dag" not in done or (self.screen and (
+                    "screen" not in done
+                    or not os.path.exists(self.candidates_path))):
                 self._run_dag()
             return self.reports
         state = self._load_ckpt()
@@ -529,6 +829,11 @@ class TrackWorkflow:
             # Killed between phase completion and the manifest commit:
             # shard builds are idempotent, so just redo the phase.
             done.discard("store-build")
+        if self.screen and "screen" in done and \
+                not os.path.exists(self.candidates_path):
+            # Killed between phase completion and the candidate write:
+            # cell screens are deterministic, so just redo the phase.
+            done.discard("screen")
         if "organize" not in done:
             org = Organizer(self.organized_dir, self.registry)
             tasks = organize_tasks_from_dir(self.raw_dir)
@@ -556,6 +861,8 @@ class TrackWorkflow:
             # SegmentProcessor.process_batch (store:// shard payloads
             # stream through the TrackStore reader).
             self._run_phase("process", tasks, proc, organization="random")
+        if self.screen and "screen" not in done:
+            self._run_screen_barrier()
         return self.reports
 
 
@@ -643,6 +950,18 @@ def main() -> None:
     ap.add_argument("--store-target-points", type=int, default=None,
                     help="observation points per store shard (store "
                          "input only)")
+    ap.add_argument("--screen", action="store_true",
+                    help="append an encounter-screen phase (requires "
+                         "--input store): spatial-hash cell tasks over "
+                         "the processed segment rows, fused pairwise "
+                         "miss-distance kernel, candidates.json output")
+    ap.add_argument("--screen-h-m", type=float, default=926.0,
+                    help="horizontal candidate threshold (meters)")
+    ap.add_argument("--screen-v-m", type=float, default=152.4,
+                    help="vertical candidate threshold (meters)")
+    ap.add_argument("--screen-cell-deg", type=float, default=0.25,
+                    help="spatial-hash cell width (degrees; must divide "
+                         "360)")
     ap.add_argument("--serve", action="store_true",
                     help="continuous-ingest mode: tail a synthetic live "
                          "feed into the store via the service DAG and "
@@ -678,7 +997,11 @@ def main() -> None:
                        input=args.input,
                        store_target_points=args.store_target_points,
                        mode=args.pipeline,
-                       n_manager_shards=args.manager_shards)
+                       n_manager_shards=args.manager_shards,
+                       screen=args.screen,
+                       screen_h_m=args.screen_h_m,
+                       screen_v_m=args.screen_v_m,
+                       screen_cell_deg=args.screen_cell_deg)
     if not os.path.isdir(wf.raw_dir):
         n = wf.generate_raw(n_files=args.files, scale=args.scale)
         print(f"generated {n} raw files under {wf.raw_dir}")
@@ -686,6 +1009,11 @@ def main() -> None:
         print(f"{r.phase:10s}: {r.tasks:5d} tasks on {r.workers} "
               f"{args.backend} workers in {r.job_seconds:.2f}s "
               f"({r.messages} messages)")
+    if args.screen and os.path.exists(wf.candidates_path):
+        with open(wf.candidates_path) as f:
+            n = len(json.load(f)["candidates"])
+        print(f"screen    : {n} candidate encounters -> "
+              f"{wf.candidates_path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,131 @@
+"""Tests for the encounter-screening benchmark matrix + tooling.
+
+The quick tier IS the ISSUE-8 acceptance cell set, so running it here
+(and asserting every cell passes) keeps the CI gate honest locally:
+grid + fused-kernel candidates exactly equal to the brute-force
+all-pairs reference on the dense jit AND pallas cells, the fused
+screen >= 5x over numpy brute force at full aerodrome density,
+sparse cells an order of magnitude below dense occupancy, and
+sized_lpt / adaptive_chunk each >= 1.3x static makespan on the
+quadratic-skew screen-cell manifest.  Also covers spec validation,
+deterministic re-runs, schema validation, and the compare CLI's
+schema dispatch.
+"""
+
+import copy
+import dataclasses
+import json
+
+import pytest
+
+from repro.bench import encounters as enc
+from repro.bench.compare import compare_docs, default_metric
+from repro.bench.compare import main as compare_main
+from repro.bench.schema import ENCOUNTERS_SCHEMA, validate_encounters
+
+
+@pytest.fixture(scope="module")
+def quick_doc():
+    return enc.run_encounter_campaign(quick=True)
+
+
+def test_quick_tier_is_the_acceptance_cells(quick_doc):
+    names = {r["name"] for r in quick_doc["scenarios"]}
+    assert names == {"enc_exact_tiny_dense_jit",
+                     "enc_exact_tiny_dense_pallas",
+                     "enc_dense_kernel_speedup",
+                     "enc_sparse_density",
+                     "enc_policy_quadratic_sized_lpt",
+                     "enc_policy_quadratic_adaptive_chunk"}
+
+
+def test_quick_tier_passes_and_validates(quick_doc):
+    assert validate_encounters(quick_doc) == []
+    assert quick_doc["summary"]["fail"] == 0
+    assert quick_doc["summary"]["error"] == 0
+    by_name = {r["name"]: r for r in quick_doc["scenarios"]}
+    for name in ("enc_exact_tiny_dense_jit", "enc_exact_tiny_dense_pallas",
+                 "enc_dense_kernel_speedup", "enc_sparse_density"):
+        assert by_name[name]["metrics"]["candidate_set_equal"] == 1, name
+    assert by_name["enc_dense_kernel_speedup"][
+        "measured"]["kernel_speedup_x"] >= 5.0
+    for policy in ("sized_lpt", "adaptive_chunk"):
+        rec = by_name[f"enc_policy_quadratic_{policy}"]
+        assert rec["metrics"]["makespan_speedup_x"] >= 1.3
+        assert rec["metrics"]["tasks_completed"] == rec["metrics"]["cells"]
+    # Density contrast: sparse cells stay an order of magnitude below
+    # the dense manifest's hotspot occupancy.
+    assert by_name["enc_sparse_density"][
+        "metrics"]["max_cell_occupancy"] <= 8
+
+
+def test_policy_cells_deterministic(quick_doc):
+    """The sim cells are pure functions of (spec, seed): re-running
+    reproduces metrics (incl. the dispatch digest) bit-identically."""
+    by_name = {r["name"]: r for r in quick_doc["scenarios"]}
+    rec = by_name["enc_policy_quadratic_sized_lpt"]
+    again = enc._execute_policy_sim(enc.EncounterSpec(**rec["spec"]["run"]))
+    want = {k: v for k, v in rec["metrics"].items()
+            if k not in ("baseline_makespan_seconds", "makespan_speedup_x")}
+    assert again["metrics"] == want
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="cell kind"):
+        enc.EncounterSpec(kind="nope")
+    with pytest.raises(ValueError, match="kernel backend"):
+        enc.EncounterSpec(kind="screen", backend="sim")
+    with pytest.raises(ValueError, match="trail kind"):
+        enc.EncounterSpec(kind="screen", dataset="aerodrome_dense")
+    with pytest.raises(ValueError, match="sim backend"):
+        enc.EncounterSpec(kind="policy_sim", backend="jit")
+    with pytest.raises(ValueError, match="policy"):
+        enc.EncounterSpec(kind="policy_sim", backend="sim",
+                          policy="nope")
+
+
+def test_scenario_matrix_declares_unique_names():
+    scs = enc.encounter_scenarios()
+    names = [sc.name for sc in scs]
+    assert len(names) == len(set(names))
+    assert sum(1 for sc in scs if sc.tier == "quick") == 6
+
+
+def test_campaign_filters_and_seed_override():
+    with pytest.raises(ValueError, match="match"):
+        enc.run_encounter_campaign(filters=["no_such_cell"])
+
+
+def test_compare_dispatch_and_gate(tmp_path, quick_doc, capsys):
+    assert default_metric(quick_doc) == "screen_seconds_per_candidate"
+    worse = copy.deepcopy(quick_doc)
+    for rec in worse["scenarios"]:
+        if "screen_seconds_per_candidate" in rec["metrics"]:
+            rec["metrics"]["screen_seconds_per_candidate"] *= 2.0
+    rows, regressions = compare_docs(quick_doc, worse, threshold=0.10)
+    assert regressions and all(r["delta_pct"] > 10 for r in regressions)
+    # Policy cells don't publish the screen metric -> never gated on it.
+    gated = {r["name"] for r in rows}
+    assert not any(n.startswith("enc_policy") for n in gated)
+
+    old_p, new_p = tmp_path / "old.json", tmp_path / "new.json"
+    old_p.write_text(json.dumps(quick_doc))
+    new_p.write_text(json.dumps(worse))
+    assert compare_main([str(old_p), str(new_p)]) == 1
+    assert compare_main([str(old_p), str(old_p)]) == 0
+    out = capsys.readouterr().out
+    assert "screen_seconds_per_candidate" in out
+    assert "max_cell_occupancy" in out          # info row, not gated
+
+    mismatched = copy.deepcopy(quick_doc)
+    mismatched["schema"] = "repro.bench.scheduling/v1"
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(mismatched))
+    assert compare_main([str(old_p), str(bad)]) == 1
+
+
+def test_summary_lines_render(quick_doc):
+    lines = enc.encounter_summary_lines(quick_doc)
+    assert "6 encounter scenarios" in lines[0]
+    assert any("kernel=" in ln for ln in lines)
+    assert any("speedup=" in ln for ln in lines)

@@ -100,12 +100,71 @@ def test_processing_has_ferry_flight_outliers():
     assert cpu.max() > 5 * np.percentile(cpu, 99.1)
 
 
+# -- encounter-screening cell manifests (ISSUE 8) -------------------------
+
+
+@pytest.fixture(scope="module")
+def aerodrome_dense():
+    return get_manifest("aerodrome_dense")
+
+
+@pytest.fixture(scope="module")
+def enroute_sparse():
+    return get_manifest("enroute_sparse")
+
+
+def _occs(tasks):
+    return np.array([t.size_bytes // ds.SCREEN_ROW_BYTES for t in tasks])
+
+
+def test_aerodrome_dense_goldens(aerodrome_dense):
+    """Terminal-area density: 3000 aircraft binned into screen cells
+    with a hotspot whose occupancy dominates the quadratic cost."""
+    occ = _occs(aerodrome_dense)
+    assert len(aerodrome_dense) == 585
+    assert occ.max() == 237
+    assert (occ >= 2).all()                    # singleton cells pre-pruned
+    cpu = np.array([t.cpu_cost_hint for t in aerodrome_dense], float)
+    assert cpu.sum() == pytest.approx(91.5, rel=0.01)
+    assert cpu.max() == pytest.approx(6.99, rel=0.01)
+
+
+def test_enroute_sparse_goldens(enroute_sparse):
+    occ = _occs(enroute_sparse)
+    assert len(enroute_sparse) == 23
+    assert occ.max() == 3
+
+
+def test_dense_occupancy_dwarfs_sparse(aerodrome_dense, enroute_sparse):
+    """The acceptance skew: aerodrome-dense max cell occupancy is at
+    least 10x the en-route-sparse one."""
+    assert _occs(aerodrome_dense).max() >= 10 * _occs(enroute_sparse).max()
+
+
+def test_screen_manifest_cost_hints_are_quadratic(aerodrome_dense):
+    """cpu_cost_hint tracks occupancy^2 (pair count), not size_bytes —
+    the skew the scheduling policies are benchmarked on."""
+    from repro.geometry.gridhash import cell_cost
+    occ = _occs(aerodrome_dense)
+    cpu = np.array([t.cpu_cost_hint for t in aerodrome_dense], float)
+    want = np.array([cell_cost(int(k)) for k in occ])
+    np.testing.assert_allclose(cpu, want, rtol=1e-12)
+
+
+def test_screen_manifests_seed_stable():
+    a = get_manifest("aerodrome_dense")
+    b = get_manifest("aerodrome_dense")
+    assert [t.task_id for t in a] == [t.task_id for t in b]
+    assert [t.cpu_cost_hint for t in a] == [t.cpu_cost_hint for t in b]
+
+
 # -- registry plumbing ----------------------------------------------------
 
 
 def test_registry_covers_all_manifests():
     assert set(ds.MANIFESTS) >= {"monday", "aerodrome", "radar_messages",
-                                 "archive", "processing", "smoke", "tiny"}
+                                 "archive", "processing", "smoke", "tiny",
+                                 "aerodrome_dense", "enroute_sparse"}
 
 
 def test_get_manifest_limit_and_isolation(monday):

@@ -1,0 +1,143 @@
+"""Spatial-hash grid binning: wrap/halo edge cases + cost model."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.geometry.gridhash import (
+    GridSpec, bin_samples, cell_cost, cell_id, cells_for_samples,
+    occupancy_stats, wrap_lon)
+
+SPEC = GridSpec(cell_deg=0.25)
+
+
+def _sample(t, la, lo, al):
+    return (np.array([t]), np.array([la]), np.array([lo]), np.array([al]))
+
+
+def test_gridspec_rejects_non_dividing_cell_deg():
+    with pytest.raises(ValueError):
+        GridSpec(cell_deg=0.7)
+    with pytest.raises(ValueError):
+        GridSpec(cell_deg=-1.0)
+
+
+def test_wrap_lon_into_half_open_range():
+    np.testing.assert_allclose(
+        wrap_lon([181.0, -181.0, 360.0, -180.0, 179.9]),
+        [-179.0, 179.0, 0.0, -180.0, 179.9])
+
+
+def test_cell_id_roundtrips_negative_indices():
+    # "/"-free so workflow task ids split cleanly; signs survive.
+    assert cell_id((3, -1, -188, 1439)) == "t3_a-1_y-188_x1439"
+
+
+def test_antimeridian_pad_wraps_modulo_n_lon():
+    """A sample just east of -180 pads across the antimeridian: the raw
+    floor index would be -721 (out of range); the ring wraps it to the
+    +180-side neighbour instead."""
+    west = SPEC.n_lon // 2          # cell whose left edge is -180
+    keys = cells_for_samples(*_sample(10.0, 0.1, -179.999, 500.0),
+                             spec=SPEC, h_pad_m=926.0)
+    xis = {k[3] for k in keys}
+    assert xis == {west - 1, west}
+    assert all(0 <= k[3] < SPEC.n_lon for k in keys)
+
+
+def test_antimeridian_neighbours_share_a_cell():
+    """Rows straddling +/-180 at the same spot co-bin after padding."""
+    a = cells_for_samples(*_sample(5.0, -30.0, 179.999, 1000.0),
+                          spec=SPEC, h_pad_m=926.0, v_pad_m=152.4)
+    b = cells_for_samples(*_sample(5.0, -30.0, -179.999, 1000.0),
+                          spec=SPEC, h_pad_m=926.0, v_pad_m=152.4)
+    assert set(a) & set(b)
+
+
+def test_hemisphere_boundary_pads_into_negative_band():
+    """Equator crossing needs no special case: padding just spills
+    into latitude band -1."""
+    keys = cells_for_samples(*_sample(0.0, 0.001, 10.0, 500.0),
+                             spec=SPEC, h_pad_m=926.0)
+    ais = {k[2] for k in keys}
+    assert ais == {-1, 0}
+
+
+def test_negative_altitude_layers_allowed():
+    keys = cells_for_samples(*_sample(0.0, 40.0, 10.0, -50.0), spec=SPEC)
+    assert {k[1] for k in keys} == {-1}
+
+
+def test_time_axis_never_padded():
+    keys = cells_for_samples(
+        np.array([3599.0, 3601.0]), np.array([40.0, 40.0]),
+        np.array([10.0, 10.0]), np.array([500.0, 500.0]),
+        spec=SPEC, h_pad_m=926.0, v_pad_m=152.4)
+    assert {k[0] for k in keys} == {0, 1}
+
+
+def test_multi_cell_membership_deduplicates():
+    """Samples revisiting the same cell emit it once, sorted."""
+    t = np.zeros(6)
+    la = np.array([40.1, 40.1, 40.6, 40.1, 40.6, 40.1])
+    lo = np.full(6, 10.1)
+    al = np.full(6, 500.0)
+    keys = cells_for_samples(t, la, lo, al, spec=SPEC)
+    assert keys == sorted(set(keys))
+    assert len(keys) == 2
+
+
+def test_empty_samples_bin_nowhere():
+    assert cells_for_samples(np.array([]), np.array([]), np.array([]),
+                             np.array([]), spec=SPEC) == []
+    stats = occupancy_stats({})
+    assert stats["cells"] == 0 and stats["max_occupancy"] == 0
+
+
+def test_bin_samples_groups_row_ids_by_cell():
+    rows = [("r1", *_sample(0.0, 40.1, 10.1, 500.0)),
+            ("r2", *_sample(0.0, 40.1, 10.1, 500.0)),
+            ("r3", *_sample(0.0, 45.0, 60.0, 500.0))]
+    bins = bin_samples(rows, spec=SPEC)
+    occ = occupancy_stats(bins)
+    assert occ["multi_cells"] == 1 and occ["max_occupancy"] == 2
+    assert any(ids == ["r1", "r2"] for ids in bins.values())
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_halo_guarantees_threshold_pairs_share_a_cell(seed):
+    """The screening invariant: two single-sample rows within the
+    thresholds at a common instant ALWAYS co-bin after halo padding —
+    including across the antimeridian and the poles' cos(lat) blowup."""
+    rng = np.random.default_rng(seed)
+    h_pad, v_pad = 926.0, 152.4
+    la = float(rng.uniform(-89.0, 89.0))
+    lo = float(rng.uniform(-180.0, 180.0))
+    al = float(rng.uniform(0.0, 12_000.0))
+    t = float(rng.uniform(0.0, 7200.0))
+    # Displace inside the threshold box (in metres, scaled to degrees).
+    cos_lat = max(np.cos(np.deg2rad(la)), 0.2)
+    dla = float(rng.uniform(-1, 1)) * h_pad / 111_111.0
+    dlo = float(rng.uniform(-1, 1)) * h_pad / (111_111.0 * cos_lat)
+    dal = float(rng.uniform(-1, 1)) * v_pad
+    a = cells_for_samples(*_sample(t, la, lo, al), spec=SPEC,
+                          h_pad_m=h_pad, v_pad_m=v_pad)
+    b = cells_for_samples(
+        *_sample(t, np.clip(la + dla, -90, 90),
+                 float(wrap_lon(lo + dlo)), al + dal),
+        spec=SPEC, h_pad_m=h_pad, v_pad_m=v_pad)
+    assert set(a) & set(b)
+
+
+def test_cell_cost_quadratic_and_incremental():
+    assert cell_cost(0) == 0.0 and cell_cost(1) == 0.0
+    assert cell_cost(2) > 0.0
+    # quadratic: doubling occupancy ~4x the pairs
+    assert cell_cost(200) / cell_cost(100) == pytest.approx(4.0, rel=0.05)
+    # incremental generations tile the full quadratic cost exactly:
+    # pairs(old+new) = pairs(old) + new*(old) + pairs-within-new
+    for n_all, n_new in [(10, 3), (7, 7), (5, 1)]:
+        assert cell_cost(n_all, n_new) + cell_cost(n_all - n_new) == \
+            pytest.approx(cell_cost(n_all))

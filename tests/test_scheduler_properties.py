@@ -214,6 +214,63 @@ def test_dispatch_order_deterministic_across_backends(shape):
 
 
 # ---------------------------------------------------------------------------
+# Screen phase: the invariants extend to quadratic-cost screen cells.
+# ---------------------------------------------------------------------------
+
+def test_screen_phase_exactly_once_deterministic_with_deaths():
+    """ISSUE 8: the exactly-once / determinism invariants hold for the
+    screen phase — ``screen/<cell>`` task ids carrying quadratic
+    ``cpu_cost_hint`` (occupancy^2 pairs) under the SCREEN_PHASE cost
+    model, including with workers dying mid-job."""
+    from repro.core.cost_model import PHASES
+    from repro.tracks.datasets import get_manifest
+
+    tasks = get_manifest("aerodrome_dense", limit=60)
+    all_ids = {t.task_id for t in tasks}
+    deaths = {1: 1.0}                # one worker dies a second in
+    for policy in POLICY_NAMES:
+        logs = []
+        for _ in range(2):
+            r = run_job(tasks, None, backend="sim", n_workers=4,
+                        organization="chronological", tasks_per_message=2,
+                        organize_seed=3, policy=policy,
+                        cost_model=PHASES["screen"], worker_death=deaths)
+            assert r.completed_ids == all_ids, policy    # nothing lost
+            logs.append(r.batches)
+        assert logs[0] == logs[1], policy                # bit-stable sim
+
+
+def test_screen_phase_checkpoint_cycle():
+    """A screen-phase scheduler checkpointed mid-run restores without
+    losing or duplicating any cell, cost hints intact."""
+    from repro.tracks.datasets import get_manifest
+
+    tasks = get_manifest("aerodrome_dense", limit=40)
+    all_ids = {t.task_id for t in tasks}
+    for policy in POLICY_NAMES:
+        core = SchedulerCore(tasks, organization="largest_first",
+                             tasks_per_message=3, policy=policy,
+                             n_workers=3)
+        fresh_before = []
+        for _ in range(5):
+            batch = core.next_batch("w0")
+            if batch:
+                fresh_before.extend(
+                    core.on_done("w0", [t.task_id for t in batch]))
+        ck = ManagerCheckpoint.loads(core.checkpoint().dumps())
+        restored = SchedulerCore(tasks, organization="largest_first",
+                                 tasks_per_message=3, policy=policy,
+                                 n_workers=3, checkpoint=ck)
+        fresh_after = []
+        while not restored.done:
+            batch = restored.next_batch("w1")
+            assert batch, f"{policy}: restored screen scheduler stuck"
+            fresh_after.extend(
+                restored.on_done("w1", [t.task_id for t in batch]))
+        assert sorted(fresh_before + fresh_after) == sorted(all_ids), policy
+
+
+# ---------------------------------------------------------------------------
 # adaptive_chunk: a mid-phase restore continues the chunk schedule.
 # ---------------------------------------------------------------------------
 
