@@ -1,0 +1,30 @@
+"""Observability BENCH artifact CLI (thin adapter).
+
+Benchmarks the tracing layer (:mod:`repro.obs`) across its three gate
+axes — enabled-tracing overhead on the heavy-tail sim at 1024 workers
+(<= 5 % wall-clock, identical virtual schedule), byte-identical
+``repro.obs/v1`` summaries across same-seed reruns, and straggler
+attribution (the 0.25x-speed workers of ``stragglers_10pct`` must rank
+slowest by measured ``speed_est``) — and writes a schema-validated
+``BENCH_obs.json`` (``repro.bench.obs/v1``).  Exits non-zero if any
+scenario misses its check (CI gates on the quick tier).
+
+    PYTHONPATH=src python benchmarks/obs_bench.py --quick
+    PYTHONPATH=src python benchmarks/obs_bench.py \\
+        --quick --trace-out trace.json --summary-out TRACE_summary.json
+
+``--summary-out`` reproduces the committed reference summary
+(``benchmarks/refs/TRACE_heavy_tail_quick.json``) byte-for-byte at the
+default seed.  The scenario declarations and record layout live in
+:mod:`repro.bench.obs` (``python -m repro.bench.obs`` is the same
+entry point).
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.bench.obs import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,14 @@ BENCH kind the repo emits:
     with non-gating rows for ``shards_committed``/``points_ingested``
     so a cut-rule change that silently re-shards the same feed is
     visible.
+  * ``repro.bench.obs/v1`` — ``makespan_seconds`` (the traced run's
+    simulated makespan; the overhead/determinism/straggler gates live
+    in the artifact's own checks), with a non-gating ``n_events`` row;
+  * ``repro.obs/v1`` — a single trace summary
+    (``TRACE_summary.json``): headline ``critical_path_s``, with
+    non-gating rows for ``straggler_count`` and ``exec_p99_over_p50``
+    so a scheduling change that trades critical path for tail blowup
+    is visible;
   * ``repro.bench.encounters/v1`` — ``screen_seconds_per_candidate``
     (modeled screen wall-clock per emitted candidate encounter; only
     the screen-kind cells publish it — policy sim cells gate through
@@ -64,6 +72,8 @@ DEFAULT_METRICS = {
     "repro.bench.scheduling/v1": "makespan_seconds",
     "repro.bench.serving/v1": "ingest_lag_max_points",
     "repro.bench.encounters/v1": "screen_seconds_per_candidate",
+    "repro.bench.obs/v1": "makespan_seconds",
+    "repro.obs/v1": "critical_path_s",
 }
 
 #: schema -> informational secondary metrics: their deltas are printed
@@ -74,6 +84,8 @@ INFO_METRICS = {
     "repro.bench.serving/v1": ("shards_committed", "points_ingested"),
     "repro.bench.encounters/v1": ("cells", "candidates",
                                   "max_cell_occupancy"),
+    "repro.bench.obs/v1": ("n_events",),
+    "repro.obs/v1": ("straggler_count", "exec_p99_over_p50"),
 }
 
 

@@ -55,8 +55,13 @@ def _smoke_fn(task):
     return task.size_bytes
 
 
-def execute_spec(spec: RunSpec) -> tuple[RunResult, int]:
-    """Run one RunSpec; returns (result, n_tasks)."""
+def execute_spec(spec: RunSpec, *,
+                 tracer=None) -> tuple[RunResult, int]:
+    """Run one RunSpec; returns (result, n_tasks).
+
+    ``tracer`` attaches a :class:`repro.obs.Tracer` to the run (ignored
+    by ``mode='static'`` baselines — there is no per-task dispatch to
+    trace in a static distribution)."""
     tasks = get_manifest(spec.dataset, limit=spec.dataset_limit)
     model = PHASES[spec.phase]
     if spec.cpu_rate_scale != 1.0:
@@ -108,7 +113,8 @@ def execute_spec(spec: RunSpec) -> tuple[RunResult, int]:
         organization=spec.organization,
         tasks_per_message=spec.tasks_per_message,
         policy=spec.sched_policy,
-        organize_seed=spec.seed, raise_on_failure=False, **kwargs)
+        organize_seed=spec.seed, raise_on_failure=False,
+        tracer=tracer, **kwargs)
     return result, len(tasks)
 
 
@@ -136,14 +142,24 @@ def _baseline_derived(rec: dict, base: dict) -> dict:
     return out
 
 
-def run_scenario(sc: Scenario) -> dict:
-    """Execute one scenario (plus baseline) into a BENCH record."""
+def run_scenario(sc: Scenario, *, trace: bool = False) -> dict:
+    """Execute one scenario (plus baseline) into a BENCH record.
+
+    ``trace=True`` runs the scenario (not its baseline) with a
+    :class:`repro.obs.Tracer` attached and adds an ``obs`` key to the
+    record — the trace-summary headline metrics (critical path,
+    straggler count, exec-time tails).  Default runs carry no ``obs``
+    key, so existing artifacts stay byte-identical."""
     t0 = time.perf_counter()
     spec_doc = {"run": sc.run.to_dict(),
                 "baseline": sc.baseline.to_dict() if sc.baseline else None}
     base_rec: Optional[dict] = None
+    tracer = None
+    if trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
     try:
-        result, n_tasks = execute_spec(sc.run)
+        result, n_tasks = execute_spec(sc.run, tracer=tracer)
         if sc.baseline is not None:
             base_result, _ = execute_spec(sc.baseline)
             base_rec = base_result.to_record()
@@ -178,10 +194,16 @@ def run_scenario(sc: Scenario) -> dict:
         status = "ran"
     else:
         status = "pass" if all(c["passed"] for c in checks) else "fail"
-    return {"name": sc.name, "group": sc.group, "tier": sc.tier,
-            "status": status, "spec": spec_doc,
-            "metrics": metrics, "measured": measured, "checks": checks,
-            "timing": {"wall_s": wall_s}, "error": None}
+    out = {"name": sc.name, "group": sc.group, "tier": sc.tier,
+           "status": status, "spec": spec_doc,
+           "metrics": metrics, "measured": measured, "checks": checks,
+           "timing": {"wall_s": wall_s}, "error": None}
+    if tracer is not None:
+        from repro.obs import summary_from_tracer
+        obs = summary_from_tracer(tracer, label=sc.name)
+        out["obs"] = {"metrics": obs["scenario"]["metrics"],
+                      "dropped": tracer.dropped}
+    return out
 
 
 def run_campaign(scenarios: Sequence[Scenario], *, quick: bool = False,

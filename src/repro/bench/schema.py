@@ -69,11 +69,13 @@ from typing import Any
 
 __all__ = ["CAMPAIGN_SCHEMA", "SMOKE_SCHEMA", "KERNELS_SCHEMA",
            "STORAGE_SCHEMA", "SCHEDULING_SCHEMA", "SERVING_SCHEMA",
-           "ENCOUNTERS_SCHEMA", "SCHEMA_VERSION",
+           "ENCOUNTERS_SCHEMA", "OBS_SUMMARY_SCHEMA", "OBS_BENCH_SCHEMA",
+           "SCHEMA_VERSION",
            "NONDETERMINISTIC_RECORD_KEYS", "NONDETERMINISTIC_DOC_KEYS",
            "validate_record", "validate_campaign", "validate_smoke",
            "validate_kernels", "validate_storage", "validate_scheduling",
-           "validate_serving", "validate_encounters", "canonical_bytes"]
+           "validate_serving", "validate_encounters", "validate_obs",
+           "validate_obs_summary", "canonical_bytes"]
 
 SCHEMA_VERSION = 1
 CAMPAIGN_SCHEMA = "repro.bench.campaign/v1"
@@ -83,6 +85,14 @@ STORAGE_SCHEMA = "repro.bench.storage/v1"
 SCHEDULING_SCHEMA = "repro.bench.scheduling/v1"
 SERVING_SCHEMA = "repro.bench.serving/v1"
 ENCOUNTERS_SCHEMA = "repro.bench.encounters/v1"
+#: Canonical trace summary (``TRACE_summary.json``) emitted by
+#: :mod:`repro.obs.summary` — a single-scenario document shaped for
+#: ``compare.py``'s smoke-doc path.
+OBS_SUMMARY_SCHEMA = "repro.obs/v1"
+#: Observability bench matrix (``BENCH_obs.json``) from
+#: ``benchmarks/obs_bench.py``: tracing overhead / determinism /
+#: straggler-attribution cells.
+OBS_BENCH_SCHEMA = "repro.bench.obs/v1"
 
 NONDETERMINISTIC_RECORD_KEYS = ("measured", "timing")
 NONDETERMINISTIC_DOC_KEYS = ("created_at", "environment", "timing")
@@ -131,6 +141,18 @@ _SERVING_METRICS_REQUIRED = ("shards_committed", "points_ingested",
 _ENCOUNTERS_SPEC_REQUIRED = ("kind", "dataset", "backend", "policy",
                              "n_workers", "fault_profile", "seed")
 _ENCOUNTERS_METRICS_REQUIRED = ("cells",)
+# Obs-bench records describe a tracing cell: kind (overhead /
+# determinism / straggler attribution) x dataset x backend x fleet x
+# fault profile.  Every cell reports the virtual makespan of its traced
+# run (the deterministic gating metric).
+_OBS_SPEC_REQUIRED = ("kind", "dataset", "backend", "n_workers",
+                      "fault_profile", "seed")
+_OBS_METRICS_REQUIRED = ("makespan_seconds", "n_events")
+# Required headline metrics of a repro.obs/v1 trace summary (the
+# ``scenario.metrics`` block compare.py diffs).
+_OBS_SUMMARY_METRICS_REQUIRED = ("critical_path_s", "makespan_s",
+                                 "straggler_count", "exec_p99_over_p50",
+                                 "n_exec_spans")
 
 
 def _num(x: Any) -> bool:
@@ -317,6 +339,54 @@ def validate_encounters(doc: Any) -> list[str]:
         doc, label="encounters", schema=ENCOUNTERS_SCHEMA,
         spec_required=_ENCOUNTERS_SPEC_REQUIRED,
         required_metrics=_ENCOUNTERS_METRICS_REQUIRED)
+
+
+def validate_obs(doc: Any) -> list[str]:
+    """Structural validation of a BENCH_obs.json artifact."""
+    return _validate_matrix_doc(
+        doc, label="obs", schema=OBS_BENCH_SCHEMA,
+        spec_required=_OBS_SPEC_REQUIRED,
+        required_metrics=_OBS_METRICS_REQUIRED)
+
+
+def validate_obs_summary(doc: Any) -> list[str]:
+    """Structural validation of a TRACE_summary.json (repro.obs/v1).
+
+    A trace summary is not a bench record — it carries no spec/checks/
+    timing — so it gets its own shape check: schema stamp, a
+    single-``scenario`` metrics block (the compare.py contract), and
+    the derived phase/worker/straggler/shard tables.
+    """
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["obs_summary: not an object"]
+    if doc.get("schema") != OBS_SUMMARY_SCHEMA:
+        errs.append(f"obs_summary.schema: {doc.get('schema')!r} != "
+                    f"{OBS_SUMMARY_SCHEMA!r}")
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        errs.append("obs_summary.schema_version: missing/mismatched")
+    if not isinstance(doc.get("config"), dict):
+        errs.append("obs_summary.config: not an object")
+    sc = doc.get("scenario")
+    if not isinstance(sc, dict):
+        errs.append("obs_summary.scenario: not an object")
+    else:
+        if not isinstance(sc.get("name"), str):
+            errs.append("obs_summary.scenario.name: not a string")
+        metrics = sc.get("metrics")
+        if not isinstance(metrics, dict):
+            errs.append("obs_summary.scenario.metrics: not an object")
+        else:
+            for key in _OBS_SUMMARY_METRICS_REQUIRED:
+                if not _num(metrics.get(key)):
+                    errs.append(f"obs_summary.scenario.metrics: "
+                                f"{key!r} missing/non-numeric")
+    for key in ("phases", "workers", "shards"):
+        if not isinstance(doc.get(key), dict):
+            errs.append(f"obs_summary.{key}: not an object")
+    if not isinstance(doc.get("stragglers"), list):
+        errs.append("obs_summary.stragglers: not a list")
+    return errs
 
 
 def validate_smoke(doc: Any) -> list[str]:

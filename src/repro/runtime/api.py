@@ -76,7 +76,8 @@ def run_job(tasks: Sequence[Task],
             worker_speed: Optional[Sequence[float]] = None,
             speculative: bool = False,
             legacy_launch_penalty: float = 1.0,
-            mp_context: Optional[str] = None) -> RunResult:
+            mp_context: Optional[str] = None,
+            tracer: Optional[Any] = None) -> RunResult:
     """Run a self-scheduled job on the chosen execution backend.
 
     ``fn`` is the per-task worker function (required for live backends,
@@ -123,6 +124,11 @@ def run_job(tasks: Sequence[Task],
     (``ManagerCheckpoint.frontier``) and every transport's message
     path, so a resumed manager can re-admit the task bit-identically
     without re-running its producer.
+
+    ``tracer`` attaches a :class:`repro.obs.Tracer`: task lifecycle
+    instants and exec spans are emitted on every backend (the sim binds
+    its virtual clock, so traced sim runs stay bit-reproducible and
+    tracing never changes a dispatch decision).
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
@@ -180,7 +186,8 @@ def run_job(tasks: Sequence[Task],
             worker_speed=worker_speed,
             speculative=speculative,
             core=core,
-            n_manager_shards=n_manager_shards)
+            n_manager_shards=n_manager_shards,
+            tracer=tracer)
         # Same contract as the live backends: an incomplete job (e.g.
         # every simulated worker died) raises instead of returning a
         # silently partial result.
@@ -193,6 +200,10 @@ def run_job(tasks: Sequence[Task],
 
     if fn is None:
         raise ValueError(f"backend {backend!r} needs a worker fn")
+    if tracer is not None:
+        # Live backends: wall-clock domain, attached before the drive
+        # loop so the queued-at-attach instants precede the first ASSIGN.
+        core.attach_tracer(tracer)
     if batch_fn is None:
         batch_fn = getattr(fn, "process_batch", None)
     heartbeat = (failure_timeout / 3 if failure_timeout is not None else None)

@@ -230,6 +230,9 @@ class DagCoordinator:
     """
 
     streaming = True
+    #: Attached :class:`repro.obs.Tracer` (None = untraced).  The drive
+    #: loop and the sim discover it via ``getattr(core, "tracer", None)``.
+    tracer = None
 
     def __init__(self, dag: StreamingDAG, *,
                  n_workers: int,
@@ -319,6 +322,18 @@ class DagCoordinator:
                 n_workers=n_workers)
         self._cascade()
 
+    # -- tracing -----------------------------------------------------------
+
+    def attach_tracer(self, tracer, shard: int = 0) -> None:
+        """Attach a :class:`repro.obs.Tracer`: DAG admissions and node
+        seal/complete transitions become ``dag``-category instants, and
+        the inner core emits the task-lifecycle events.  Attach before
+        the drive loop starts (the sim attaches after binding its
+        virtual clock, so instants land on simulated time)."""
+        self.tracer = tracer
+        if tracer is not None and hasattr(self.inner, "attach_tracer"):
+            self.inner.attach_tracer(tracer)
+
     # -- namespacing -------------------------------------------------------
 
     @staticmethod
@@ -348,6 +363,9 @@ class DagCoordinator:
             fresh.append(self._namespaced(node, t))
         if fresh:
             self.inner.admit(fresh)
+            if self.tracer is not None:
+                self.tracer.emit(self.tracer.now(), -1.0, "admit", "dag",
+                                 node, extra=len(fresh))
         return fresh
 
     def _is_sealed(self, name: str) -> bool:
@@ -396,6 +414,9 @@ class DagCoordinator:
             for name in self.topo:
                 if name not in self.sealed and self._is_sealed(name):
                     self.sealed.add(name)
+                    if self.tracer is not None:
+                        self.tracer.emit(self.tracer.now(), -1.0,
+                                         "node_sealed", "dag", name)
                     for e in self.out_edges[name]:
                         i = self.dag.edges.index(e)
                         if e.emitter is not None and not self._edge_primed[i]:
@@ -405,6 +426,9 @@ class DagCoordinator:
                 if name in self.sealed and name not in self.complete \
                         and self._is_complete(name):
                     self.complete.add(name)
+                    if self.tracer is not None:
+                        self.tracer.emit(self.tracer.now(), -1.0,
+                                         "node_complete", "dag", name)
                     for e in self.out_edges[name]:
                         i = self.dag.edges.index(e)
                         if self._edge_finished[i]:
@@ -624,7 +648,8 @@ def run_dag(dag: StreamingDAG, *,
             nppn: Optional[int] = None,
             worker_death: Optional[dict[int, float]] = None,
             worker_speed: Optional[Sequence[float]] = None,
-            mp_context: Optional[str] = None) -> DagResult:
+            mp_context: Optional[str] = None,
+            tracer: Optional[Any] = None) -> DagResult:
     """Execute a :class:`StreamingDAG` on one runtime backend.
 
     The knobs mirror :func:`repro.runtime.api.run_job` (same backends,
@@ -632,7 +657,9 @@ def run_dag(dag: StreamingDAG, *,
     ``n_manager_shards`` for the sharded coordinator.  Passing a
     ``checkpoint`` whose ``frontier`` was produced by a previous DAG run
     resumes mid-stream: completed tasks are skipped, outstanding ones
-    re-admitted, emitter state restored.
+    re-admitted, emitter state restored.  ``tracer`` attaches a
+    :class:`repro.obs.Tracer`: task lifecycle plus ``dag``-category
+    admission and node seal/complete instants on every backend.
     """
     from repro.runtime.api import BACKENDS, default_topology
     if backend not in BACKENDS:
@@ -685,13 +712,16 @@ def run_dag(dag: StreamingDAG, *,
             worker_speed=worker_speed,
             core=coord,
             n_manager_shards=n_manager_shards,
-            model_fn=model_fn)
+            model_fn=model_fn,
+            tracer=tracer)
         if raise_on_failure and not coord.done:
             unresolved = [n for n in coord.topo if n not in coord.complete]
             raise RuntimeError(
                 f"sim DAG run ended with incomplete nodes {unresolved} "
                 f"(all workers dead?)")
     else:
+        if tracer is not None:
+            coord.attach_tracer(tracer)
         fns = {n: dag.nodes[n].fn for n in coord.topo}
         router = _DagRouter(fns)
         heartbeat = (failure_timeout / 3 if failure_timeout is not None
@@ -775,7 +805,8 @@ def run_service(dag: StreamingDAG, *,
                 organize_seed: int = 0,
                 raise_on_failure: bool = True,
                 worker_fail_after: Optional[dict[str, int]] = None,
-                mp_context: Optional[str] = None) -> DagResult:
+                mp_context: Optional[str] = None,
+                tracer: Optional[Any] = None) -> DagResult:
     """Run a :class:`StreamingDAG` with *open* nodes as a live service.
 
     Unlike :func:`run_dag`, the task set is not known up front: the DAG
@@ -802,6 +833,8 @@ def run_service(dag: StreamingDAG, *,
         organization=organization, tasks_per_message=tasks_per_message,
         policy=policy, organize_seed=organize_seed,
         checkpoint=checkpoint)
+    if tracer is not None:
+        coord.attach_tracer(tracer)
     router = _DagRouter({n: dag.nodes[n].fn for n in coord.topo})
     heartbeat = (failure_timeout / 3 if failure_timeout is not None
                  else None)

@@ -200,6 +200,25 @@ class SchedulerCore:
         self.messages_sent = 0
         self.reassigned = 0
         self.batches: list[tuple[str, ...]] = []
+        #: Optional :class:`repro.obs.Tracer`; every lifecycle decision
+        #: below emits an instant when attached (``attach_tracer``).
+        self.tracer = None
+        self._trace_shard = 0
+
+    def attach_tracer(self, tracer, shard: int = 0) -> None:
+        """Attach an observability tracer; emits a ``queued`` instant for
+        every task already pending, so the trace's lifecycle ledger is
+        complete from t0.  The backend binds the tracer's clock BEFORE
+        attaching (the sim rebinds to its virtual clock)."""
+        self.tracer = tracer
+        self._trace_shard = shard
+        if tracer is not None:
+            ts = tracer.clock()
+            raw, n = tracer.raw, 0
+            for t in self.pending:
+                raw((ts, -1.0, "queued", "task", shard, t.task_id, None))
+                n += 1
+            tracer.emitted += n
 
     # -- queries -----------------------------------------------------------
 
@@ -241,6 +260,14 @@ class SchedulerCore:
         self.in_flight.setdefault(worker, set()).update(ids)
         self.messages_sent += 1
         self.batches.append(ids)
+        tr = self.tracer
+        if tr is not None:
+            ts = tr.clock()
+            shard = self._trace_shard
+            raw = tr.raw
+            for tid in ids:
+                raw((ts, -1.0, "assigned", "task", worker, tid, shard))
+            tr.emitted += len(ids)
         return tuple(batch)
 
     def on_done(self, worker: Any, task_ids: Sequence[str],
@@ -259,6 +286,13 @@ class SchedulerCore:
                 continue
             self.completed.add(tid)
             fresh.append(tid)
+        tr = self.tracer
+        if tr is not None and fresh:
+            ts = tr.clock()
+            raw = tr.raw
+            for tid in fresh:
+                raw((ts, -1.0, "done", "task", worker, tid, None))
+            tr.emitted += len(fresh)
         return fresh
 
     def admit(self, tasks: Sequence[Task]) -> list[Task]:
@@ -275,6 +309,15 @@ class SchedulerCore:
             fresh.append(t)
         if fresh:
             self.policy.admit(fresh)
+            tr = self.tracer
+            if tr is not None:
+                ts = tr.clock()
+                shard = self._trace_shard
+                raw = tr.raw
+                for t in fresh:
+                    raw((ts, -1.0, "queued", "task", shard, t.task_id,
+                         None))
+                tr.emitted += len(fresh)
         return fresh
 
     def surrender(self, k: int) -> list[Task]:
@@ -295,6 +338,13 @@ class SchedulerCore:
             if fl is not None:
                 fl.discard(tid)
             self.failures[tid] = error or "unknown"
+        tr = self.tracer
+        if tr is not None and task_ids:
+            ts = tr.clock()
+            raw = tr.raw
+            for tid in task_ids:
+                raw((ts, -1.0, "failed", "task", worker, tid, error))
+            tr.emitted += len(task_ids)
 
     def mark_dead(self, worker: Any) -> list[Task]:
         """Declare a worker dead and re-queue its in-flight tasks,
@@ -309,6 +359,15 @@ class SchedulerCore:
         requeue.sort(key=lambda t: (-t.size_bytes, t.task_id))
         self.policy.requeue(requeue)
         self.reassigned += len(requeue)
+        tr = self.tracer
+        if tr is not None and requeue:
+            ts = tr.clock()
+            shard = self._trace_shard
+            raw = tr.raw
+            for t in requeue:
+                raw((ts, -1.0, "requeued", "task", worker, t.task_id,
+                     shard))
+            tr.emitted += len(requeue)
         return requeue
 
     # -- checkpoint --------------------------------------------------------
@@ -416,6 +475,15 @@ class ShardedCore:
         # assigned round-robin on first appearance (sticky after).
         self._key_shard: dict[str, int] = {}
         self._next_key_shard = 0
+        self.tracer = None
+
+    def attach_tracer(self, tracer) -> None:
+        """Attach a tracer to every member core, tagged with its shard
+        index (the ``assigned`` instants' shard field is what the
+        per-shard dispatch-rate timelines bin)."""
+        self.tracer = tracer
+        for i, c in enumerate(self.cores):
+            c.attach_tracer(tracer, shard=i)
 
     # -- routing -----------------------------------------------------------
 
@@ -562,6 +630,11 @@ def drive(core: SchedulerCore, transport, *,
     worker_ids = list(transport.worker_ids)
     stats = {wid: WorkerStats(wid) for wid in worker_ids}
     results: dict[str, Any] = {}
+    tracer = getattr(core, "tracer", None)
+    # Per-worker end of the last emitted exec span: live exec spans are
+    # reconstructed from DONE-reported busy windows and clamped to never
+    # overlap within a worker's timeline.
+    exec_end: dict[Any, float] = {}
     transport.start()
     try:
         t_start = time.monotonic()
@@ -591,8 +664,9 @@ def drive(core: SchedulerCore, transport, *,
                 last_seen[msg.sender] = now
                 heard.add(msg.sender)
                 if msg.kind is MessageKind.DONE:
-                    fresh = set(core.on_done(msg.sender, msg.task_ids,
-                                             msg.results))
+                    fresh_ids = core.on_done(msg.sender, msg.task_ids,
+                                             msg.results)
+                    fresh = set(fresh_ids)
                     for tid, res in zip(msg.task_ids, msg.results):
                         if tid in fresh:
                             results[tid] = res
@@ -607,6 +681,21 @@ def drive(core: SchedulerCore, transport, *,
                     if s.first_task_at is None:
                         s.first_task_at = now - msg.busy_seconds
                     s.last_done_at = now
+                    if tracer is not None and fresh_ids:
+                        # The batch's reported busy window, split evenly
+                        # across its tasks (the worker does not report
+                        # per-task boundaries), clamped so spans never
+                        # overlap within this worker's row.
+                        start = max(now - msg.busy_seconds,
+                                    exec_end.get(msg.sender, t_start))
+                        start = min(start, now)
+                        step = (now - start) / len(fresh_ids)
+                        raw = tracer.raw
+                        for i, tid in enumerate(fresh_ids):
+                            raw((start + i * step, step, "exec", "task",
+                                 msg.sender, tid, None))
+                        tracer.emitted += len(fresh_ids)
+                        exec_end[msg.sender] = now
                     if msg.sender not in core.dead:
                         send(msg.sender)
                 elif msg.kind is MessageKind.FAILED:

@@ -166,21 +166,39 @@ class RunResult:
             [s.wait_seconds for s in self.worker_stats.values()
              if s.busy_seconds > 0], qs)
 
-    def worker_breakdown(self) -> dict[str, dict[str, float]]:
+    def worker_breakdown(self, max_workers: Optional[int] = 64
+                         ) -> dict[str, dict[str, float]]:
         """Per-worker busy/idle/wait attribution, keyed by worker id.
 
         ``busy_s`` includes ``wait_s`` (a worker stalled on its feed is
         occupied, not idle); ``idle_s`` is time between DONEs not
         covered by reported busy time — i.e. scheduling/poll latency.
+
+        ``max_workers`` bounds the table so a 2047-worker sim sweep
+        cannot bloat a BENCH record: the busiest ``max_workers`` rows
+        (ties broken by worker id) are kept and the rest are *counted*
+        under a ``"_dropped_workers"`` entry rather than silently
+        truncated.  ``None`` disables the cap.  The ``"_"`` prefix
+        cannot collide with a real worker key (ids stringify to
+        ``"w0"``/``"3"``-style names).
         """
-        return {
+        stats = list(self.worker_stats.values())
+        dropped = 0
+        if max_workers is not None and len(stats) > max_workers:
+            stats.sort(key=lambda s: (-s.busy_seconds, str(s.worker_id)))
+            dropped = len(stats) - max_workers
+            stats = stats[:max_workers]
+        out: dict[str, dict[str, float]] = {
             str(s.worker_id): {
                 "tasks": s.tasks_completed,
                 "busy_s": s.busy_seconds,
                 "idle_s": s.idle_seconds,
                 "wait_s": s.wait_seconds,
             }
-            for s in self.worker_stats.values()}
+            for s in stats}
+        if dropped:
+            out["_dropped_workers"] = dropped
+        return out
 
     @property
     def dispatch_rate_msgs_per_s(self) -> float:
@@ -234,9 +252,9 @@ class RunResult:
                 "shard_dispatch_rates_msgs_per_s":
                     self.shard_dispatch_rates_msgs_per_s}
                if self.shard_messages else {}),
-            # Full per-worker attribution only at benchmarkable worker
-            # counts — a 2047-worker sim sweep would bloat every BENCH
-            # record; the quantiles above always summarize the fleet.
+            # Per-worker attribution capped at the busiest 64 rows —
+            # beyond that the table carries a "_dropped_workers" count
+            # and the quantiles above summarize the fleet.
             **({"worker_breakdown": self.worker_breakdown()}
-               if 0 < len(self.worker_stats) <= 64 else {}),
+               if self.worker_stats else {}),
         }

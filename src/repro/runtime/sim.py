@@ -62,7 +62,8 @@ class _Sim:
                  worker_speed: Optional[Sequence[float]] = None,
                  speculative: bool = False,
                  n_manager_shards: int = 1,
-                 model_fn=None):
+                 model_fn=None,
+                 tracer=None):
         self.tasks = list(tasks)
         self.n_workers = n_workers
         self.nodes = max(nodes, 1)
@@ -126,6 +127,17 @@ class _Sim:
         self.completed = 0
         self.failed_tasks: set[int] = set()
         self._static = False
+
+        # Observability: bind the tracer to the VIRTUAL clock before
+        # attaching it to the core, so the core's queued-at-attach
+        # instants land at sim t=0 and every later lifecycle instant
+        # carries simulated time — the same API the live backends emit
+        # wall-clock events through.
+        self.tracer = tracer
+        if tracer is not None:
+            tracer.set_clock(lambda: self.now)
+            if core is not None and hasattr(core, "attach_tracer"):
+                core.attach_tracer(tracer)
 
     # -- helpers -------------------------------------------------------------
 
@@ -208,6 +220,9 @@ class _Sim:
         self.dup_count[best] = 2
         self.speculated += 1
         self.extra_messages += 1
+        if self.tracer is not None:
+            self.tracer.emit(self.now, -1.0, "speculated", "sched",
+                             worker, self.tasks[best].task_id, None)
         self._send_indices(worker, (best,))
 
     # -- worker task lifecycle -------------------------------------------------
@@ -254,6 +269,14 @@ class _Sim:
                 t.task_id, worker, self.task_start[worker], self.now,
                 t.size_bytes))
             self.completed += 1
+            tr = self.tracer
+            if tr is not None:
+                # First completion only, so traces keep exactly one exec
+                # span per task even under speculative backup copies.
+                tr.raw((self.task_start[worker],
+                        self.now - self.task_start[worker],
+                        "exec", "task", worker, t.task_id, t.size_bytes))
+                tr.emitted += 1
         self.cur_task[worker] = None
         self.batch_pos[worker] += 1
         if self.batch_pos[worker] < len(self.inflight[worker]):
@@ -271,6 +294,9 @@ class _Sim:
         if self.dead[worker]:
             return
         self.dead[worker] = True
+        if self.tracer is not None:
+            self.tracer.emit(self.now, -1.0, "worker_dead", "sched",
+                             worker, None, None)
         # Release the processor-sharing I/O slot if the worker died mid-I/O
         # (the stale heap entry is skipped when popped); without this the
         # shared rate rho(n_io) stays depressed by a phantom task.
@@ -494,7 +520,8 @@ def simulate_self_scheduling(
         policy: object = None,
         core: Optional[SchedulerCore] = None,
         n_manager_shards: int = 1,
-        model_fn=None) -> RunResult:
+        model_fn=None,
+        tracer=None) -> RunResult:
     """Simulate a triples-mode self-scheduled job (the paper's §II.D).
 
     ``policy`` selects the scheduling policy (name or instance, see
@@ -507,6 +534,10 @@ def simulate_self_scheduling(
     :class:`~repro.runtime.protocol.ShardedCore` supplied via ``core``
     so decisions and clocks shard identically.  ``model_fn`` maps a task
     to its phase's cost model (streaming DAG runs); None = ``model``.
+
+    ``tracer`` threads a :class:`repro.obs.Tracer` through the run: its
+    clock is rebound to the sim's virtual time, so simulated traces are
+    bit-reproducible and render through the same exporters as live ones.
     """
     if core is None:
         from repro.runtime.policies import get_policy, model_task_cost
@@ -522,7 +553,8 @@ def simulate_self_scheduling(
                poll_interval, worker_death, failure_timeout, core=core,
                legacy_launch_penalty=legacy_launch_penalty,
                worker_speed=worker_speed, speculative=speculative,
-               n_manager_shards=n_manager_shards, model_fn=model_fn)
+               n_manager_shards=n_manager_shards, model_fn=model_fn,
+               tracer=tracer)
     return sim.run_self_scheduled()
 
 

@@ -179,13 +179,19 @@ class IngestService:
                  target_points: int = DEFAULT_TARGET_POINTS,
                  compression: str = "zlib",
                  hooks: Optional[dict[str, Callable[..., Any]]] = None,
-                 clock=None):
+                 clock=None,
+                 tracer=None):
         self.src_root = src_root
         self.store_root = store_root
         self.target_points = target_points
         self.compression = compression
         self.hooks = dict(hooks or {})
         self._clock = clock if clock is not None else time.monotonic
+        #: Optional :class:`repro.obs.Tracer`: lifecycle points become
+        #: ``serving``-category events on the ``ingest`` lane — scan/cut/
+        #: seal instants, build and commit spans (timed on the tracer's
+        #: clock, one timeline with the scheduler's task events).
+        self.tracer = tracer
         #: Track ids already committed to the manifest (never re-ingested).
         self._known: set[str] = set()
         #: Accepted-but-uncut sources, in acceptance order.
@@ -226,6 +232,11 @@ class IngestService:
         fn = self.hooks.get(name)
         if fn is not None:
             fn(**info)
+
+    def _instant(self, name: str, extra=None) -> None:
+        tr = self.tracer
+        if tr is not None:
+            tr.emit(tr.now(), -1.0, name, "serving", "ingest", extra=extra)
 
     # -- snapshot maintenance ----------------------------------------------
 
@@ -297,6 +308,8 @@ class IngestService:
                if s[0] not in self._known and s[0] not in pending_ids
                and s[0] not in self._planned]
         self._hook("scan", new=[s[0] for s in new])
+        if new:
+            self._instant("ingest_scan", extra=len(new))
         return new
 
     def accept(self, sources: Sequence[tuple[str, str, int]]
@@ -327,6 +340,7 @@ class IngestService:
         self._planned |= {t for t, _, _ in self._pending}
         self._pending, self._pending_points = [], 0
         self._hook("cut", plan=plan)
+        self._instant("ingest_cut", extra=plan.shard_id)
         return plan
 
     def build_and_commit(self, plan: ShardPlan) -> None:
@@ -334,8 +348,13 @@ class IngestService:
         inline, single-threaded execution path; the DAG path builds on
         workers and funnels results through :meth:`commit_result`)."""
         self._hook("pre_build", plan=plan)
+        tr = self.tracer
+        tt0 = tr.now() if tr is not None else 0.0
         rec, tracks = build_shard(self.store_root, plan,
                                   compression=self.compression)
+        if tr is not None:
+            tr.emit(tt0, tr.now() - tt0, "ingest_build", "serving",
+                    "ingest", extra=rec.shard_id)
         self._hook("post_build", shard_id=rec.shard_id)
         self.commit_result({"shard": rec.to_doc(),
                             "tracks": [t.to_doc() for t in tracks]})
@@ -345,9 +364,14 @@ class IngestService:
         and fold it into the retained snapshot."""
         shard_id = result["shard"]["shard_id"]
         self._hook("pre_commit", shard_id=shard_id)
+        tr = self.tracer
+        tt0 = tr.now() if tr is not None else 0.0
         rec = commit_shard(self.store_root, result,
                            compression=self.compression,
                            target_points=self.target_points)
+        if tr is not None:
+            tr.emit(tt0, tr.now() - tt0, "ingest_commit", "serving",
+                    "ingest", extra=shard_id)
         ids = {d["track_id"] for d in result["tracks"]}
         self._known |= ids
         self._planned -= ids
@@ -383,6 +407,7 @@ class IngestService:
                   else {"source_root": os.path.abspath(self.src_root)}))
         self.sealed = True
         self._hook("seal", generation=manifest.generation)
+        self._instant("ingest_seal", extra=manifest.generation)
         return manifest
 
     # -- fleet execution over the streaming DAG ----------------------------
@@ -427,6 +452,7 @@ class IngestService:
                 return not stop_when()
             return True
 
+        run_kw.setdefault("tracer", self.tracer)
         result = run_service(dag, tick=tick, backend=backend,
                              n_workers=n_workers,
                              poll_interval=poll_interval, **run_kw)

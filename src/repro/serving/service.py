@@ -119,7 +119,8 @@ class StoreFrontEnd:
     """Two slot classes over one live store (see module docstring)."""
 
     def __init__(self, service: IngestService, *,
-                 tiny_slots: int = 2, bulk_slots: int = 2):
+                 tiny_slots: int = 2, bulk_slots: int = 2,
+                 tracer=None):
         if tiny_slots < 1 or bulk_slots < 1:
             raise ValueError("need at least one slot per class")
         self.service = service
@@ -128,6 +129,12 @@ class StoreFrontEnd:
         self._bulk_reads: dict[int, _BulkRead] = {}
         self.stats = {"admitted": 0, "rejected": 0, "completed": 0,
                       "shard_decodes": 0}
+        #: Optional :class:`repro.obs.Tracer` (defaults to the ingest
+        #: service's): admissions/rejections become ``serving``-category
+        #: instants on the ``frontend`` lane, and each completed query
+        #: becomes one admit→done span.
+        self.tracer = tracer if tracer is not None else service.tracer
+        self._admit_ts: dict[int, float] = {}
 
     # -- admission ---------------------------------------------------------
 
@@ -141,8 +148,12 @@ class StoreFrontEnd:
         state."""
         slots = self._slots(query.kind)
         free = [i for i, q in enumerate(slots) if q is None]
+        tr = self.tracer
         if not free:
             self.stats["rejected"] += 1
+            if tr is not None:
+                tr.emit(tr.now(), -1.0, "query_reject", "serving",
+                        "frontend", f"{query.kind}:{query.query_id}")
             return False
         if query.kind == "snapshot":
             # Pin the committed-manifest generation NOW: everything this
@@ -155,10 +166,15 @@ class StoreFrontEnd:
             query.generation = manifest.generation
             self._bulk_reads[query.query_id] = _BulkRead(
                 TrackStore(self.service.store_root, manifest=manifest,
-                           prefetch=0),
+                           prefetch=0, tracer=tr),
                 digest_only=bool(query.params.get("digest")))
         slots[free[0]] = query
         self.stats["admitted"] += 1
+        if tr is not None:
+            self._admit_ts[query.query_id] = tr.now()
+            tr.emit(self._admit_ts[query.query_id], -1.0, "query_admit",
+                    "serving", "frontend",
+                    f"{query.kind}:{query.query_id}")
         return True
 
     # -- stepping ----------------------------------------------------------
@@ -193,6 +209,13 @@ class StoreFrontEnd:
                 del self._bulk_reads[q.query_id]
                 finished.append(q)
         self.stats["completed"] += len(finished)
+        tr = self.tracer
+        if tr is not None:
+            now = tr.now()
+            for q in finished:
+                t0 = self._admit_ts.pop(q.query_id, now)
+                tr.emit(t0, now - t0, "query", "serving", "frontend",
+                        f"{q.kind}:{q.query_id}")
         return finished
 
     @property

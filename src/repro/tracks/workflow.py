@@ -394,7 +394,8 @@ class TrackWorkflow:
                  screen_h_m: float = 926.0,
                  screen_v_m: float = 152.4,
                  screen_cell_deg: float = 0.25,
-                 seed: int = 0):
+                 seed: int = 0,
+                 tracer=None):
         if exec_backend not in ("threads", "processes"):
             raise ValueError(
                 "workflow phases do real work; exec_backend must be "
@@ -444,6 +445,10 @@ class TrackWorkflow:
         self.policy = policy
         self.checkpoint_interval_s = checkpoint_interval_s
         self.seed = seed
+        #: Optional :class:`repro.obs.Tracer`, threaded through every
+        #: phase run (barrier and dag): one trace covers the whole
+        #: workflow, with task ids namespaced per phase.
+        self.tracer = tracer
         self.registry = synthetic_registry(n=2000, seed=seed + 13)
         self.reports: list[PhaseReport] = []
 
@@ -501,7 +506,8 @@ class TrackWorkflow:
             poll_interval=self.poll_interval,
             checkpoint=ck,
             on_checkpoint=save_mid_phase,
-            checkpoint_interval_s=self.checkpoint_interval_s)
+            checkpoint_interval_s=self.checkpoint_interval_s,
+            tracer=self.tracer)
         state["phases_done"].append(phase)
         state["manager"] = None
         state["manager_phase"] = None
@@ -756,7 +762,8 @@ class TrackWorkflow:
             poll_interval=self.poll_interval,
             checkpoint=ck,
             on_checkpoint=save_mid_stream,
-            checkpoint_interval_s=self.checkpoint_interval_s)
+            checkpoint_interval_s=self.checkpoint_interval_s,
+            tracer=self.tracer)
         if run_store:
             if store_tasks is not None:
                 # No process edge to stream commits through (a prior run
@@ -869,10 +876,12 @@ class TrackWorkflow:
 def run_serve(root: str, *, n_files: int = 12, obs_per_file: int = 64,
               seed: int = 0, n_workers: int = 4,
               target_points: int = 2048, backend: str = "threads",
-              feed_batch: int = 3) -> dict:
+              feed_batch: int = 3, tracer=None) -> dict:
     """Continuous-ingest serving demo: live feed -> service DAG ->
     queries -> sealed store.  Returns a JSON-able summary (also the CI
-    smoke surface)."""
+    smoke surface).  ``tracer`` captures the full serving telemetry:
+    ingest lifecycle, DAG admissions, build/commit spans, and front-end
+    query spans on one timeline."""
     from repro.serving import (
         FeedSpec, IngestService, Query, StoreFrontEnd, SyntheticFeed)
 
@@ -881,7 +890,8 @@ def run_serve(root: str, *, n_files: int = 12, obs_per_file: int = 64,
     os.makedirs(feed_dir, exist_ok=True)
     feed = SyntheticFeed(feed_dir, FeedSpec(
         n_files=n_files, obs_per_file=obs_per_file, seed=seed))
-    svc = IngestService(feed_dir, store_dir, target_points=target_points)
+    svc = IngestService(feed_dir, store_dir, target_points=target_points,
+                        tracer=tracer)
 
     def stop_when() -> bool:
         if not feed.exhausted:
@@ -966,14 +976,35 @@ def main() -> None:
                     help="continuous-ingest mode: tail a synthetic live "
                          "feed into the store via the service DAG and "
                          "answer queries against the growing store")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="write observability artifacts to DIR: "
+                         "trace.json (Chrome/Perfetto trace of every "
+                         "phase, store read, and serving event) and "
+                         "TRACE_summary.json (canonical repro.obs/v1 "
+                         "summary; feed either file to "
+                         "`python -m repro.obs.report`)")
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
+
+    def _write_trace(label: str) -> None:
+        if tracer is None:
+            return
+        from repro.obs import write_trace_files
+        paths = write_trace_files(tracer, args.trace, label=label)
+        print(f"trace: {len(tracer)} events -> {paths['trace']}, "
+              f"summary -> {paths['summary']}")
 
     if args.serve:
         summary = run_serve(args.root, n_files=args.files,
                             n_workers=args.workers,
                             backend=args.backend,
                             target_points=(args.store_target_points
-                                           or 2048))
+                                           or 2048),
+                            tracer=tracer)
         print(f"serve: ingested {summary['files_ingested']} files into "
               f"{summary['shards_committed']} shards "
               f"({summary['points_ingested']} points, generation "
@@ -983,6 +1014,7 @@ def main() -> None:
         print(f"serve: nearest(39,-98) -> {summary['nearest_track']}, "
               f"snapshot digest {summary['snapshot']['digest'][:16]}... "
               f"({summary['snapshot']['n_tracks']} tracks)")
+        _write_trace("serve")
         return
 
     triple = None
@@ -1001,7 +1033,8 @@ def main() -> None:
                        screen=args.screen,
                        screen_h_m=args.screen_h_m,
                        screen_v_m=args.screen_v_m,
-                       screen_cell_deg=args.screen_cell_deg)
+                       screen_cell_deg=args.screen_cell_deg,
+                       tracer=tracer)
     if not os.path.isdir(wf.raw_dir):
         n = wf.generate_raw(n_files=args.files, scale=args.scale)
         print(f"generated {n} raw files under {wf.raw_dir}")
@@ -1014,6 +1047,7 @@ def main() -> None:
             n = len(json.load(f)["candidates"])
         print(f"screen    : {n} candidate encounters -> "
               f"{wf.candidates_path}")
+    _write_trace(args.pipeline)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,125 @@
+"""Tests for the observability benchmark matrix + committed reference.
+
+The deterministic cells (determinism, straggler ranking) run at their
+real quick-tier size and must PASS; the overhead cell's executor is
+exercised on its virtual-schedule invariant (``makespan_identical``)
+without gating the wall-clock ratio here — pytest runs under arbitrary
+load, so the ≤1.05 wall-clock gate belongs to the dedicated CI
+obs-smoke job (and to ``benchmarks/obs_bench.py --quick`` locally).
+The committed reference summary
+(``benchmarks/refs/TRACE_heavy_tail_quick.json``) is regenerated
+in-process and must match byte-for-byte — the test that keeps the CI
+diff honest.
+"""
+
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.bench import obs as obsbench
+from repro.bench.compare import compare_docs, default_metric
+from repro.bench.compare import main as compare_main
+from repro.bench.schema import (
+    OBS_BENCH_SCHEMA, canonical_bytes, validate_obs, validate_obs_summary)
+
+_REF = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                    "refs", "TRACE_heavy_tail_quick.json")
+
+#: Shrunk spec for executor-level tests (the real quick cells run the
+#: full 12k-task workload; these keep unit runtime low).
+_TINY = dataclasses.replace(obsbench._BASE, dataset_limit=1500,
+                            n_workers=32, repeats=1)
+
+
+def test_quick_tier_is_the_acceptance_cells():
+    names = {sc.name for sc in obsbench.obs_scenarios()
+             if sc.tier == "quick"}
+    assert names == {"obs_overhead_heavy_tail_w1024",
+                     "obs_determinism_heavy_tail",
+                     "obs_straggler_ranking"}
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        obsbench.ObsSpec(kind="nope")
+    with pytest.raises(ValueError):
+        obsbench.ObsSpec(backend="threads")
+    with pytest.raises(ValueError):
+        obsbench.ObsSpec(fault_profile="nope")
+    with pytest.raises(ValueError):
+        obsbench.ObsSpec(repeats=0)
+
+
+def test_overhead_executor_schedule_invariant():
+    out = obsbench._execute_overhead(
+        dataclasses.replace(_TINY, kind="overhead"))
+    m = out["metrics"]
+    # Tracing must not change a single virtual decision, at any scale.
+    assert m["makespan_identical"] == 1
+    assert m["tasks_completed"] == 1500
+    assert m["n_events"] > 4 * 1500 * 0.9
+    assert m["events_dropped"] == 0
+    assert out["measured"]["overhead_ratio"] > 0.0
+
+
+def test_determinism_and_straggler_cells_pass_at_quick_size():
+    doc = obsbench.run_obs_campaign(
+        quick=True, filters=["determinism", "straggler"])
+    assert validate_obs(doc) == []
+    assert doc["summary"]["fail"] == 0 and doc["summary"]["error"] == 0
+    by_name = {r["name"]: r for r in doc["scenarios"]}
+    det = by_name["obs_determinism_heavy_tail"]
+    assert det["metrics"]["summary_identical"] == 1
+    assert det["metrics"]["n_events_identical"] == 1
+    strag = by_name["obs_straggler_ranking"]
+    assert strag["metrics"]["straggler_rank_correct"] == 1
+    assert strag["metrics"]["bottom_k_hits"] \
+        == strag["metrics"]["n_slow_workers"] > 0
+    assert strag["metrics"]["straggler_count"] >= 1
+
+
+def test_straggler_executor_requires_straggler_profile():
+    rec = obsbench.run_obs_scenario(obsbench.ObsScenario(
+        name="bad", group="obs_straggler",
+        run=dataclasses.replace(_TINY, kind="straggler",
+                                fault_profile="none")))
+    assert rec["status"] == "error"
+    assert "straggler" in rec["error"]
+
+
+def test_campaign_doc_is_deterministic_modulo_wall_clock():
+    kw = dict(quick=True, filters=["determinism"])
+    a = obsbench.run_obs_campaign(**kw)
+    b = obsbench.run_obs_campaign(**kw)
+    assert canonical_bytes(a) == canonical_bytes(b)
+
+
+def test_committed_reference_summary_is_current():
+    """benchmarks/refs/TRACE_heavy_tail_quick.json == a fresh run."""
+    _tracer, summary = obsbench.reference_run()
+    assert validate_obs_summary(summary) == []
+    with open(_REF, "rb") as f:
+        assert f.read() == canonical_bytes(summary), \
+            "committed reference trace summary is stale — regenerate " \
+            "with: python benchmarks/obs_bench.py --quick " \
+            "--summary-out benchmarks/refs/TRACE_heavy_tail_quick.json"
+
+
+def test_compare_dispatch_for_obs_schemas(tmp_path, capsys):
+    with open(_REF) as f:
+        ref = json.load(f)
+    assert default_metric(ref) == "critical_path_s"
+    assert default_metric({"schema": OBS_BENCH_SCHEMA}) \
+        == "makespan_seconds"
+    rows, regressions = compare_docs(ref, ref)
+    assert [r["name"] for r in rows] == ["heavy_tail_quick"]
+    assert not regressions
+    # The CLI path CI uses: ref vs fresh copy -> exit 0, info rows shown.
+    dup = tmp_path / "fresh.json"
+    dup.write_bytes(canonical_bytes(ref))
+    assert compare_main([_REF, str(dup), "--threshold", "0.10"]) == 0
+    out = capsys.readouterr().out
+    assert "exec_p99_over_p50" in out
+    assert "no regressions" in out

@@ -290,12 +290,25 @@ def test_sim_fills_wait_with_io_phase_seconds():
         assert s.wait_seconds <= s.busy_seconds + 1e-9
 
 
-def test_to_record_omits_breakdown_for_big_fleets():
+def test_to_record_caps_breakdown_for_big_fleets():
     tasks = _tasks(80)
     r = run_job(tasks, None, backend="sim", n_workers=65)
-    assert "worker_breakdown" not in r.to_record()
+    bd = r.to_record()["worker_breakdown"]
+    assert bd["_dropped_workers"] == 1
+    assert len(bd) == 65          # 64 busiest rows + the dropped count
+    # The cap keeps the busiest workers: every kept row out-ranks the
+    # dropped one (ties broken by id, so equality is allowed).
+    kept = {k for k in bd if not k.startswith("_")}
+    dropped_busy = min(s.busy_seconds for s in r.worker_stats.values()
+                       if str(s.worker_id) not in kept)
+    assert all(bd[k]["busy_s"] >= dropped_busy for k in kept)
     r = run_job(tasks, None, backend="sim", n_workers=64)
-    assert "worker_breakdown" in r.to_record()
+    bd = r.to_record()["worker_breakdown"]
+    assert "_dropped_workers" not in bd and len(bd) == 64
+    # max_workers is a documented knob: None lifts the cap entirely.
+    full = r.worker_breakdown(max_workers=None)
+    assert len(full) == 64 and "_dropped_workers" not in full
+    assert len(r.worker_breakdown(max_workers=8)) == 9
 
 
 # ---------------------------------------------------------------------------
