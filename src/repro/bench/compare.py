@@ -15,7 +15,10 @@ BENCH kind the repo emits:
     dispatch throughput (``dispatch_rate_msgs_per_s``) printed
     alongside, so a policy that holds its makespan by burning
     worker-time imbalance — or a change that quietly serializes the
-    manager — is still visible in the diff;
+    manager — is still visible in the diff; speculation accounting
+    (``speculated``/``extra_messages``/``wasted_duplicate_s``) rides
+    along the same way, so a policy change that wins makespan by
+    burning duplicate executions cannot hide it;
   * ``repro.bench.serving/v1`` — ``ingest_lag_max_points`` (worst
     accepted-but-uncommitted backlog during continuous ingest; only
     the deterministic inline-mode cells publish it under ``metrics``),
@@ -80,7 +83,9 @@ DEFAULT_METRICS = {
 #: but never gate (only the schema's DEFAULT metric regresses a run).
 INFO_METRICS = {
     "repro.bench.scheduling/v1": ("busy_p50_s", "busy_p90_s",
-                                  "dispatch_rate_msgs_per_s"),
+                                  "dispatch_rate_msgs_per_s",
+                                  "speculated", "extra_messages",
+                                  "wasted_duplicate_s"),
     "repro.bench.serving/v1": ("shards_committed", "points_ingested"),
     "repro.bench.encounters/v1": ("cells", "candidates",
                                   "max_cell_occupancy"),

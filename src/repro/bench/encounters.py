@@ -237,7 +237,7 @@ def _execute_policy_sim(spec: EncounterSpec) -> dict:
 
     tasks = get_manifest(spec.dataset)
     model = PHASES[spec.phase]
-    worker_death, worker_speed, _ = FAULT_PROFILES[
+    worker_death, worker_speed, _, _ = FAULT_PROFILES[
         spec.fault_profile].materialize(spec.n_workers, spec.seed)
     result = run_job(
         tasks, None, backend="sim", n_workers=spec.n_workers,

@@ -68,8 +68,8 @@ def execute_spec(spec: RunSpec, *,
         model = dataclasses.replace(
             model, cpu_rate=model.cpu_rate * spec.cpu_rate_scale)
     profile = FAULT_PROFILES[spec.fault_profile]
-    worker_death, worker_speed, worker_fail_after = profile.materialize(
-        spec.n_workers, spec.seed)
+    (worker_death, worker_speed, worker_fail_after,
+     worker_slow_factor) = profile.materialize(spec.n_workers, spec.seed)
 
     if spec.mode == "static":
         from repro.runtime.sim import simulate_static
@@ -93,16 +93,23 @@ def execute_spec(spec: RunSpec, *,
     if spec.backend == "sim":
         kwargs.update(cost_model=model, worker_death=worker_death,
                       worker_speed=worker_speed,
-                      speculative=spec.speculative,
                       legacy_launch_penalty=spec.legacy_launch_penalty)
         fn = None
         poll = (spec.poll_interval if spec.poll_interval is not None
                 else None)
     else:
-        kwargs.update(worker_fail_after=worker_fail_after)
+        kwargs.update(worker_fail_after=worker_fail_after,
+                      worker_slow_factor=worker_slow_factor)
         fn = _smoke_fn
         poll = (spec.poll_interval if spec.poll_interval is not None
                 else LIVE_POLL_DEFAULT)
+    # Speculation / speed feedback / elastic fleets are policy concerns
+    # shared by every backend (run_job validates elastic's backend
+    # restrictions at declaration level via RunSpec.__post_init__).
+    kwargs.update(speculative=spec.speculative,
+                  speculation_max_copies=spec.speculation_max_copies,
+                  speed_feedback=spec.speed_feedback,
+                  elastic=spec.elastic)
     if poll is not None:
         kwargs["poll_interval"] = poll
     if spec.failure_timeout is not None:

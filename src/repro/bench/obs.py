@@ -124,7 +124,7 @@ def _run_once(spec: ObsSpec, tracer: Optional[Tracer]):
 
     tasks = get_manifest(spec.dataset, limit=spec.dataset_limit)
     model = PHASES[spec.phase]
-    worker_death, worker_speed, _ = FAULT_PROFILES[
+    worker_death, worker_speed, _, _ = FAULT_PROFILES[
         spec.fault_profile].materialize(spec.n_workers, spec.seed)
     return run_job(
         tasks, None, backend="sim", n_workers=spec.n_workers,
@@ -194,7 +194,7 @@ def _execute_determinism(spec: ObsSpec) -> dict:
 
 def _execute_straggler(spec: ObsSpec) -> dict:
     """Does the trace summary's speed ranking find the slowed workers?"""
-    _, worker_speed, _ = FAULT_PROFILES[spec.fault_profile].materialize(
+    _, worker_speed, _, _ = FAULT_PROFILES[spec.fault_profile].materialize(
         spec.n_workers, spec.seed)
     if not worker_speed:
         raise ValueError("straggler cells need a fault profile with "

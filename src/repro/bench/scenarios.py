@@ -39,7 +39,10 @@ class FaultProfile:
     Sim backends: ``death_frac`` of the workers die at staggered sim times
     (``death_at_s + i * death_stride_s``); ``straggler_frac`` run at
     ``straggler_speed`` x nominal.  Live backends: the first worker exits
-    without a DONE after ``live_fail_after`` completed tasks.
+    without a DONE after ``live_fail_after`` completed tasks, and
+    ``live_slow_factor`` makes the first worker run that many times
+    slower (the threads mirror of the sim's straggler injection —
+    see ``worker_slow_factor`` in :func:`repro.runtime.run_job`).
     """
 
     death_frac: float = 0.0
@@ -48,14 +51,17 @@ class FaultProfile:
     straggler_frac: float = 0.0
     straggler_speed: float = 0.25
     live_fail_after: Optional[int] = None
+    live_slow_factor: Optional[float] = None
 
     @property
     def is_none(self) -> bool:
         return (self.death_frac == 0.0 and self.straggler_frac == 0.0
-                and self.live_fail_after is None)
+                and self.live_fail_after is None
+                and self.live_slow_factor is None)
 
     def materialize(self, n_workers: int, seed: int):
-        """-> (worker_death, worker_speed, worker_fail_after), all seeded."""
+        """-> (worker_death, worker_speed, worker_fail_after,
+        worker_slow_factor), all seeded."""
         worker_death = None
         if self.death_frac > 0.0:
             worker_death = {i: self.death_at_s + self.death_stride_s * i
@@ -72,7 +78,11 @@ class FaultProfile:
         worker_fail_after = None
         if self.live_fail_after is not None:
             worker_fail_after = {"w0": self.live_fail_after}
-        return worker_death, worker_speed, worker_fail_after
+        worker_slow_factor = None
+        if self.live_slow_factor is not None:
+            worker_slow_factor = {"w0": float(self.live_slow_factor)}
+        return (worker_death, worker_speed, worker_fail_after,
+                worker_slow_factor)
 
 
 FAULT_PROFILES: dict[str, FaultProfile] = {
@@ -80,7 +90,16 @@ FAULT_PROFILES: dict[str, FaultProfile] = {
     "deaths_5pct": FaultProfile(death_frac=0.05),
     "deaths_20pct": FaultProfile(death_frac=0.20),
     "stragglers_10pct": FaultProfile(straggler_frac=0.10),
+    # The ISSUE-10 acceptance regime: a fifth of the fleet dies AND a
+    # tenth of the survivors-by-lottery run 4x slow — the combined
+    # attrition+heterogeneity storm the elastic/speculative stack is
+    # gated against.
+    "deaths20_stragglers10": FaultProfile(death_frac=0.20,
+                                          straggler_frac=0.10,
+                                          straggler_speed=0.25),
     "live_one_death": FaultProfile(live_fail_after=3),
+    # Live straggler: worker w0 runs 4x slow on the threads backend.
+    "live_slow4": FaultProfile(live_slow_factor=4.0),
 }
 
 
@@ -115,6 +134,9 @@ class RunSpec:
     cpu_rate_scale: float = 1.0         # threads-per-process modelling
     fault_profile: str = "none"
     speculative: bool = False
+    speculation_max_copies: int = 2
+    speed_feedback: bool = False
+    elastic: bool = False
     dataset_limit: Optional[int] = None
     seed: int = 0                       # organize_seed + fault seeding
 
@@ -139,14 +161,22 @@ class RunSpec:
         # run fault-free while claiming to measure fault recovery.
         profile = FAULT_PROFILES[self.fault_profile]
         if self.backend == "sim":
-            if profile.live_fail_after is not None:
+            if profile.live_fail_after is not None \
+                    or profile.live_slow_factor is not None:
                 raise ValueError(
                     f"fault profile {self.fault_profile!r} "
-                    f"(live_fail_after) needs a live backend")
+                    f"(live_fail_after/live_slow_factor) needs a live "
+                    f"backend")
         elif profile.death_frac > 0.0 or profile.straggler_frac > 0.0:
             raise ValueError(
                 f"fault profile {self.fault_profile!r} (timed deaths/"
                 f"stragglers) needs the sim backend")
+        if self.elastic:
+            if self.mode != "self_sched":
+                raise ValueError("elastic fleets need mode='self_sched'")
+            if self.backend == "processes":
+                raise ValueError("elastic fleets run on the sim and "
+                                 "threads backends only")
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

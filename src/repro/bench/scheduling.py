@@ -68,7 +68,8 @@ class SchedulingSpec:
     """One policy-bench configuration — JSON-able, hashable."""
 
     policy: str = "static"
-    kind: str = "sim"                   # sim | store_feed | dag_sim
+    kind: str = "sim"        # sim | store_feed | dag_sim | elastic_panel
+    #                        # | elastic_live
     dataset: str = "aerodrome"          # manifest name / feed fixture tag
     phase: str = "process"              # cost-model name (sim cells)
     backend: str = "sim"                # sim | threads
@@ -80,6 +81,10 @@ class SchedulingSpec:
     poll_interval: Optional[float] = None
     failure_timeout: Optional[float] = None
     n_manager_shards: int = 1
+    speculative: bool = False
+    speculation_max_copies: int = 2
+    speed_feedback: bool = False
+    elastic: bool = False
     seed: int = 0
     # store_feed fixture knobs (which store, how it is sliced into tasks).
     n_archives: int = 48
@@ -91,18 +96,25 @@ class SchedulingSpec:
         if self.policy not in POLICY_NAMES:
             raise ValueError(f"unknown policy {self.policy!r}; choose "
                              f"from {list(POLICY_NAMES)}")
-        if self.kind not in ("sim", "store_feed", "dag_sim"):
+        if self.kind not in ("sim", "store_feed", "dag_sim",
+                             "elastic_panel", "elastic_live"):
             raise ValueError(f"unknown cell kind {self.kind!r}")
         if self.fault_profile not in FAULT_PROFILES:
             raise ValueError(
                 f"unknown fault profile {self.fault_profile!r}")
-        if self.kind in ("sim", "dag_sim") and self.backend != "sim":
+        if self.kind in ("sim", "dag_sim", "elastic_panel") \
+                and self.backend != "sim":
             raise ValueError(f"{self.kind} cells run on the sim backend")
         if self.n_manager_shards < 1:
             raise ValueError("n_manager_shards must be >= 1")
         if self.kind == "store_feed" and self.backend != "threads":
             raise ValueError("store_feed cells measure a live feed; "
                              "backend must be 'threads'")
+        if self.kind == "elastic_live" and self.backend != "threads":
+            raise ValueError("elastic_live cells spawn worker threads; "
+                             "backend must be 'threads'")
+        if self.elastic and self.n_manager_shards > 1:
+            raise ValueError("elastic fleets need n_manager_shards=1")
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -141,7 +153,7 @@ def _execute_sim(spec: SchedulingSpec) -> dict:
 
     tasks = get_manifest(spec.dataset, limit=spec.dataset_limit)
     model = PHASES[spec.phase]
-    worker_death, worker_speed, _ = FAULT_PROFILES[
+    worker_death, worker_speed, _, _ = FAULT_PROFILES[
         spec.fault_profile].materialize(spec.n_workers, spec.seed)
     kwargs: dict = {}
     if spec.poll_interval is not None:
@@ -155,6 +167,9 @@ def _execute_sim(spec: SchedulingSpec) -> dict:
         policy=spec.policy, cost_model=model,
         n_manager_shards=spec.n_manager_shards,
         worker_death=worker_death, worker_speed=worker_speed,
+        speculative=spec.speculative,
+        speculation_max_copies=spec.speculation_max_copies,
+        speed_feedback=spec.speed_feedback, elastic=spec.elastic,
         organize_seed=spec.seed, raise_on_failure=False, **kwargs)
     bq = result.busy_quantiles()
     # Everything the sim reports is deterministic for a fixed spec+seed.
@@ -172,7 +187,13 @@ def _execute_sim(spec: SchedulingSpec) -> dict:
         "wait_total_s": sum(result.worker_wait),
         "dispatch_digest": result.dispatch_digest,
         "dispatch_rate_msgs_per_s": result.dispatch_rate_msgs_per_s,
+        "speculated": result.speculated,
+        "extra_messages": result.extra_messages,
+        "wasted_duplicate_s": result.wasted_seconds,
     }
+    if result.workers_added or result.workers_retired:
+        metrics["workers_added"] = result.workers_added
+        metrics["workers_retired"] = result.workers_retired
     if result.shard_messages:
         metrics["n_manager_shards"] = len(result.shard_messages)
         metrics["shard_messages"] = list(result.shard_messages)
@@ -205,7 +226,7 @@ def _execute_dag_sim(spec: SchedulingSpec) -> dict:
 
     tasks = get_manifest(spec.dataset, limit=spec.dataset_limit)
     model = PHASES[spec.phase]
-    worker_death, worker_speed, _ = FAULT_PROFILES[
+    worker_death, worker_speed, _, _ = FAULT_PROFILES[
         spec.fault_profile].materialize(spec.n_workers, spec.seed)
     common = dict(
         n_workers=spec.n_workers, organization=spec.organization,
@@ -277,6 +298,118 @@ def _execute_dag_sim(spec: SchedulingSpec) -> dict:
         metrics["n_manager_shards"] = len(pipelined.shard_messages)
         metrics["shard_messages"] = list(pipelined.shard_messages)
     return {"metrics": metrics, "measured": {}}
+
+
+# ---------------------------------------------------------------------------
+# elastic cells (ISSUE 10).
+# ---------------------------------------------------------------------------
+
+#: Every static-fleet policy the elastic stack must beat — the panel
+#: runs ALL of them under the identical fault regime, so the acceptance
+#: gate compares against the best static cell, not a cherry-picked one.
+_STATIC_PANEL_POLICIES = ("static", "fifo_selfsched", "sized_lpt",
+                          "adaptive_chunk")
+
+
+def _execute_elastic_panel(spec: SchedulingSpec) -> dict:
+    """ISSUE-10 acceptance cell: the full elastic stack (speculation +
+    speed-fed sizing + threshold autoscaler) against every static-fleet
+    policy under the same deaths+stragglers storm.  The headline metric
+    ``makespan_speedup_vs_best_static_x`` divides the BEST static
+    makespan by the elastic one; the gate is >= 1.2x.  Deaths shrink a
+    static fleet permanently while the controller re-grows capacity,
+    and speculation cuts the 4x-slow straggler tail — all decisions on
+    the virtual clock, so the whole panel is deterministic per seed."""
+    elastic_spec = dataclasses.replace(
+        spec, kind="sim", speculative=True, speed_feedback=True,
+        elastic=True)
+    elastic = _execute_sim(elastic_spec)
+    em = elastic["metrics"]
+    static_makespans: dict[str, float] = {}
+    static_completed: dict[str, int] = {}
+    for policy in _STATIC_PANEL_POLICIES:
+        srun = _execute_sim(dataclasses.replace(
+            spec, kind="sim", policy=policy, speculative=False,
+            speed_feedback=False, elastic=False))
+        static_makespans[policy] = srun["metrics"]["makespan_seconds"]
+        static_completed[policy] = srun["metrics"]["tasks_completed"]
+    best_policy = min(static_makespans, key=static_makespans.get)
+    best = static_makespans[best_policy]
+    metrics = dict(em)
+    metrics.update({
+        "static_makespans": static_makespans,
+        "best_static_policy": best_policy,
+        "best_static_makespan_seconds": best,
+        "makespan_speedup_vs_best_static_x": (
+            best / em["makespan_seconds"] if em["makespan_seconds"]
+            else 0.0),
+        "static_tasks_completed_min": min(static_completed.values()),
+    })
+    return {"metrics": metrics, "measured": {}}
+
+
+class _SleepTaskWorker:
+    """Fixed-cost live worker for the elastic threads cell: every task
+    sleeps ``base_s``, so straggling comes only from the injected
+    ``worker_slow_factor`` — the thing the cell measures."""
+
+    def __init__(self, base_s: float = 0.02):
+        self.base_s = base_s
+
+    def __call__(self, task) -> str:
+        time.sleep(self.base_s)
+        return task.task_id
+
+
+def _execute_elastic_live(spec: SchedulingSpec) -> dict:
+    """Live threads cell: a real 4x-slow worker (``live_slow4`` ->
+    ``worker_slow_factor``), real speculation, and a real autoscaler
+    spawning/retiring worker threads mid-run.  Wall-clock numbers land
+    in ``measured``; the exactly-once counters stay in ``metrics``."""
+    from repro.runtime import FleetController, run_job
+    from repro.tracks.datasets import get_manifest
+
+    tasks = get_manifest(spec.dataset, limit=spec.dataset_limit)
+    _, _, worker_fail_after, worker_slow_factor = FAULT_PROFILES[
+        spec.fault_profile].materialize(spec.n_workers, spec.seed)
+    # A live control loop needs sub-second ticks on a seconds-long job
+    # (run_job's default controller paces for simulated hours).
+    fleet = None
+    if spec.elastic:
+        fleet = FleetController(
+            min_workers=1, max_workers=2 * spec.n_workers,
+            interval_s=0.1, cooldown_s=0.2, queue_high_per_worker=2.0)
+    result = run_job(
+        tasks, _SleepTaskWorker(), backend="threads",
+        n_workers=spec.n_workers,
+        organization=spec.organization,
+        tasks_per_message=spec.tasks_per_message,
+        policy=spec.policy,
+        speculative=spec.speculative,
+        speculation_max_copies=spec.speculation_max_copies,
+        speed_feedback=spec.speed_feedback,
+        fleet=fleet,
+        worker_fail_after=worker_fail_after,
+        worker_slow_factor=worker_slow_factor,
+        organize_seed=spec.seed,
+        poll_interval=(spec.poll_interval if spec.poll_interval is not None
+                       else 0.002))
+    metrics = {
+        "n_tasks": len(tasks),
+        "tasks_completed": len(result.completed_ids),
+        "n_results": len(result.results),
+        "messages_sent": result.messages_sent,
+        "n_batches": len(result.batches),
+    }
+    measured = {
+        "makespan_seconds": result.job_seconds,
+        "speculated": float(result.speculated),
+        "extra_messages": float(result.extra_messages),
+        "wasted_duplicate_s": result.wasted_seconds,
+        "workers_added": float(result.workers_added),
+        "workers_retired": float(result.workers_retired),
+    }
+    return {"metrics": metrics, "measured": measured}
 
 
 # ---------------------------------------------------------------------------
@@ -457,6 +590,8 @@ def _execute(spec: SchedulingSpec,
         return cache[spec]
     out = (_execute_sim(spec) if spec.kind == "sim"
            else _execute_dag_sim(spec) if spec.kind == "dag_sim"
+           else _execute_elastic_panel(spec) if spec.kind == "elastic_panel"
+           else _execute_elastic_live(spec) if spec.kind == "elastic_live"
            else _execute_store_feed(spec))
     if cache is not None:
         cache[spec] = out
@@ -618,6 +753,44 @@ def scheduling_scenarios() -> list[SchedulingScenario]:
                                  "under 20% deaths")),
             tier="quick", notes="ISSUE-6 acceptance cell (3-phase chain)"),
     ]
+    # ISSUE-10 acceptance cell: the full elastic stack (speculation +
+    # speed-fed sizing + autoscaler) vs EVERY static-fleet policy under
+    # the combined deaths+stragglers storm — the gate compares against
+    # whichever static policy does best.
+    out.append(SchedulingScenario(
+        name="sched_elastic_vs_static_panel",
+        group="sched_elastic",
+        run=dataclasses.replace(
+            _SIM_BASE, kind="elastic_panel", policy="adaptive_chunk",
+            fault_profile="deaths20_stragglers10"),
+        checks=(Check("makespan_speedup_vs_best_static_x", "min", 1.2,
+                      source="ISSUE 10: elastic+speculative+speed-fed "
+                             ">= 1.2x vs the best static cell under 20% "
+                             "deaths + 4x stragglers"),
+                Check("tasks_completed", "min", 12_000,
+                      source="exactly-once under deaths, stragglers, "
+                             "speculation, and scaling"),
+                Check("workers_added", "min", 1,
+                      source="the controller actually grew the fleet")),
+        tier="quick", notes="ISSUE-10 acceptance cell (elastic panel)"))
+    # ISSUE-10 live cell: real worker threads, a real 4x-slow straggler
+    # (worker_slow_factor), real speculation and thread spawn/retire.
+    # Wall-clock lands in measured; the gated metric is exactly-once.
+    out.append(SchedulingScenario(
+        name="sched_elastic_live_slow4_speculative",
+        group="sched_elastic",
+        run=dataclasses.replace(
+            _SIM_BASE, kind="elastic_live", backend="threads",
+            dataset="tiny", dataset_limit=80, n_workers=4,
+            policy="fifo_selfsched", fault_profile="live_slow4",
+            speculative=True, speed_feedback=True, elastic=True),
+        checks=(Check("tasks_completed", "min", 80,
+                      source="ISSUE 10: exactly-once on live threads "
+                             "under a 4x straggler with speculation + "
+                             "elastic scaling"),
+                Check("n_results", "min", 80,
+                      source="every result delivered exactly once")),
+        tier="quick", notes="ISSUE-10 live cell (threads autoscaler)"))
     # ISSUE-6 manager-sharding scaling curve: tiny radar-like tasks at
     # one task per message drive the §V message wall; the single manager
     # flatlines at 1/msg_overhead dispatches per second while four shard

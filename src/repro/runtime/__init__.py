@@ -16,6 +16,8 @@ are thin wrappers over this package.
 """
 
 from repro.runtime.result import RunResult, SimTaskRecord, WorkerStats
+from repro.runtime.fleet import FleetController
+from repro.runtime.speed import WorkerSpeedModel
 from repro.runtime.policies import (
     POLICIES, POLICY_NAMES, SchedulingPolicy, get_policy)
 from repro.runtime.protocol import (
@@ -33,10 +35,12 @@ from repro.runtime.dag import (
 
 __all__ = [
     "BACKENDS", "DEFAULT_POLL_INTERVAL_S", "DEFAULT_POLL_S",
-    "DagCoordinator", "DagResult", "EdgeEmitter", "ManagerCheckpoint",
+    "DagCoordinator", "DagResult", "EdgeEmitter", "FleetController",
+    "ManagerCheckpoint",
     "POLICIES", "POLICY_NAMES", "PhaseNode", "ProcessTransport",
     "RunResult", "SchedulerCore", "SchedulingPolicy", "ShardedCore",
     "SimTaskRecord", "StreamingDAG", "ThreadTransport", "Transport",
+    "WorkerSpeedModel",
     "WorkerStats", "drive", "get_policy", "manager_shard",
     "merge_tasks_per_message", "partition_tasks_by_locality", "run_dag",
     "run_job", "run_service", "simulate_self_scheduling",

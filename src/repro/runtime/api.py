@@ -75,6 +75,12 @@ def run_job(tasks: Sequence[Task],
             worker_death: Optional[dict[int, float]] = None,
             worker_speed: Optional[Sequence[float]] = None,
             speculative: bool = False,
+            speculation_max_copies: int = 2,
+            speed_feedback: bool = False,
+            speed_model: Optional[Any] = None,
+            elastic: bool = False,
+            fleet: Optional[Any] = None,
+            worker_slow_factor: Optional[dict[str, float]] = None,
             legacy_launch_penalty: float = 1.0,
             mp_context: Optional[str] = None,
             tracer: Optional[Any] = None) -> RunResult:
@@ -129,6 +135,29 @@ def run_job(tasks: Sequence[Task],
     instants and exec spans are emitted on every backend (the sim binds
     its virtual clock, so traced sim runs stay bit-reproducible and
     tracing never changes a dispatch decision).
+
+    ``speculative`` re-issues the longest-in-flight task to idle
+    workers once the queue drains (at most ``speculation_max_copies``
+    copies of a task; first DONE wins) — on every backend.  Speculative
+    ASSIGNs are counted in ``RunResult.extra_messages``, never in
+    ``batches``, so the dispatch digest still covers the primary
+    schedule only.
+
+    ``speed_feedback`` turns on online per-worker speed estimation
+    (:class:`~repro.runtime.speed.WorkerSpeedModel`, or pass a seeded
+    ``speed_model``): cost-aware policies then size each worker's next
+    chunk by its observed relative speed.  Because chunk sizes depend
+    on measured timings, this is an explicit exception to the
+    cross-backend bit-identical dispatch contract (sim runs stay
+    deterministic per seed — virtual-clock observations).
+
+    ``elastic`` attaches a threshold-driven
+    :class:`~repro.runtime.fleet.FleetController` (or pass a configured
+    ``fleet``) that grows/shrinks the worker pool from observed queue
+    depth and idleness — sim and threads backends, single manager
+    shard only.  ``worker_slow_factor`` maps live worker ids (``"w3"``)
+    to slowdown multipliers (the threads mirror of the sim's
+    ``worker_speed`` straggler injection).
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
@@ -156,12 +185,31 @@ def run_job(tasks: Sequence[Task],
         cost_model,
         nppn=nppn if nppn is not None else default_nppn,
         nodes=nodes if nodes is not None else default_nodes)
+    if speed_feedback and speed_model is None:
+        from repro.runtime.speed import WorkerSpeedModel
+        speed_model = WorkerSpeedModel()
+    if elastic and fleet is None:
+        from repro.runtime.fleet import FleetController
+        fleet = FleetController(
+            min_workers=1, max_workers=max(2 * n_workers, n_workers + 1))
+    if fleet is not None:
+        if n_manager_shards > 1:
+            raise ValueError(
+                "elastic fleets require n_manager_shards=1 (the controller "
+                "drives one worker pool; shards own worker blocks)")
+        if backend == "processes":
+            raise ValueError(
+                "elastic fleets support the sim and threads backends only "
+                "(ProcessTransport cannot spawn workers mid-run)")
     if n_manager_shards > 1:
         core: Any = ShardedCore(
             tasks, n_shards=n_manager_shards, n_workers=n_workers,
             organization=organization, tasks_per_message=tasks_per_message,
             checkpoint=checkpoint, organize_seed=organize_seed,
-            policy=policy, cost_fn=cost_fn)
+            policy=policy, cost_fn=cost_fn,
+            speculative=speculative,
+            speculation_max_copies=speculation_max_copies,
+            speed_model=speed_model)
     else:
         policy_obj = get_policy(policy, tasks_per_message=tasks_per_message,
                                 n_workers=n_workers, cost_fn=cost_fn)
@@ -169,7 +217,10 @@ def run_job(tasks: Sequence[Task],
                              tasks_per_message=tasks_per_message,
                              checkpoint=checkpoint,
                              organize_seed=organize_seed,
-                             policy=policy_obj, n_workers=n_workers)
+                             policy=policy_obj, n_workers=n_workers,
+                             speculative=speculative,
+                             speculation_max_copies=speculation_max_copies,
+                             speed_model=speed_model, fleet=fleet)
 
     if backend == "sim":
         result = _sim.simulate_self_scheduling(
@@ -214,6 +265,7 @@ def run_job(tasks: Sequence[Task],
     transport = transport_cls(
         n_workers, fn, batch_fn=batch_fn, poll_interval=poll_interval,
         heartbeat_interval=heartbeat, worker_fail_after=worker_fail_after,
+        worker_slow_factor=worker_slow_factor,
         **kwargs)
     return drive(core, transport,
                  poll_interval=poll_interval,

@@ -242,7 +242,11 @@ class DagCoordinator:
                  policy: Any = None,
                  organize_seed: int = 0,
                  cost_fn: Optional[Callable[[Task], float]] = None,
-                 checkpoint: Optional[ManagerCheckpoint] = None):
+                 checkpoint: Optional[ManagerCheckpoint] = None,
+                 speculative: bool = False,
+                 speculation_max_copies: int = 2,
+                 speed_model: Optional[Any] = None,
+                 fleet: Optional[Any] = None):
         self.dag = dag
         self.topo = dag.toposort()
         self.out_edges: dict[str, list[_Edge]] = {n: [] for n in self.topo}
@@ -268,6 +272,8 @@ class DagCoordinator:
 
         outstanding: list[Task] = []
         pstate = (checkpoint.policy_state if checkpoint is not None
+                  else None)
+        rstate = (checkpoint.runtime_state if checkpoint is not None
                   else None)
         if checkpoint is not None and checkpoint.frontier:
             fr = checkpoint.frontier
@@ -302,24 +308,31 @@ class DagCoordinator:
                     self.node_admitted[name][t.task_id] = t
                     outstanding.append(self._namespaced(name, t))
 
+        inner_ck = (ManagerCheckpoint(set(), [], policy_state=pstate,
+                                      runtime_state=rstate)
+                    if (pstate or rstate) else None)
         if n_manager_shards > 1:
             self.inner: Any = ShardedCore(
                 outstanding, n_shards=n_manager_shards, n_workers=n_workers,
                 organization=organization,
                 tasks_per_message=tasks_per_message,
-                checkpoint=(ManagerCheckpoint(set(), [], policy_state=pstate)
-                            if pstate else None),
-                organize_seed=organize_seed, policy=policy, cost_fn=cost_fn)
+                checkpoint=inner_ck,
+                organize_seed=organize_seed, policy=policy, cost_fn=cost_fn,
+                speculative=speculative,
+                speculation_max_copies=speculation_max_copies,
+                speed_model=speed_model)
         else:
             pol = get_policy(policy, tasks_per_message=tasks_per_message,
                              n_workers=n_workers, cost_fn=cost_fn)
             self.inner = SchedulerCore(
                 outstanding, organization=organization,
                 tasks_per_message=tasks_per_message,
-                checkpoint=(ManagerCheckpoint(set(), [], policy_state=pstate)
-                            if pstate else None),
+                checkpoint=inner_ck,
                 organize_seed=organize_seed, policy=pol,
-                n_workers=n_workers)
+                n_workers=n_workers,
+                speculative=speculative,
+                speculation_max_copies=speculation_max_copies,
+                speed_model=speed_model, fleet=fleet)
         self._cascade()
 
     # -- tracing -----------------------------------------------------------
@@ -482,6 +495,26 @@ class DagCoordinator:
     def done(self) -> bool:
         return len(self.complete) == len(self.topo)
 
+    @property
+    def speculative(self) -> bool:
+        return bool(getattr(self.inner, "speculative", False))
+
+    @property
+    def speculated(self) -> int:
+        return int(getattr(self.inner, "speculated", 0) or 0)
+
+    @property
+    def extra_messages(self) -> int:
+        return int(getattr(self.inner, "extra_messages", 0) or 0)
+
+    @property
+    def wasted_seconds(self) -> float:
+        return float(getattr(self.inner, "wasted_seconds", 0.0) or 0.0)
+
+    @property
+    def fleet(self):
+        return getattr(self.inner, "fleet", None)
+
     def idle(self, worker: Any) -> bool:
         return self.inner.idle(worker)
 
@@ -490,6 +523,21 @@ class DagCoordinator:
 
     def next_batch(self, worker: Any) -> tuple[Task, ...]:
         return self.inner.next_batch(worker)
+
+    def speculate(self, worker: Any) -> tuple[Task, ...]:
+        spec = getattr(self.inner, "speculate", None)
+        return spec(worker) if spec is not None else ()
+
+    def observe_speed(self, worker: Any, task_ids: Sequence[str],
+                      busy_seconds: float) -> None:
+        obs = getattr(self.inner, "observe_speed", None)
+        if obs is not None:
+            obs(worker, task_ids, busy_seconds)
+
+    def record_waste(self, worker: Any, seconds: float) -> None:
+        waste = getattr(self.inner, "record_waste", None)
+        if waste is not None:
+            waste(worker, seconds)
 
     def on_done(self, worker: Any, task_ids: Sequence[str],
                 results: Optional[Sequence[Any]] = None) -> list[str]:
@@ -556,7 +604,8 @@ class DagCoordinator:
             completed, inner_ck.pending_ids,
             policy_state=inner_ck.policy_state,
             frontier={"nodes": nodes, "edges": edges,
-                      "closed": sorted(self._closed)})
+                      "closed": sorted(self._closed)},
+            runtime_state=inner_ck.runtime_state)
 
 
 class _DagRouter:
@@ -648,12 +697,20 @@ def run_dag(dag: StreamingDAG, *,
             nppn: Optional[int] = None,
             worker_death: Optional[dict[int, float]] = None,
             worker_speed: Optional[Sequence[float]] = None,
+            speculative: bool = False,
+            speculation_max_copies: int = 2,
+            speed_feedback: bool = False,
+            speed_model: Optional[Any] = None,
+            elastic: bool = False,
+            fleet: Optional[Any] = None,
+            worker_slow_factor: Optional[dict[str, float]] = None,
             mp_context: Optional[str] = None,
             tracer: Optional[Any] = None) -> DagResult:
     """Execute a :class:`StreamingDAG` on one runtime backend.
 
     The knobs mirror :func:`repro.runtime.api.run_job` (same backends,
-    policies, checkpointing, fault injection, triples topology), plus
+    policies, checkpointing, fault injection, triples topology,
+    speculation / speed feedback / elastic fleets), plus
     ``n_manager_shards`` for the sharded coordinator.  Passing a
     ``checkpoint`` whose ``frontier`` was produced by a previous DAG run
     resumes mid-stream: completed tasks are skipped, outstanding ones
@@ -665,6 +722,20 @@ def run_dag(dag: StreamingDAG, *,
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
                          f"choose from {BACKENDS}")
+    if speed_feedback and speed_model is None:
+        from repro.runtime.speed import WorkerSpeedModel
+        speed_model = WorkerSpeedModel()
+    if elastic and fleet is None:
+        from repro.runtime.fleet import FleetController
+        fleet = FleetController(
+            min_workers=1,
+            max_workers=max(2 * (n_workers or 4), (n_workers or 4) + 1))
+    if fleet is not None:
+        if n_manager_shards > 1:
+            raise ValueError("elastic fleets require n_manager_shards=1")
+        if backend == "processes":
+            raise ValueError("elastic fleets support the sim and threads "
+                             "backends only")
     if triple is not None:
         if n_workers is None:
             n_workers = max(triple.worker_processes, 1)
@@ -689,7 +760,10 @@ def run_dag(dag: StreamingDAG, *,
         dag, n_workers=n_workers, n_manager_shards=n_manager_shards,
         organization=organization, tasks_per_message=tasks_per_message,
         policy=policy, organize_seed=organize_seed, cost_fn=cost_fn,
-        checkpoint=checkpoint)
+        checkpoint=checkpoint, speculative=speculative,
+        speculation_max_copies=speculation_max_copies,
+        speed_model=speed_model,
+        fleet=fleet if n_manager_shards == 1 else None)
 
     if backend == "sim":
         model_fn = None
@@ -733,7 +807,8 @@ def run_dag(dag: StreamingDAG, *,
         transport = transport_cls(
             n_workers, router, batch_fn=router.process_batch,
             poll_interval=poll_interval, heartbeat_interval=heartbeat,
-            worker_fail_after=worker_fail_after, **kwargs)
+            worker_fail_after=worker_fail_after,
+            worker_slow_factor=worker_slow_factor, **kwargs)
         run = drive(coord, transport,
                     poll_interval=poll_interval,
                     failure_timeout=failure_timeout,

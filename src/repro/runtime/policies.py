@@ -140,6 +140,11 @@ class SchedulingPolicy:
         self.tasks_per_message = tasks_per_message
         self.n_workers = n_workers
         self.cost_fn = cost_fn
+        #: Optional :class:`repro.runtime.speed.WorkerSpeedModel` — set
+        #: by the core when speed feedback is enabled; the cost-aware
+        #: policies scale their chunk sizes by the asking worker's
+        #: measured relative speed.
+        self.speed_model = None
 
     # -- wiring -----------------------------------------------------------
 
@@ -161,6 +166,12 @@ class SchedulingPolicy:
     @property
     def _p(self) -> int:
         return max(int(self.n_workers or DEFAULT_N_WORKERS), 1)
+
+    def _rel_speed(self, worker) -> float:
+        """The asking worker's measured speed relative to the fleet
+        median (1.0 without a speed model or observations)."""
+        model = self.speed_model
+        return model.relative_speed(worker) if model is not None else 1.0
 
     # -- queue ------------------------------------------------------------
 
@@ -262,12 +273,21 @@ class _CostSortedPolicy(SchedulingPolicy):
 
 
 class SizedLptPolicy(_CostSortedPolicy):
-    """Longest-processing-time-first with fixed-size batches."""
+    """Longest-processing-time-first with fixed-size batches.
+
+    With a speed model attached the batch size scales with the asking
+    worker's measured relative speed (always at least one task), so a
+    0.25x worker receives a quarter-sized share instead of an equal one.
+    """
 
     name = "sized_lpt"
 
     def select(self, core, worker) -> list[Task]:
-        return self._pop(core, self._k)
+        k = self._k
+        rel = self._rel_speed(worker)
+        if rel != 1.0:
+            k = max(1, int(k * rel + 0.5))
+        return self._pop(core, k)
 
 
 class AdaptiveChunkPolicy(_CostSortedPolicy):
@@ -311,6 +331,15 @@ class AdaptiveChunkPolicy(_CostSortedPolicy):
         super().requeue(tasks)
         cost = self.cost_fn or default_task_cost
         self._rem_cost += float(sum(cost(t) for t in tasks))
+        if tasks:
+            # Policy-aware re-queue placement: a dead worker's chunk
+            # re-enters the *factoring schedule*, not just the queue —
+            # closing the round re-computes the budget from the grown
+            # remaining cost on the next ASSIGN, so the lost work is
+            # re-spread across the fleet instead of riding out the old
+            # (now undersized) budget.
+            self._budget = None
+            self._round_left = 0
 
     def admit(self, tasks: Sequence[Task]) -> None:
         super().admit(tasks)
@@ -329,9 +358,12 @@ class AdaptiveChunkPolicy(_CostSortedPolicy):
         if self._round_left <= 0 or self._budget is None:
             self._budget = self._rem_cost / (self.alpha * self._p)
             self._round_left = self._p
+        # Speed-fed sizing: a slow worker's ASSIGN gets a proportionally
+        # smaller cost budget (it still always receives one task).
+        budget = self._budget * self._rel_speed(worker)
         batch: list[Task] = []
         batch_cost = 0.0
-        while self._q and (not batch or batch_cost < self._budget):
+        while self._q and (not batch or batch_cost < budget):
             t = self._q.popleft()
             self._rem_cost -= float(cost(t))
             if t.task_id in core.completed:   # stale re-queue of late DONE
@@ -376,6 +408,12 @@ class ShardAffinityPolicy(SchedulingPolicy):
         self._count = 0
         if not hasattr(self, "_bound"):
             self._bound: dict[str, str] = {}   # str(worker) -> run key
+        if not hasattr(self, "_orphans"):
+            # Runs released by a dead worker, oldest first: the next
+            # worker asking for a binding adopts the orphaned run (its
+            # requeued head tasks carry the locality the dead worker's
+            # prefetcher had warmed) before opening a fresh run.
+            self._orphans: list[str] = []
         for t in tasks:
             key = locality_key(t)
             if key not in self._runs:
@@ -446,8 +484,18 @@ class ShardAffinityPolicy(SchedulingPolicy):
         if key is None or not self._runs.get(key):
             taken = {k for ww, k in self._bound.items()
                      if ww != w and self._runs.get(k)}
-            key = next((k for k in self._order
-                        if self._runs[k] and k not in taken), None)
+            # Orphaned runs first: re-bind a dead worker's locality run
+            # to the next asking (neighbor-warm) worker instead of
+            # leaving its requeued head behind fresh runs.
+            key = None
+            while self._orphans:
+                cand = self._orphans.pop(0)
+                if self._runs.get(cand) and cand not in taken:
+                    key = cand
+                    break
+            if key is None:
+                key = next((k for k in self._order
+                            if self._runs[k] and k not in taken), None)
             if key is not None:
                 self._bound[w] = key
             else:
@@ -458,16 +506,24 @@ class ShardAffinityPolicy(SchedulingPolicy):
         return self._pop_run(core, key)
 
     def release(self, worker) -> None:
-        self._bound.pop(str(worker), None)
+        # Recorded even if the run looks empty right now: the core
+        # requeues the dead worker's in-flight tasks immediately after
+        # this call, refilling the run; select() discards an orphan
+        # entry that is still empty when it comes up.
+        key = self._bound.pop(str(worker), None)
+        if key is not None and key not in self._orphans:
+            self._orphans.append(key)
 
     def state(self) -> Optional[dict]:
-        if not self._bound:
+        if not self._bound and not self._orphans:
             return None
-        return {"bindings": dict(self._bound)}
+        return {"bindings": dict(self._bound),
+                "orphans": list(self._orphans)}
 
     def restore(self, state: dict) -> None:
         self._bound = {str(w): str(k)
                        for w, k in state.get("bindings", {}).items()}
+        self._orphans = [str(k) for k in state.get("orphans", [])]
 
 
 POLICIES: dict[str, type[SchedulingPolicy]] = {

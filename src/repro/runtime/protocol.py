@@ -61,12 +61,19 @@ class ManagerCheckpoint:
 
     def __init__(self, completed: set, pending_ids: list,
                  policy_state: Optional[dict] = None,
-                 frontier: Optional[dict] = None):
+                 frontier: Optional[dict] = None,
+                 runtime_state: Optional[dict] = None):
         self.completed = set(completed)
         self.pending_ids = list(pending_ids)
         self.policy_state = (dict(policy_state)
                              if policy_state is not None else None)
         self.frontier = dict(frontier) if frontier is not None else None
+        #: Feedback-loop state beyond the task ledger: the worker speed
+        #: model (``"speed"``) and the elastic fleet controller
+        #: (``"fleet"``) — restored on resume so a restarted manager
+        #: keeps its learned fleet profile and scaling history.
+        self.runtime_state = (dict(runtime_state)
+                              if runtime_state is not None else None)
 
     def dumps(self) -> str:
         doc: dict = {"completed": sorted(self.completed),
@@ -75,6 +82,8 @@ class ManagerCheckpoint:
             doc["policy"] = self.policy_state
         if self.frontier is not None:
             doc["frontier"] = self.frontier
+        if self.runtime_state is not None:
+            doc["runtime"] = self.runtime_state
         return json.dumps(doc)
 
     @classmethod
@@ -82,7 +91,8 @@ class ManagerCheckpoint:
         d = json.loads(s)
         return cls(set(d["completed"]), list(d["pending"]),
                    policy_state=d.get("policy"),
-                   frontier=d.get("frontier"))
+                   frontier=d.get("frontier"),
+                   runtime_state=d.get("runtime"))
 
 
 def manager_shard(worker: Any, n_workers: int, n_shards: int) -> int:
@@ -170,9 +180,15 @@ class SchedulerCore:
                  checkpoint: Optional[ManagerCheckpoint] = None,
                  organize_seed: int = 0,
                  policy: Union[str, SchedulingPolicy, None] = None,
-                 n_workers: Optional[int] = None):
+                 n_workers: Optional[int] = None,
+                 speculative: bool = False,
+                 speculation_max_copies: int = 2,
+                 speed_model: Optional[Any] = None,
+                 fleet: Optional[Any] = None):
         if tasks_per_message < 1:
             raise ValueError("tasks_per_message must be >= 1")
+        if speculation_max_copies < 1:
+            raise ValueError("speculation_max_copies must be >= 1")
         organizer = get_organizer(organization)
         if organization == "random":
             ordered = organizer(tasks, seed=organize_seed)  # type: ignore[call-arg]
@@ -200,6 +216,33 @@ class SchedulerCore:
         self.messages_sent = 0
         self.reassigned = 0
         self.batches: list[tuple[str, ...]] = []
+        # Speculation (MapReduce-style backup copies) as a protocol
+        # concern: any backend whose queue drained may ask speculate()
+        # for a duplicate of the longest-in-flight task.  Speculative
+        # sends are accounted in extra_messages, never in
+        # messages_sent/batches — the dispatch digest stays the primary
+        # schedule's, identical across backends.
+        self.speculative = bool(speculative)
+        self.speculation_max_copies = int(speculation_max_copies)
+        self.speculated = 0
+        self.extra_messages = 0
+        self.wasted_seconds = 0.0
+        self._copies: dict[str, int] = {}
+        self._assign_seq: dict[str, int] = {}
+        self._next_seq = 0
+        # Feedback loop: per-worker speed model consulted by the
+        # cost-aware policies, and the elastic fleet controller the
+        # backend drives (both optional; both checkpointed).
+        self.speed_model = speed_model
+        if speed_model is not None:
+            self.policy.speed_model = speed_model
+        self.fleet = fleet
+        if checkpoint is not None and checkpoint.runtime_state is not None:
+            rs = checkpoint.runtime_state
+            if speed_model is not None and rs.get("speed"):
+                speed_model.restore(rs["speed"])
+            if fleet is not None and rs.get("fleet"):
+                fleet.restore(rs["fleet"])
         #: Optional :class:`repro.obs.Tracer`; every lifecycle decision
         #: below emits an instant when attached (``attach_tracer``).
         self.tracer = None
@@ -260,6 +303,14 @@ class SchedulerCore:
         self.in_flight.setdefault(worker, set()).update(ids)
         self.messages_sent += 1
         self.batches.append(ids)
+        for tid in ids:
+            # One primary copy per assignment (a re-queued task starts a
+            # fresh copy budget — the dead owner's copy is gone), stamped
+            # with the send sequence so speculation can find the batch
+            # that has been in flight longest without consulting a clock.
+            self._copies[tid] = 1
+            self._assign_seq[tid] = self._next_seq
+            self._next_seq += 1
         tr = self.tracer
         if tr is not None:
             ts = tr.clock()
@@ -269,6 +320,77 @@ class SchedulerCore:
                 raw((ts, -1.0, "assigned", "task", worker, tid, shard))
             tr.emitted += len(ids)
         return tuple(batch)
+
+    def speculate(self, worker: Any) -> tuple[Task, ...]:
+        """A backup copy of the longest-in-flight incomplete task for an
+        idle worker at the tail (MapReduce-style speculation, lifted
+        here from the sim so every backend shares the decision rule).
+
+        Only fires when speculation is enabled AND the queue is empty —
+        a pending task always beats a duplicate.  The victim is the
+        eligible in-flight task with the oldest assignment sequence
+        (ties broken by task id, so the choice is deterministic), held
+        by another live worker, with fewer than
+        ``speculation_max_copies`` copies outstanding.  First DONE wins
+        via the ``completed`` set exactly as for primary copies; the
+        send is accounted in ``extra_messages``, never in
+        ``messages_sent``/``batches``.
+        """
+        if not self.speculative or worker in self.dead or self.pending:
+            return ()
+        mine = self.in_flight.get(worker) or set()
+        best: Optional[str] = None
+        best_seq = 0
+        for w, ids in self.in_flight.items():
+            if w == worker or w in self.dead:
+                continue
+            for tid in ids:
+                if tid in self.completed or tid in self.failures \
+                        or tid in mine:
+                    continue
+                if self._copies.get(tid, 1) >= self.speculation_max_copies:
+                    continue
+                seq = self._assign_seq.get(tid, -1)
+                if best is None or (seq, tid) < (best_seq, best):
+                    best, best_seq = tid, seq
+        if best is None:
+            return ()
+        self._copies[best] = self._copies.get(best, 1) + 1
+        self.in_flight.setdefault(worker, set()).add(best)
+        self.speculated += 1
+        self.extra_messages += 1
+        tr = self.tracer
+        if tr is not None:
+            tr.raw((tr.clock(), -1.0, "speculated", "sched", worker, best,
+                    self._trace_shard))
+            tr.emitted += 1
+        return (self._by_id[best],)
+
+    def observe_speed(self, worker: Any, task_ids: Sequence[str],
+                      busy_seconds: float) -> None:
+        """Feed the speed model one finished batch: the policy's own
+        cost estimate for its tasks over the worker's reported busy
+        seconds.  No-op without a model (the default), so dispatch
+        stays measurement-free unless feedback was opted into."""
+        model = self.speed_model
+        if model is None or busy_seconds <= 0.0:
+            return
+        from repro.runtime.policies import default_task_cost
+        cost = self.policy.cost_fn or default_task_cost
+        est = 0.0
+        for tid in task_ids:
+            t = self._by_id.get(tid)
+            if t is not None:
+                est += float(cost(t))
+        if est > 0.0:
+            model.observe(worker, est, busy_seconds)
+
+    def record_waste(self, worker: Any, seconds: float) -> None:
+        """Account duplicate-execution seconds (a DONE for an already
+        completed task — a speculated or falsely-redispatched copy that
+        lost the race).  Pure accounting; surfaces in BENCH records."""
+        if seconds > 0.0:
+            self.wasted_seconds += float(seconds)
 
     def on_done(self, worker: Any, task_ids: Sequence[str],
                 results: Optional[Sequence[Any]] = None) -> list[str]:
@@ -284,6 +406,10 @@ class SchedulerCore:
                 fl.discard(tid)
             if tid in self.completed:
                 continue
+            # A surviving copy's success supersedes a lost copy's failure
+            # (only reachable with speculation: one copy crashed, the
+            # other finished the work).
+            self.failures.pop(tid, None)
             self.completed.add(tid)
             fresh.append(tid)
         tr = self.tracer
@@ -334,10 +460,26 @@ class SchedulerCore:
     def on_failed(self, worker: Any, task_ids: Sequence[str],
                   error: Optional[str] = None) -> None:
         fl = self.in_flight.get(worker)
+        recorded: list[str] = []
         for tid in task_ids:
             if fl is not None:
                 fl.discard(tid)
+            if tid in self.completed:
+                # A speculative copy crashing AFTER another copy's DONE
+                # is a no-op — the task is done; a non-idempotent fn's
+                # losing duplicate (its input already consumed) must not
+                # poison the ledger.  Mirrors duplicate-DONE suppression.
+                continue
+            if any(tid in ids for w, ids in self.in_flight.items()
+                   if w != worker and w not in self.dead):
+                # Another live copy is still running this task — it may
+                # yet succeed (and with speculation the crashed copy is
+                # often the duplicate racing a non-idempotent fn).  Only
+                # the LAST outstanding copy's failure is recorded.
+                continue
             self.failures[tid] = error or "unknown"
+            recorded.append(tid)
+        task_ids = recorded
         tr = self.tracer
         if tr is not None and task_ids:
             ts = tr.clock()
@@ -375,7 +517,20 @@ class SchedulerCore:
     def checkpoint(self) -> ManagerCheckpoint:
         return ManagerCheckpoint(
             set(self.completed), [t.task_id for t in self.pending],
-            policy_state=self.policy.state())
+            policy_state=self.policy.state(),
+            runtime_state=self._runtime_state())
+
+    def _runtime_state(self) -> Optional[dict]:
+        runtime: dict = {}
+        if self.speed_model is not None:
+            st = self.speed_model.state()
+            if st:
+                runtime["speed"] = st
+        if self.fleet is not None:
+            st = self.fleet.state()
+            if st:
+                runtime["fleet"] = st
+        return runtime or None
 
 
 class _GroupPendingView:
@@ -435,7 +590,10 @@ class ShardedCore:
                  checkpoint: Optional[ManagerCheckpoint] = None,
                  organize_seed: int = 0,
                  policy: Union[str, None] = None,
-                 cost_fn: Optional[Callable[[Task], float]] = None):
+                 cost_fn: Optional[Callable[[Task], float]] = None,
+                 speculative: bool = False,
+                 speculation_max_copies: int = 2,
+                 speed_model: Optional[Any] = None):
         from repro.runtime.policies import SchedulingPolicy, get_policy
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
@@ -457,9 +615,13 @@ class ShardedCore:
             ck = None
             if checkpoint is not None:
                 # The global completed set intersects down to each
-                # shard's own tasks inside SchedulerCore.__init__.
-                ck = ManagerCheckpoint(checkpoint.completed, [],
-                                       policy_state=pstate)
+                # shard's own tasks inside SchedulerCore.__init__.  The
+                # runtime (speed-model) state rides on the first shard
+                # only: the model instance is shared, restore once.
+                ck = ManagerCheckpoint(
+                    checkpoint.completed, [], policy_state=pstate,
+                    runtime_state=(checkpoint.runtime_state
+                                   if not self.cores else None))
             self.cores.append(SchedulerCore(
                 part, organization=organization,
                 tasks_per_message=tasks_per_message, checkpoint=ck,
@@ -467,7 +629,14 @@ class ShardedCore:
                 policy=get_policy(policy,
                                   tasks_per_message=tasks_per_message,
                                   n_workers=n_workers, cost_fn=cost_fn),
-                n_workers=n_workers))
+                n_workers=n_workers,
+                speculative=speculative,
+                speculation_max_copies=speculation_max_copies,
+                speed_model=speed_model))
+        self.speculative = bool(speculative)
+        # Elastic scaling needs one coordinator (run_job enforces it);
+        # backends discover the controller via this attribute.
+        self.fleet = None
         #: Global interleaved dispatch log (per-shard logs live on the
         #: member cores).
         self.batches: list[tuple[str, ...]] = []
@@ -554,6 +723,18 @@ class ShardedCore:
         return sum(c.reassigned for c in self.cores)
 
     @property
+    def speculated(self) -> int:
+        return sum(c.speculated for c in self.cores)
+
+    @property
+    def extra_messages(self) -> int:
+        return sum(c.extra_messages for c in self.cores)
+
+    @property
+    def wasted_seconds(self) -> float:
+        return sum(c.wasted_seconds for c in self.cores)
+
+    @property
     def done(self) -> bool:
         return all(c.done for c in self.cores)
 
@@ -598,6 +779,20 @@ class ShardedCore:
     def mark_dead(self, worker: Any) -> list[Task]:
         return self.cores[self.shard_of(worker)].mark_dead(worker)
 
+    def speculate(self, worker: Any) -> tuple[Task, ...]:
+        """Backup copy from the worker's own shard (speculation never
+        crosses coordinators — the shard already steals siblings' tails
+        before its queue drains, so its in-flight set is the tail)."""
+        return self.cores[self.shard_of(worker)].speculate(worker)
+
+    def observe_speed(self, worker: Any, task_ids: Sequence[str],
+                      busy_seconds: float) -> None:
+        self.cores[self.shard_of(worker)].observe_speed(
+            worker, task_ids, busy_seconds)
+
+    def record_waste(self, worker: Any, seconds: float) -> None:
+        self.cores[self.shard_of(worker)].record_waste(worker, seconds)
+
     # -- checkpoint --------------------------------------------------------
 
     def checkpoint(self) -> ManagerCheckpoint:
@@ -607,7 +802,8 @@ class ShardedCore:
         return ManagerCheckpoint(
             self.completed, pending,
             policy_state={"shards": [c.policy.state()
-                                     for c in self.cores]})
+                                     for c in self.cores]},
+            runtime_state=self.cores[0]._runtime_state())
 
 
 def drive(core: SchedulerCore, transport, *,
@@ -635,18 +831,70 @@ def drive(core: SchedulerCore, transport, *,
     # reconstructed from DONE-reported busy windows and clamped to never
     # overlap within a worker's timeline.
     exec_end: dict[Any, float] = {}
+    # Elastic fleet: the controller rides on the core (run_job attaches
+    # it) and only engages on transports that can actually scale.
+    fleet = getattr(core, "fleet", None)
+    can_scale = fleet is not None and hasattr(transport, "add_worker")
+    retired: set = set()
     transport.start()
     try:
         t_start = time.monotonic()
         last_seen = {wid: t_start for wid in worker_ids}
         heard: set = set()      # workers that have sent at least one message
         last_ckpt = t_start
+        last_control = t_start
 
         def send(wid) -> None:
+            if wid in retired or wid in core.dead:
+                return
             batch = core.next_batch(wid)
+            if not batch:
+                # Queue drained: offer the idle worker a backup copy of
+                # the longest-in-flight task (no-op unless the core was
+                # built speculative).
+                speculate = getattr(core, "speculate", None)
+                if speculate is not None:
+                    batch = speculate(wid)
             if batch:
                 transport.send(wid, Message(
                     MessageKind.ASSIGN, sender="manager", tasks=batch))
+
+        def control_tick(now: float) -> None:
+            alive = [w for w in worker_ids
+                     if w not in core.dead and w not in retired]
+            busy = sum(1 for w in alive if not core.idle(w))
+            busy_frac = busy / len(alive) if alive else 0.0
+            delta = fleet.decide(now - t_start, n_workers=len(alive),
+                                 queue_depth=len(core.pending),
+                                 busy_frac=busy_frac)
+            applied = 0
+            if delta > 0:
+                for _ in range(delta):
+                    wid = transport.add_worker()
+                    worker_ids.append(wid)
+                    stats[wid] = WorkerStats(wid)
+                    last_seen[wid] = now
+                    applied += 1
+                    send(wid)
+            elif delta < 0:
+                # Retire only both-views-idle workers — never interrupt
+                # in-flight work (exactly-once stays trivially safe: a
+                # retired worker has nothing to lose).
+                for w in alive:
+                    if applied <= delta:
+                        break
+                    if core.idle(w):
+                        transport.retire_worker(w)
+                        retired.add(w)
+                        applied -= 1
+            if applied:
+                fleet.applied(applied)
+                pol = getattr(core, "policy", None)
+                if pol is not None:
+                    pol.n_workers = len(worker_ids) - len(retired)
+            if tracer is not None and delta:
+                tracer.emit(tracer.clock(), -1.0, "fleet_scale", "sched",
+                            len(worker_ids) - len(retired), None, applied)
 
         # "the manager sequentially allocates initial tasks to all workers
         # as fast as possible ... does not pause when sending"
@@ -670,6 +918,18 @@ def drive(core: SchedulerCore, transport, *,
                     for tid, res in zip(msg.task_ids, msg.results):
                         if tid in fresh:
                             results[tid] = res
+                    observe = getattr(core, "observe_speed", None)
+                    if observe is not None:
+                        observe(msg.sender, msg.task_ids, msg.busy_seconds)
+                    n_stale = len(msg.task_ids) - len(fresh)
+                    if n_stale > 0 and msg.task_ids:
+                        # Duplicate executions (a speculated or falsely
+                        # re-dispatched copy lost the race): charge the
+                        # stale share of this batch's busy window.
+                        waste = getattr(core, "record_waste", None)
+                        if waste is not None:
+                            waste(msg.sender, msg.busy_seconds
+                                  * n_stale / len(msg.task_ids))
                     s = stats[msg.sender]
                     s.tasks_completed += len(fresh)
                     s.busy_seconds += msg.busy_seconds
@@ -712,7 +972,8 @@ def drive(core: SchedulerCore, transport, *,
                 # never fires: a worker only idles once its shard's
                 # queue is empty for good.
                 for wid in worker_ids:
-                    if wid not in core.dead and core.idle(wid):
+                    if wid not in core.dead and wid not in retired \
+                            and core.idle(wid):
                         send(wid)
 
             # Failure detection.  Two tiers:
@@ -723,7 +984,7 @@ def drive(core: SchedulerCore, transport, *,
             now = time.monotonic()
             newly_dead = False
             for wid in worker_ids:
-                if wid in core.dead or core.idle(wid):
+                if wid in core.dead or wid in retired or core.idle(wid):
                     continue
                 if not transport.worker_alive(wid):
                     core.mark_dead(wid)
@@ -743,12 +1004,23 @@ def drive(core: SchedulerCore, transport, *,
                 # Kick idle live workers so re-queued work starts
                 # without waiting for another DONE.
                 for w2 in worker_ids:
-                    if w2 not in core.dead and core.idle(w2):
+                    if w2 not in core.dead and w2 not in retired \
+                            and core.idle(w2):
                         send(w2)
-            if len(core.dead) == len(worker_ids) and not core.done:
+            n_alive = sum(1 for w in worker_ids
+                          if w not in core.dead and w not in retired)
+            if n_alive == 0 and not core.done and not can_scale:
                 raise RuntimeError(
                     f"all {len(worker_ids)} workers died with "
                     f"{core.total - len(core.completed)} tasks left")
+            # With an elastic fleet a fully dead fleet is recoverable:
+            # the controller's min_workers floor re-grows it below.
+
+            if can_scale:
+                now = time.monotonic()
+                if now - last_control >= fleet.interval_s:
+                    last_control = now
+                    control_tick(now)
 
             if on_checkpoint is not None:
                 now = time.monotonic()
@@ -760,8 +1032,8 @@ def drive(core: SchedulerCore, transport, *,
                 time.sleep(poll_interval)
                 # Re-poll idle workers (they may have raced the initial send).
                 for wid in worker_ids:
-                    if wid not in core.dead and core.idle(wid) \
-                            and core.pending:
+                    if wid not in core.dead and wid not in retired \
+                            and core.idle(wid) and core.pending:
                         send(wid)
     finally:
         transport.stop()
@@ -771,15 +1043,21 @@ def drive(core: SchedulerCore, transport, *,
         raise RuntimeError(
             f"{len(core.failures)} tasks failed: "
             f"{dict(list(core.failures.items())[:3])}")
+    extra_messages = int(getattr(core, "extra_messages", 0) or 0)
     return RunResult(
         job_seconds=job_seconds,
         results=results,
         worker_stats=stats,
         failed_workers=sorted(core.dead),
         reassigned_tasks=core.reassigned,
-        messages_sent=core.messages_sent,
+        messages_sent=core.messages_sent + extra_messages,
         backend=backend,
         failures=dict(core.failures),
         batches=list(core.batches),
         completed_ids=frozenset(core.completed),
-        shard_messages=list(getattr(core, "shard_messages", []) or []))
+        shard_messages=list(getattr(core, "shard_messages", []) or []),
+        speculated=int(getattr(core, "speculated", 0) or 0),
+        extra_messages=extra_messages,
+        wasted_seconds=float(getattr(core, "wasted_seconds", 0.0) or 0.0),
+        workers_added=(fleet.workers_added if fleet is not None else 0),
+        workers_retired=(fleet.workers_retired if fleet is not None else 0))

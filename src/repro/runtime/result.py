@@ -85,6 +85,16 @@ class RunResult:
     # flatline — and its removal under sharding — observable in
     # BENCH_scheduling.json.
     shard_messages: list[int] = dataclasses.field(default_factory=list)
+    # Speculation accounting: backup copies issued, the extra ASSIGN
+    # messages they cost (counted in messages_sent but NOT in batches —
+    # the dispatch digest covers the primary schedule only), and the
+    # seconds burned executing duplicates that lost the race.
+    speculated: int = 0
+    extra_messages: int = 0
+    wasted_seconds: float = 0.0
+    # Elastic-fleet accounting (zero for static fleets).
+    workers_added: int = 0
+    workers_retired: int = 0
 
     # -- JobResult compatibility -------------------------------------------
 
@@ -235,6 +245,12 @@ class RunResult:
             "n_batches": len(self.batches),
             "dispatch_digest": self.dispatch_digest,
             "reassigned_tasks": self.reassigned_tasks,
+            "speculated": self.speculated,
+            "extra_messages": self.extra_messages,
+            "wasted_duplicate_s": self.wasted_seconds,
+            **({"workers_added": self.workers_added,
+                "workers_retired": self.workers_retired}
+               if self.workers_added or self.workers_retired else {}),
             "failed_workers": [str(w) for w in self.failed_workers],
             "n_task_failures": len(self.failures),
             "n_workers": len(self.worker_stats),

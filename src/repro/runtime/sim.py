@@ -49,6 +49,7 @@ _RECV = 1           # data = (worker, tuple[int task indices])
 _MGR_DONE = 2       # data = (worker, tuple[str task ids])
 _DEATH = 3          # data = worker index
 _REDISPATCH = 4     # data = worker index (dynamic) | tuple[int] (static)
+_CONTROL = 5        # data = None (elastic fleet controller tick)
 
 
 class _Sim:
@@ -82,15 +83,20 @@ class _Sim:
         # 0.25 = a worker running 4x slow.
         self.speed = (list(worker_speed) if worker_speed is not None
                       else [1.0] * n_workers)
-        # Beyond-paper: MapReduce-style backup tasks. When the queue is
-        # empty and a worker goes idle, the manager re-issues the
-        # longest-running in-flight task; first completion wins
-        # (exactly-once via completed_set).
-        self.speculative = speculative
+        # Beyond-paper: MapReduce-style backup tasks. The *decision* now
+        # lives in SchedulerCore.speculate() (shared with the live
+        # backends); the sim only routes an idle worker's empty ASSIGN
+        # through it. First completion wins (exactly-once via
+        # completed_set worker-side, core.completed manager-side).
+        self.speculative = (bool(speculative)
+                            or bool(getattr(core, "speculative", False)))
         self.completed_set: set[int] = set()
-        self.dup_count: dict[int, int] = {}
-        self.speculated = 0
-        self.extra_messages = 0               # speculative sends
+        # Elastic fleet: the controller rides on the core (run_job
+        # attaches it); the sim drives it with _CONTROL events on the
+        # virtual clock, so scaling decisions are deterministic per seed.
+        self.fleet = getattr(core, "fleet", None) if core is not None \
+            else None
+        self.retired: list[bool] = [False] * n_workers
 
         self.now = 0.0
         self.seq = itertools.count()
@@ -191,39 +197,20 @@ class _Sim:
     def _mgr_send(self, worker: int) -> None:
         """Ask the shared protocol core for the next batch (same decision
         the live backends make) and put it on the simulated wire."""
-        if self.dead[worker]:
+        if self.dead[worker] or self.retired[worker]:
             return
         assert self.core is not None
         batch_tasks = self.core.next_batch(worker)
+        if not batch_tasks and self.speculative:
+            # Queue drained: the core may hand this idle worker a backup
+            # copy of the longest-in-flight task (first DONE wins).
+            speculate = getattr(self.core, "speculate", None)
+            if speculate is not None:
+                batch_tasks = speculate(worker)
         if not batch_tasks:
-            if self.speculative:
-                self._mgr_speculate(worker)
             return
         self._send_indices(
             worker, [self._register(t) for t in batch_tasks])
-
-    def _mgr_speculate(self, worker: int) -> None:
-        """Re-issue the longest-running in-flight task to an idle worker."""
-        best, best_start = None, None
-        for w in range(self.n_workers):
-            if w == worker or self.dead[w]:
-                continue
-            idx = self.cur_task[w]
-            if idx is None or idx in self.completed_set:
-                continue
-            if self.dup_count.get(idx, 0) >= 2:
-                continue
-            if best is None or self.task_start[w] < best_start:
-                best, best_start = idx, self.task_start[w]
-        if best is None:
-            return
-        self.dup_count[best] = 2
-        self.speculated += 1
-        self.extra_messages += 1
-        if self.tracer is not None:
-            self.tracer.emit(self.now, -1.0, "speculated", "sched",
-                             worker, self.tasks[best].task_id, None)
-        self._send_indices(worker, (best,))
 
     # -- worker task lifecycle -------------------------------------------------
 
@@ -261,8 +248,15 @@ class _Sim:
         idx = self.cur_task[worker]
         assert idx is not None
         t = self.tasks[idx]
-        self.busy[worker] += self.now - self.task_start[worker]
+        elapsed = self.now - self.task_start[worker]
+        self.busy[worker] += elapsed
         self.last_end[worker] = self.now
+        if self.core is not None:
+            # Online speed feedback: est cost over simulated elapsed
+            # seconds (virtual time, so the model stays deterministic).
+            observe = getattr(self.core, "observe_speed", None)
+            if observe is not None:
+                observe(worker, (t.task_id,), elapsed)
         if idx not in self.completed_set:   # first copy wins (speculation)
             self.completed_set.add(idx)
             self.records.append(SimTaskRecord(
@@ -277,6 +271,11 @@ class _Sim:
                         self.now - self.task_start[worker],
                         "exec", "task", worker, t.task_id, t.size_bytes))
                 tr.emitted += 1
+        elif self.core is not None:
+            # A losing duplicate: charge the wasted execution seconds.
+            waste = getattr(self.core, "record_waste", None)
+            if waste is not None:
+                waste(worker, elapsed)
         self.cur_task[worker] = None
         self.batch_pos[worker] += 1
         if self.batch_pos[worker] < len(self.inflight[worker]):
@@ -289,6 +288,73 @@ class _Sim:
             # DONE message reaches the manager after one poll hop.
             self._push(self.now + self.latency, _MGR_DONE,
                        (worker, finished))
+
+    # -- elastic fleet ---------------------------------------------------------
+
+    def _grow(self, k: int) -> list[int]:
+        """Add k simulated workers (every per-worker parallel list grows;
+        new workers run at nominal speed) and hand each its first batch."""
+        new_ids = []
+        for _ in range(k):
+            w = self.n_workers
+            self.n_workers += 1
+            self.inflight.append([])
+            self.batch_pos.append(0)
+            self.io_wait.append(0.0)
+            self.cur_task.append(None)
+            self.in_io.append(False)
+            self.dead.append(False)
+            self.busy.append(0.0)
+            self.first_start.append(None)
+            self.last_end.append(0.0)
+            self.task_start.append(0.0)
+            self.speed.append(1.0)
+            self.retired.append(False)
+            new_ids.append(w)
+        pol = getattr(self.core, "policy", None)
+        if pol is not None:
+            # Keep the factoring policies' P in step with the fleet.
+            pol.n_workers = self.n_workers
+        for w in new_ids:
+            self._mgr_send(w)
+        return new_ids
+
+    def _retire(self, k: int) -> int:
+        """Retire up to k both-views-idle workers (never interrupts
+        in-flight work, so exactly-once needs no re-queue)."""
+        n = 0
+        for w in range(self.n_workers):
+            if n >= k:
+                break
+            if self.dead[w] or self.retired[w] or self.inflight[w]:
+                continue
+            if self.core is not None and not self.core.idle(w):
+                continue
+            self.retired[w] = True
+            n += 1
+        return n
+
+    def _fleet_control(self) -> None:
+        alive = [w for w in range(self.n_workers)
+                 if not self.dead[w] and not self.retired[w]]
+        busy = sum(1 for w in alive
+                   if self.inflight[w] or not self.core.idle(w))
+        busy_frac = busy / len(alive) if alive else 0.0
+        delta = self.fleet.decide(self.now, n_workers=len(alive),
+                                  queue_depth=len(self.core.pending),
+                                  busy_frac=busy_frac)
+        applied = 0
+        if delta > 0:
+            applied = len(self._grow(delta))
+        elif delta < 0:
+            applied = -self._retire(-delta)
+        if applied:
+            self.fleet.applied(applied)
+        if self.tracer is not None and delta:
+            n_alive = sum(1 for w in range(self.n_workers)
+                          if not self.dead[w] and not self.retired[w])
+            self.tracer.emit(self.now, -1.0, "fleet_scale", "sched",
+                             n_alive, None, applied)
 
     def _kill(self, worker: int) -> None:
         if self.dead[worker]:
@@ -324,6 +390,8 @@ class _Sim:
         for w, t in self.worker_death.items():
             if 0 <= w < self.n_workers:
                 self._push(t, _DEATH, w)
+        if self.fleet is not None:
+            self._push(self.fleet.interval_s, _CONTROL, None)
         # Eager initial allocation to every worker, serially, no pauses.
         for w in range(self.n_workers):
             if not self.core.pending:
@@ -406,9 +474,15 @@ class _Sim:
                         for w2 in range(self.n_workers):
                             if not self.core.pending:
                                 break
-                            if (not self.dead[w2] and not self.inflight[w2]
+                            if (not self.dead[w2] and not self.retired[w2]
+                                    and not self.inflight[w2]
                                     and self.core.idle(w2)):
                                 self._mgr_send(w2)
+            elif kind == _CONTROL:
+                if self.fleet is not None and not self.core.done:
+                    self._fleet_control()
+                    self._push(self.now + self.fleet.interval_s,
+                               _CONTROL, None)
             elif kind == _DEATH:
                 w = data  # type: ignore[assignment]
                 dead_workers.append(w)
@@ -439,7 +513,8 @@ class _Sim:
                         # leaves core.idle False — sending then would
                         # double-assign, exactly like the live drive loop's
                         # core.idle guard prevents).
-                        if (not self.dead[w2] and not self.inflight[w2]
+                        if (not self.dead[w2] and not self.retired[w2]
+                                and not self.inflight[w2]
                                 and self.core.idle(w2)
                                 and self.core.pending):
                             self._mgr_send(w2)
@@ -478,7 +553,8 @@ class _Sim:
             batches = []
             failures: dict[str, str] = {}
         else:
-            messages = self.core.messages_sent + self.extra_messages
+            extra = int(getattr(self.core, "extra_messages", 0) or 0)
+            messages = self.core.messages_sent + extra
             reassigned = self.core.reassigned
             completed_ids = frozenset(self.core.completed)
             batches = list(self.core.batches)
@@ -495,7 +571,18 @@ class _Sim:
             batches=batches,
             completed_ids=completed_ids,
             shard_messages=([] if static else list(
-                getattr(self.core, "shard_messages", []) or [])))
+                getattr(self.core, "shard_messages", []) or [])),
+            speculated=(0 if static else
+                        int(getattr(self.core, "speculated", 0) or 0)),
+            extra_messages=(0 if static else
+                            int(getattr(self.core, "extra_messages", 0)
+                                or 0)),
+            wasted_seconds=(0.0 if static else
+                            float(getattr(self.core, "wasted_seconds", 0.0)
+                                  or 0.0)),
+            workers_added=(self.fleet.workers_added if self.fleet else 0),
+            workers_retired=(self.fleet.workers_retired
+                             if self.fleet else 0))
 
 
 # ---------------------------------------------------------------------------
@@ -516,6 +603,7 @@ def simulate_self_scheduling(
         legacy_launch_penalty: float = 1.0,
         worker_speed: Optional[Sequence[float]] = None,
         speculative: bool = False,
+        speculation_max_copies: int = 2,
         organize_seed: int = 0,
         policy: object = None,
         core: Optional[SchedulerCore] = None,
@@ -548,7 +636,13 @@ def simulate_self_scheduling(
         core = SchedulerCore(tasks, organization=organization,
                              tasks_per_message=tasks_per_message,
                              organize_seed=organize_seed,
-                             policy=pol, n_workers=n_workers)
+                             policy=pol, n_workers=n_workers,
+                             speculative=speculative,
+                             speculation_max_copies=speculation_max_copies)
+    elif speculative and not getattr(core, "speculative", False):
+        # Legacy call sites pass speculative= alongside a pre-built core;
+        # the flag now lives on the core, so lift it there.
+        core.speculative = True
     sim = _Sim(tasks, n_workers, nodes, nppn, model,
                poll_interval, worker_death, failure_timeout, core=core,
                legacy_launch_penalty=legacy_launch_penalty,

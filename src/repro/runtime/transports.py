@@ -38,7 +38,8 @@ def worker_loop(worker_id: str, inbox, to_manager: Callable[[Message], None],
                 batch_fn: Optional[BatchFn] = None,
                 poll_interval: float = DEFAULT_POLL_INTERVAL_S,
                 heartbeat_interval: Optional[float] = None,
-                fail_after: Optional[int] = None) -> None:
+                fail_after: Optional[int] = None,
+                slow_factor: Optional[float] = None) -> None:
     """A worker process: poll for ASSIGN, run, report DONE, repeat.
 
     "While idle, the workers wait 0.3 seconds prior between checking if
@@ -46,6 +47,11 @@ def worker_loop(worker_id: str, inbox, to_manager: Callable[[Message], None],
     a multi-task ASSIGN executes as ONE call (e.g. a single vectorized
     pallas invocation over every task in the message) instead of per-task
     Python dispatch; ``batch_fn`` returns a dict of task_id -> result.
+
+    ``slow_factor`` > 1 makes this worker run that many times slower (it
+    sleeps ``(slow_factor - 1) x elapsed`` after each execution) — the
+    live mirror of the sim's ``worker_speed`` straggler injection, used
+    to exercise speculation and speed-fed sizing on real threads.
 
     Heartbeats run on a side thread so a worker keeps beating *through*
     long task executions — manager-side silence therefore means the
@@ -67,15 +73,17 @@ def worker_loop(worker_id: str, inbox, to_manager: Callable[[Message], None],
                          daemon=True).start()
     try:
         _worker_recv_loop(worker_id, inbox, to_manager, fn, batch_fn,
-                          poll_interval, fail_after)
+                          poll_interval, fail_after, slow_factor)
     finally:
         if stop_heartbeats is not None:
             stop_heartbeats.set()
 
 
 def _worker_recv_loop(worker_id, inbox, to_manager, fn, batch_fn,
-                      poll_interval, fail_after) -> None:
+                      poll_interval, fail_after,
+                      slow_factor=None) -> None:
     completed = 0
+    drag = (slow_factor - 1.0) if slow_factor and slow_factor > 1.0 else 0.0
     while True:
         try:
             msg = inbox.get(timeout=poll_interval)
@@ -98,6 +106,8 @@ def _worker_recv_loop(worker_id, inbox, to_manager, fn, batch_fn,
                     MessageKind.FAILED, sender=worker_id,
                     task_ids=tuple(t.task_id for t in tasks), error=repr(e)))
                 continue
+            if drag:
+                time.sleep(drag * (time.monotonic() - t0))
             for t in tasks:
                 done_ids.append(t.task_id)
                 res.append(out.get(t.task_id) if isinstance(out, dict)
@@ -107,6 +117,7 @@ def _worker_recv_loop(worker_id, inbox, to_manager, fn, batch_fn,
             for task in tasks:
                 if fail_after is not None and completed >= fail_after:
                     return  # simulate node death mid-batch: no DONE sent
+                t_task = time.monotonic()
                 try:
                     r = fn(task)
                 except Exception as e:  # report, don't die
@@ -114,6 +125,8 @@ def _worker_recv_loop(worker_id, inbox, to_manager, fn, batch_fn,
                         MessageKind.FAILED, sender=worker_id,
                         task_ids=(task.task_id,), error=repr(e)))
                     continue
+                if drag:
+                    time.sleep(drag * (time.monotonic() - t_task))
                 done_ids.append(task.task_id)
                 res.append(r)
                 completed += 1
@@ -165,7 +178,8 @@ class _LiveTransport(Transport):
                  batch_fn: Optional[BatchFn] = None,
                  poll_interval: float = DEFAULT_POLL_INTERVAL_S,
                  heartbeat_interval: Optional[float] = None,
-                 worker_fail_after: Optional[dict[str, int]] = None):
+                 worker_fail_after: Optional[dict[str, int]] = None,
+                 worker_slow_factor: Optional[dict[str, float]] = None):
         if n_workers < 1:
             raise ValueError("need at least one worker")
         self.worker_ids = [f"w{i}" for i in range(n_workers)]
@@ -174,17 +188,25 @@ class _LiveTransport(Transport):
         self._poll_interval = poll_interval
         self._heartbeat_interval = heartbeat_interval
         self._fail_after = worker_fail_after or {}
+        self._slow_factor = worker_slow_factor or {}
         self._stopped = False
 
     def _worker_kwargs(self, wid: str) -> dict:
         return dict(batch_fn=self._batch_fn,
                     poll_interval=self._poll_interval,
                     heartbeat_interval=self._heartbeat_interval,
-                    fail_after=self._fail_after.get(wid))
+                    fail_after=self._fail_after.get(wid),
+                    slow_factor=self._slow_factor.get(wid))
 
 
 class ThreadTransport(_LiveTransport):
-    """In-memory mailboxes: one inbox per worker thread + manager inbox."""
+    """In-memory mailboxes: one inbox per worker thread + manager inbox.
+
+    The only elastic live transport: :meth:`add_worker` spawns a fresh
+    worker thread mid-run and :meth:`retire_worker` shuts one down, which
+    is what the :class:`~repro.runtime.fleet.FleetController` drives
+    through the live ``drive()`` loop.
+    """
 
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
@@ -193,17 +215,35 @@ class ThreadTransport(_LiveTransport):
         self._mgr_inbox: "queue.Queue[Message]" = queue.Queue()
         self._threads: list[threading.Thread] = []
         self._by_id: dict[str, threading.Thread] = {}
+        self._next_id = len(self.worker_ids)
+
+    def _spawn(self, wid: str) -> None:
+        th = threading.Thread(
+            target=worker_loop, name=f"worker-{wid}", daemon=True,
+            args=(wid, self._inboxes[wid], self._mgr_inbox.put,
+                  self._fn),
+            kwargs=self._worker_kwargs(wid))
+        th.start()
+        self._threads.append(th)
+        self._by_id[wid] = th
 
     def start(self) -> None:
         for wid in self.worker_ids:
-            th = threading.Thread(
-                target=worker_loop, name=f"worker-{wid}", daemon=True,
-                args=(wid, self._inboxes[wid], self._mgr_inbox.put,
-                      self._fn),
-                kwargs=self._worker_kwargs(wid))
-            th.start()
-            self._threads.append(th)
-            self._by_id[wid] = th
+            self._spawn(wid)
+
+    def add_worker(self) -> str:
+        """Spawn one new worker thread mid-run; returns its id."""
+        wid = f"w{self._next_id}"
+        self._next_id += 1
+        self._inboxes[wid] = queue.Queue()
+        self.worker_ids.append(wid)
+        self._spawn(wid)
+        return wid
+
+    def retire_worker(self, worker_id: str) -> None:
+        """Shut one worker down (graceful: it drains its inbox up to the
+        SHUTDOWN message; the caller only retires idle workers)."""
+        self._inboxes[worker_id].put(Message(MessageKind.SHUTDOWN, "manager"))
 
     def send(self, worker_id: str, msg: Message) -> None:
         self._inboxes[worker_id].put(msg)

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 import zipfile
 
 from repro.core.messages import Task
@@ -71,16 +72,18 @@ class Archiver:
         os.makedirs(parent, exist_ok=True)
         zip_path = os.path.join(parent, parts[-1] + ".zip")
         # Crash safety (the paper's worker-death experiments reach this
-        # path): tmp names carry the writer's pid so a re-dispatched
-        # task never collides with a dead worker's leftovers, and any
+        # path): tmp names carry the writer's pid AND thread id so a
+        # re-dispatched task — or a speculative backup copy racing the
+        # primary on the threads backend, where both share a pid — never
+        # collides with another writer's in-progress bytes, and any
         # orphaned .tmp for this archive is removed up front.  If the
-        # presumed-dead worker is actually alive, deleting its tmp makes
+        # presumed-dead writer is actually alive, deleting its tmp makes
         # its final rename fail — the correct outcome, since its DONE
         # would be a duplicate of ours.
         self._clean_orphans(zip_path)
         files = 0
         bytes_in = 0
-        tmp = f"{zip_path}.tmp.{os.getpid()}"
+        tmp = f"{zip_path}.tmp.{os.getpid()}.{threading.get_ident()}"
         with zipfile.ZipFile(tmp, "w", self.compression) as zf:
             for name in sorted(os.listdir(src)):
                 p = os.path.join(src, name)

@@ -394,6 +394,8 @@ class TrackWorkflow:
                  screen_h_m: float = 926.0,
                  screen_v_m: float = 152.4,
                  screen_cell_deg: float = 0.25,
+                 speculative: bool = False,
+                 elastic: bool = False,
                  seed: int = 0,
                  tracer=None):
         if exec_backend not in ("threads", "processes"):
@@ -419,6 +421,12 @@ class TrackWorkflow:
         if policy not in POLICY_NAMES:
             raise ValueError(f"unknown scheduling policy {policy!r}; "
                              f"choose from {list(POLICY_NAMES)}")
+        if elastic:
+            if exec_backend != "threads":
+                raise ValueError("--elastic needs exec_backend='threads' "
+                                 "(processes cannot spawn workers mid-run)")
+            if n_manager_shards > 1:
+                raise ValueError("--elastic needs n_manager_shards=1")
         self.root = root
         self.raw_dir = os.path.join(root, "raw")
         self.organized_dir = os.path.join(root, "organized")
@@ -443,6 +451,8 @@ class TrackWorkflow:
         self.exec_backend = exec_backend
         self.tasks_per_message = tasks_per_message
         self.policy = policy
+        self.speculative = speculative
+        self.elastic = elastic
         self.checkpoint_interval_s = checkpoint_interval_s
         self.seed = seed
         #: Optional :class:`repro.obs.Tracer`, threaded through every
@@ -503,6 +513,8 @@ class TrackWorkflow:
                                if tasks_per_message is not None
                                else self.tasks_per_message),
             policy=self.policy,
+            speculative=self.speculative,
+            elastic=self.elastic,
             poll_interval=self.poll_interval,
             checkpoint=ck,
             on_checkpoint=save_mid_phase,
@@ -763,6 +775,8 @@ class TrackWorkflow:
             checkpoint=ck,
             on_checkpoint=save_mid_stream,
             checkpoint_interval_s=self.checkpoint_interval_s,
+            speculative=self.speculative,
+            elastic=self.elastic,
             tracer=self.tracer)
         if run_store:
             if store_tasks is not None:
@@ -972,6 +986,14 @@ def main() -> None:
     ap.add_argument("--screen-cell-deg", type=float, default=0.25,
                     help="spatial-hash cell width (degrees; must divide "
                          "360)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="re-issue the longest-running in-flight task to "
+                         "idle workers at the tail (backup copies; "
+                         "first DONE wins)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="threshold-driven fleet autoscaler: grow on "
+                         "queue backlog, retire idle workers "
+                         "(threads backend, single manager shard)")
     ap.add_argument("--serve", action="store_true",
                     help="continuous-ingest mode: tail a synthetic live "
                          "feed into the store via the service DAG and "
@@ -1034,6 +1056,8 @@ def main() -> None:
                        screen_h_m=args.screen_h_m,
                        screen_v_m=args.screen_v_m,
                        screen_cell_deg=args.screen_cell_deg,
+                       speculative=args.speculative,
+                       elastic=args.elastic,
                        tracer=tracer)
     if not os.path.isdir(wf.raw_dir):
         n = wf.generate_raw(n_files=args.files, scale=args.scale)

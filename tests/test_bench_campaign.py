@@ -173,11 +173,16 @@ def test_fault_profile_backend_mismatch_rejected():
 
 def test_fault_profile_axis_materializes():
     from repro.bench.scenarios import FAULT_PROFILES
-    deaths, speed, fail_after = FAULT_PROFILES["deaths_5pct"].materialize(
+    deaths, speed, fail_after, slow = \
+        FAULT_PROFILES["deaths_5pct"].materialize(100, seed=0)
+    assert len(deaths) == 5 and speed is None and fail_after is None \
+        and slow is None
+    d2, s2, f2, sl2 = FAULT_PROFILES["stragglers_10pct"].materialize(
         100, seed=0)
-    assert len(deaths) == 5 and speed is None and fail_after is None
-    d2, s2, f2 = FAULT_PROFILES["stragglers_10pct"].materialize(100, seed=0)
-    assert d2 is None and len(s2) == 100 and s2.count(0.25) == 10
+    assert d2 is None and len(s2) == 100 and s2.count(0.25) == 10 \
+        and sl2 is None
+    _, _, _, sl3 = FAULT_PROFILES["live_slow4"].materialize(100, seed=0)
+    assert sl3 == {"w0": 4.0}
     # Seeded: same straggler choice every time.
     assert s2 == FAULT_PROFILES["stragglers_10pct"].materialize(100, 0)[1]
 

@@ -6,8 +6,11 @@ every cell passes) keeps the CI gate honest locally: adaptive_chunk
 and sized_lpt >= 1.3x static makespan on the heavy-tail dataset under
 20 % worker deaths, shard_affinity cutting measured prefetch wait vs
 fifo_selfsched on the store-backed feed, the pipelined DAG >= 1.5x
-over the 3-phase barrier run, and 4 manager shards >= 1.3x
-single-manager dispatch at 1024 workers.  Also covers
+over the 3-phase barrier run, 4 manager shards >= 1.3x
+single-manager dispatch at 1024 workers, and the ISSUE-10 elastic
+cells (speculation + speed feedback + autoscaler >= 1.2x the best
+static-fleet policy under deaths20_stragglers10, plus a live threads
+autoscaler under a 4x-slow worker).  Also covers
 schema validation, deterministic re-runs of the sim cells, and the
 compare CLI's schema dispatch (makespan_seconds gated, schema mismatch
 exit-1).
@@ -36,6 +39,8 @@ def test_quick_tier_is_the_acceptance_cells(quick_doc):
                      "sched_heavy_tail_deaths20_sized_lpt",
                      "sched_store_affinity_prefetch_wait",
                      "sched_dag_stream_vs_barrier_heavy_tail",
+                     "sched_elastic_vs_static_panel",
+                     "sched_elastic_live_slow4_speculative",
                      "sched_msgwall_shards4_w256",
                      "sched_msgwall_shards4_w1024"}
 
@@ -52,6 +57,16 @@ def test_quick_tier_passes_and_validates(quick_doc):
     # Exactly-once under the death wave, for run AND implicit baseline.
     assert adaptive["metrics"]["tasks_completed"] == \
         adaptive["metrics"]["n_tasks"]
+    # ISSUE-10 acceptance: the elastic stack beats EVERY static-fleet
+    # policy under the combined 20%-death + 4x-slow-straggler profile.
+    panel = by_name["sched_elastic_vs_static_panel"]
+    assert panel["metrics"]["makespan_speedup_vs_best_static_x"] >= 1.2
+    assert panel["metrics"]["tasks_completed"] == panel["metrics"]["n_tasks"]
+    assert panel["metrics"]["workers_added"] >= 1
+    assert panel["metrics"]["speculated"] >= 1
+    live = by_name["sched_elastic_live_slow4_speculative"]
+    assert live["metrics"]["tasks_completed"] == live["metrics"]["n_tasks"]
+    assert live["metrics"]["n_results"] == live["metrics"]["n_tasks"]
     aff = by_name["sched_store_affinity_prefetch_wait"]
     assert aff["measured"]["prefetch_wait_reduction_x"] > 1.0
     assert aff["metrics"]["batch_locality"] == 1.0
@@ -156,4 +171,4 @@ def test_campaign_cli_flag_lists_scheduling_scenarios():
     names = [sc.name for sc in sched.scheduling_scenarios()]
     assert len(names) == len(set(names))
     assert sum(1 for sc in sched.scheduling_scenarios()
-               if sc.tier == "quick") == 6
+               if sc.tier == "quick") == 8

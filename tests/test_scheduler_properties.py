@@ -27,7 +27,8 @@ from hypothesis import given, settings
 
 from repro.core.messages import Task
 from repro.runtime import (
-    POLICY_NAMES, ManagerCheckpoint, SchedulerCore, run_job)
+    POLICY_NAMES, FleetController, ManagerCheckpoint, SchedulerCore,
+    WorkerSpeedModel, run_job)
 from repro.runtime.policies import locality_key
 
 BACKENDS = ("threads", "processes", "sim")
@@ -313,3 +314,247 @@ def test_adaptive_chunk_resume_keeps_chunk_schedule():
                           tasks_per_message=1, policy="adaptive_chunk",
                           n_workers=4, checkpoint=stripped)
     assert len(fresh.next_batch("w0")) == 6
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10: speculation as a protocol concern — every backend, every policy.
+# ---------------------------------------------------------------------------
+
+def test_speculative_exactly_once_and_primary_schedule_across_backends():
+    """Speculation ON: exactly-once still holds on threads, processes and
+    sim, and — because backup copies are accounted in ``extra_messages``
+    only — the primary dispatch log (hence ``dispatch_digest``) of every
+    order-based policy stays bit-identical to a non-speculative run."""
+    tasks = _tasks([(i * 37) % 9000 + 100 for i in range(24)])
+    all_ids = {t.task_id for t in tasks}
+    for policy in POLICY_NAMES:
+        base = run_job(tasks, _pickle_safe_fn, backend="sim", n_workers=3,
+                       tasks_per_message=2, policy=policy,
+                       poll_interval=0.002)
+        for backend in BACKENDS:
+            r = run_job(tasks, _pickle_safe_fn, backend=backend,
+                        n_workers=3, tasks_per_message=2, policy=policy,
+                        poll_interval=0.002, speculative=True)
+            assert r.completed_ids == all_ids, (policy, backend)
+            assert r.speculated >= 0, (policy, backend)
+            # messages_sent includes the extra sends; the batch log does
+            # not — speculation never perturbs the primary schedule.
+            assert r.messages_sent == len(r.batches) + r.extra_messages, \
+                (policy, backend)
+            if policy in ORDER_POLICIES:
+                assert r.batches == base.batches, (policy, backend)
+                assert r.dispatch_digest == base.dispatch_digest, \
+                    (policy, backend)
+
+
+def test_speculate_picks_oldest_assignment_and_caps_copies():
+    """The victim is the in-flight task with the oldest assignment
+    sequence (ties by id), never the asker's own work, and never past
+    ``speculation_max_copies`` outstanding copies."""
+    tasks = [Task(task_id=f"s{i}", size_bytes=100, timestamp=i)
+             for i in range(2)]
+    core = SchedulerCore(tasks, organization="chronological",
+                         tasks_per_message=1, policy="fifo_selfsched",
+                         n_workers=4, speculative=True)
+    assert [t.task_id for t in core.next_batch("w0")] == ["s0"]
+    assert [t.task_id for t in core.next_batch("w1")] == ["s1"]
+    assert not core.pending
+    # w0's oldest candidate is its OWN s0 — it must duplicate s1 instead.
+    assert [t.task_id for t in core.speculate("w0")] == ["s1"]
+    # s1 is now at the 2-copy cap; the next idle worker takes s0 (the
+    # oldest assignment overall).
+    assert [t.task_id for t in core.speculate("w2")] == ["s0"]
+    assert core.speculate("w3") == ()      # both at the 2-copy cap
+    assert core.speculated == 2 and core.extra_messages == 2
+    assert core.messages_sent == 2         # two primary ASSIGNs, ever
+    assert len(core.batches) == 2
+
+
+def test_speculative_duplicate_done_ignored_bitwise():
+    """First DONE wins; the loser's DONE is a complete no-op — the
+    checkpoint serialization is byte-identical before and after it."""
+    tasks = _tasks([500] * 8)
+    core = SchedulerCore(tasks, tasks_per_message=4,
+                         policy="fifo_selfsched", n_workers=3,
+                         speculative=True)
+    inflight = {"w0": [], "w1": []}
+    turn = 0
+    while core.pending:                    # drain the queue onto w0/w1
+        w = f"w{turn % 2}"
+        turn += 1
+        inflight[w].extend(t.task_id for t in core.next_batch(w))
+    ids0, ids1 = inflight["w0"], inflight["w1"]
+    assert ids0 and ids1
+    dup = core.speculate("w2")             # backup copy of w0's oldest
+    assert len(dup) == 1 and dup[0].task_id == ids0[0]
+    victim = dup[0].task_id
+    assert core.on_done("w2", [victim]) == [victim]   # backup wins
+    snap = core.checkpoint().dumps()
+    assert core.on_done("w0", [victim]) == []         # loser: no-op
+    assert core.checkpoint().dumps() == snap          # bitwise
+    core.record_waste("w0", 1.5)                      # accounting only
+    assert core.wasted_seconds == 1.5
+    assert core.checkpoint().dumps() == snap
+    # Drain: every remaining completion is fresh exactly once.
+    fresh = [victim]
+    for w, ids in (("w0", ids0), ("w1", ids1)):
+        fresh += core.on_done(w, ids)
+    assert sorted(fresh) == sorted(t.task_id for t in tasks)
+
+
+def test_losing_copy_failure_never_poisons_the_ledger():
+    """First outcome wins for FAILED too: a speculative duplicate of a
+    non-idempotent fn often crashes (its input was consumed by the
+    winner).  A FAILED after the winner's DONE is a no-op; a FAILED
+    while another live copy still runs is not recorded (the survivor
+    decides); and a late DONE supersedes a lost copy's failure."""
+    tasks = [Task(task_id=f"f{i}", size_bytes=10, timestamp=i)
+             for i in range(2)]
+    core = SchedulerCore(tasks, organization="chronological",
+                         tasks_per_message=1, policy="fifo_selfsched",
+                         n_workers=3, speculative=True)
+    assert [t.task_id for t in core.next_batch("w0")] == ["f0"]
+    assert [t.task_id for t in core.next_batch("w1")] == ["f1"]
+    assert [t.task_id for t in core.speculate("w2")] == ["f0"]
+    # Backup crashes while the primary still runs: nothing recorded.
+    core.on_failed("w2", ["f0"], "boom")
+    assert "f0" not in core.failures and not core.done
+    # Primary completes; a LATE failure from a re-sent copy is a no-op.
+    assert core.on_done("w0", ["f0"]) == ["f0"]
+    core.on_failed("w0", ["f0"], "late boom")
+    assert "f0" not in core.failures
+    # Reverse race on f1: the last outstanding copy's failure DOES
+    # record, and a later DONE from the other (already-failed-then-
+    # resent) copy supersedes it.
+    assert [t.task_id for t in core.speculate("w2")] == ["f1"]
+    core.on_failed("w1", ["f1"], "primary died")   # w2's copy still live
+    assert "f1" not in core.failures
+    core.on_failed("w2", ["f1"], "backup died")    # last copy: recorded
+    assert core.failures["f1"] == "backup died"
+    assert core.on_done("w1", ["f1"]) == ["f1"]    # success supersedes
+    assert "f1" not in core.failures
+    assert core.done and core.completed == {"f0", "f1"}
+
+
+@given(job_shapes(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_speculative_checkpoint_cycle_loses_and_duplicates_nothing(
+        shape, opseed):
+    """The checkpoint-losslessness invariant with speculation live:
+    backup copies in flight at save time never double-complete after the
+    restore, and nothing is lost."""
+    sizes, k, org, seed = shape
+    tasks = _tasks(sizes)
+    for policy in POLICY_NAMES:
+        core = SchedulerCore(tasks, organization=org, tasks_per_message=k,
+                             organize_seed=seed, policy=policy,
+                             n_workers=3, speculative=True)
+        rng = random.Random(opseed)
+        fresh_before = []
+        inflight = {w: [] for w in ("w0", "w1", "w2")}
+        for _ in range(rng.randint(0, 2 * len(tasks))):
+            w = rng.choice(("w0", "w1", "w2"))
+            batch = core.next_batch(w) or core.speculate(w)
+            inflight[w].extend(t.task_id for t in batch)
+            if inflight[w] and rng.random() < 0.5:
+                tid = inflight[w].pop(rng.randrange(len(inflight[w])))
+                fresh_before.extend(core.on_done(w, [tid]))
+        ck = ManagerCheckpoint.loads(core.checkpoint().dumps())
+        restored = SchedulerCore(tasks, organization=org,
+                                 tasks_per_message=k, organize_seed=seed,
+                                 policy=policy, n_workers=3,
+                                 speculative=True, checkpoint=ck)
+        fresh_after = []
+        while not restored.done:
+            batch = restored.next_batch("w1")
+            assert batch, f"{policy}: restored speculative core stuck"
+            fresh_after.extend(
+                restored.on_done("w1", [t.task_id for t in batch]))
+        all_ids = {t.task_id for t in tasks}
+        assert restored.completed == all_ids, policy
+        assert sorted(fresh_before + fresh_after) == sorted(all_ids), policy
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10: kill/resume restores the speed model and fleet controller.
+# ---------------------------------------------------------------------------
+
+@given(job_shapes(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_kill_resume_restores_speed_model_and_fleet_state(shape, opseed):
+    """A mid-run kill/resume round-trips ``ManagerCheckpoint.runtime_state``:
+    the restored WorkerSpeedModel gives bit-identical relative speeds and
+    the restored FleetController continues its counters and cooldown
+    clock instead of resetting them."""
+    sizes, k, org, seed = shape
+    tasks = _tasks(sizes)
+    speed = WorkerSpeedModel()
+    fleet = FleetController(min_workers=1, max_workers=8, interval_s=1.0,
+                            cooldown_s=2.0)
+    core = SchedulerCore(tasks, organization=org, tasks_per_message=k,
+                         organize_seed=seed, policy="sized_lpt",
+                         n_workers=3, speculative=True,
+                         speed_model=speed, fleet=fleet)
+    rng = random.Random(opseed)
+    now = 0.0
+    for _ in range(rng.randint(1, 12)):
+        w = f"w{rng.randint(0, 2)}"
+        batch = core.next_batch(w)
+        if batch:
+            ids = [t.task_id for t in batch]
+            core.observe_speed(w, ids, rng.uniform(0.1, 5.0))
+            core.on_done(w, ids)
+        now += 1.0
+        delta = fleet.decide(now, n_workers=3,
+                             queue_depth=len(core.pending),
+                             busy_frac=rng.random())
+        if delta:
+            fleet.applied(delta)
+
+    ck = ManagerCheckpoint.loads(core.checkpoint().dumps())
+    assert ck.runtime_state == core._runtime_state()
+
+    speed2 = WorkerSpeedModel()
+    fleet2 = FleetController(min_workers=1, max_workers=8, interval_s=1.0,
+                             cooldown_s=2.0)
+    restored = SchedulerCore(tasks, organization=org, tasks_per_message=k,
+                             organize_seed=seed, policy="sized_lpt",
+                             n_workers=3, speculative=True,
+                             speed_model=speed2, fleet=fleet2,
+                             checkpoint=ck)
+    assert speed2.state() == speed.state()
+    assert fleet2.state() == fleet.state()
+    for w in ("w0", "w1", "w2"):
+        assert speed2.relative_speed(w) == speed.relative_speed(w)
+    # Continuing the run keeps exactly-once across the restart.
+    fresh = []
+    while not restored.done:
+        batch = restored.next_batch("w0")
+        assert batch, "restored elastic core stuck"
+        fresh.extend(restored.on_done("w0", [t.task_id for t in batch]))
+    assert restored.completed == {t.task_id for t in tasks}
+    assert not (set(fresh) & ck.completed)
+
+
+def test_elastic_sim_run_is_deterministic_per_seed():
+    """The full elastic stack (speculation + speed feedback + autoscaler)
+    on the sim backend is a deterministic machine: two runs of the same
+    seed agree bitwise on the dispatch digest and on every fleet/
+    speculation counter, even under deaths and stragglers."""
+    tasks = _tasks([(i * 61) % 8000 + 200 for i in range(60)])
+    runs = []
+    for _ in range(2):
+        r = run_job(tasks, None, backend="sim", n_workers=6,
+                    policy="adaptive_chunk", tasks_per_message=1,
+                    organize_seed=7, speculative=True, speed_feedback=True,
+                    elastic=True, worker_death={0: 3.0},
+                    worker_speed=[1.0, 1.0, 0.25, 1.0, 1.0, 1.0])
+        runs.append(r)
+    a, b = runs
+    assert a.completed_ids == {t.task_id for t in tasks}
+    assert a.dispatch_digest == b.dispatch_digest
+    assert a.batches == b.batches
+    assert (a.speculated, a.extra_messages, a.wasted_seconds,
+            a.workers_added, a.workers_retired) \
+        == (b.speculated, b.extra_messages, b.wasted_seconds,
+            b.workers_added, b.workers_retired)
